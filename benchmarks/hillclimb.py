@@ -1,0 +1,86 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> diff.
+
+Each invocation re-runs one dry-run cell with RunConfig overrides and prints
+the roofline-term deltas vs the recorded baseline JSON.  Results land in
+benchmarks/results/hillclimb_<cell>__<tag>.json so EXPERIMENTS.md §Perf can
+cite exact numbers.
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb \
+      --arch falcon-mamba-7b --shape prefill_32k --tag bf16-ssm \
+      --set ssm_dtype=bf16 attn_dtype=bf16
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs.base import SHAPES, RunConfig
+
+
+def parse_overrides(pairs):
+    out = {}
+    for pair in pairs:
+        key, val = pair.split("=", 1)
+        field_types = {f.name: f.type for f in
+                       dataclasses.fields(RunConfig)}
+        t = field_types[key]
+        if t == "int" or t is int:
+            val = int(val)
+        elif t == "bool" or t is bool:
+            val = val.lower() in ("1", "true", "yes")
+        elif t == "float" or t is float:
+            val = float(val)
+        out[key] = val
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--out", default="benchmarks/results")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as D
+    overrides = parse_overrides(args.set)
+    cfgmod = D.registry.get_config(args.arch)
+    rc = dataclasses.replace(D.default_rc(cfgmod, SHAPES[args.shape]),
+                             **overrides)
+    cell = D.run_cell(args.arch, args.shape, multi_pod=False, rc=rc,
+                      verbose=False)
+    base_path = os.path.join(args.out,
+                             f"dryrun_{args.arch}__{args.shape}__16x16.json")
+    with open(base_path) as f:
+        base = json.load(f)
+    out_path = os.path.join(
+        args.out, f"hillclimb_{args.arch}__{args.shape}__{args.tag}.json")
+    cell["overrides"] = overrides
+    cell["tag"] = args.tag
+    with open(out_path, "w") as f:
+        json.dump(cell, f, indent=2)
+
+    print(f"\n=== {args.arch} x {args.shape} [{args.tag}] "
+          f"{overrides} ===")
+    if cell["status"] != "ok":
+        print("FAILED:", cell.get("error"))
+        return 1
+    for term in ("compute_s", "memory_s", "collective_s"):
+        b = base["roofline_terms_s"][term]
+        n = cell["roofline_terms_s"][term]
+        delta = (n - b) / b * 100 if b else float("nan")
+        print(f"{term:14s} {b:10.4f} -> {n:10.4f}  ({delta:+.1f}%)")
+    bb, nb = base["step_time_bound_s"], cell["step_time_bound_s"]
+    print(f"{'bound':14s} {bb:10.4f} -> {nb:10.4f}  "
+          f"({(nb-bb)/bb*100:+.1f}%)   dominant: {base['dominant']} -> "
+          f"{cell['dominant']}")
+    print(f"{'useful_ratio':14s} {base['useful_ratio']:.3f} -> "
+          f"{cell['useful_ratio']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

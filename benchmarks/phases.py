@@ -1,0 +1,123 @@
+"""Phase-level timing of CPML vs the MPC baseline (paper Tables 1-6 axes).
+
+Phases (matching the paper's breakdown):
+  encode — dataset + per-round weight secret sharing
+  comm   — master<->worker + worker<->worker movement: CPML = result gather
+           + decode matmul; MPC = per-multiplication reshare (all-to-all) +
+           reconstruction
+  comp   — the workers' polynomial evaluations
+
+The default scale is reduced (CPU container); --full uses the paper's
+(m, d) = (12396, 1568).  Structure, not absolute seconds, is the claim
+being reproduced: CPML's encode ~1/K dataset per worker, zero worker<->worker
+rounds; MPC's full replication + per-mul communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field, lagrange, mpc_baseline as mpc, protocol, \
+    quantize, sigmoid_poly
+from repro.data import synthetic
+
+
+def _t(fn, *a):
+    t0 = time.perf_counter()
+    out = fn(*a)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0, out
+
+
+def cpml_phase_times(cfg: protocol.CPMLConfig, x, y, iters: int = 5) -> dict:
+    key = jax.random.PRNGKey(0)
+    cbar = jnp.asarray(sigmoid_poly.quantized_coeffs(
+        cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p), jnp.int32)
+    t_enc_data, (shares, _) = _t(
+        functools.partial(protocol.encode_dataset, cfg, key), x)
+    w = jnp.zeros(x.shape[1])
+    enc_w = jax.jit(lambda k, w: protocol.encode_weights(cfg, k, w))
+    workers = jax.jit(lambda xs, ws: protocol.all_worker_results(
+        cfg, cbar, xs, ws))
+    dmat = protocol.make_decode_matrix(cfg, np.arange(cfg.threshold))
+    dec = jax.jit(lambda r: protocol.decode_gradient(cfg, r, dmat))
+    t_enc = t_comp = t_comm = 0.0
+    for i in range(iters):
+        k = jax.random.fold_in(key, i)
+        dt, w_shares = _t(enc_w, k, w)
+        t_enc += dt
+        dt, results = _t(workers, shares, w_shares)
+        t_comp += dt
+        dt, _ = _t(dec, results[: cfg.threshold])
+        t_comm += dt
+    return {"encode": t_enc_data + t_enc, "comm": t_comm, "comp": t_comp,
+            "total": t_enc_data + t_enc + t_comm + t_comp}
+
+
+def mpc_phase_times(cfg: mpc.MPCConfig, x, y, iters: int = 5) -> dict:
+    key = jax.random.PRNGKey(0)
+    xq = quantize.quantize_data(x, cfg.lx, cfg.p)
+    cbar = jnp.asarray(sigmoid_poly.quantized_coeffs(
+        cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p), jnp.int32)
+    t_enc_data, x_shares = _t(jax.jit(
+        lambda k, v: mpc.share(cfg, k, v)), key, xq)
+    w = jnp.zeros(x.shape[1])
+
+    @jax.jit
+    def enc_w(k, w):
+        wbar = quantize.quantize_weights(k, w, cfg.lw, cfg.r, cfg.p)
+        return mpc.share(cfg, k, wbar)
+
+    @jax.jit
+    def local_mul1(xs, ws):           # Z = X̄ w̄ per worker (degree 2T)
+        return jax.vmap(lambda a, b: field.matmul(a, b, cfg.p))(xs, ws)
+
+    @jax.jit
+    def reshare(k, z):                # the communication round
+        return mpc.degree_reduce(cfg, k, z)
+
+    @jax.jit
+    def local_mul2(xs, z):            # s then X̄ᵀ s per worker
+        prod = z[..., 0]
+        s = field.addmod(jnp.broadcast_to(cbar[0], prod.shape),
+                         field.mulmod(jnp.broadcast_to(cbar[1], prod.shape),
+                                      prod, cfg.p), cfg.p)
+        return jax.vmap(lambda a, b: field.matmul(a.T, b[:, None], cfg.p)
+                        [:, 0])(xs, s)
+
+    @jax.jit
+    def reconstruct(g):
+        return mpc.reconstruct(cfg, g, 2 * cfg.T)
+
+    t_enc = t_comp = t_comm = 0.0
+    for i in range(iters):
+        k = jax.random.fold_in(key, i)
+        dt, w_shares = _t(enc_w, k, w)
+        t_enc += dt
+        dt, z = _t(local_mul1, x_shares, w_shares)
+        t_comp += dt
+        dt, z = _t(reshare, k, z)
+        t_comm += dt
+        dt, g = _t(local_mul2, x_shares, z)
+        t_comp += dt
+        dt, _ = _t(reconstruct, g)
+        t_comm += dt
+    return {"encode": t_enc_data + t_enc, "comm": t_comm, "comp": t_comp,
+            "total": t_enc_data + t_enc + t_comm + t_comp}
+
+
+def case1(N: int, r: int = 1) -> protocol.CPMLConfig:
+    """Paper Case 1: maximum parallelization, K = (N-1)/(2r+1), T=1."""
+    K = max(1, (N - 1) // (2 * r + 1))
+    return protocol.CPMLConfig(N=N, K=K, T=1, r=r)
+
+
+def case2(N: int, r: int = 1) -> protocol.CPMLConfig:
+    """Paper Case 2: equal parallelization and privacy, K = T = (N+2)/6."""
+    K = T = max(1, (N + 2) // (2 * (2 * r + 1)))
+    return protocol.CPMLConfig(N=N, K=K, T=T, r=r)

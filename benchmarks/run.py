@@ -1,0 +1,144 @@
+"""Benchmark driver: one section per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Default scale is CPU-sized; set
+--full for the paper's (m, d) = (12396, 1568) (slow on 1 core).
+
+Sections:
+  table1_*   run-time breakdown, MPC vs CPML case1/case2 (paper Tables 1-6)
+  fig2_*     total training-time scaling vs N + speedup   (paper Figs 2/5)
+  fig3_*     accuracy CPML vs conventional logreg         (paper Fig 3)
+  fig4_*     convergence (cross-entropy)                  (paper Fig 4)
+  kernel_*   Pallas kernels vs jnp reference path
+  roofline_* per-cell dry-run roofline terms (reads benchmarks/results/)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import phases
+from benchmarks.common import emit, time_fn
+from repro.core import field, mpc_baseline as mpc, protocol, sigmoid_poly
+from repro.data import synthetic
+
+
+def bench_tables_and_fig2(m: int, d: int, Ns: list[int], iters: int):
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(42), m=m, d=d)
+    for N in Ns:
+        rows = {}
+        for name, times in [
+            ("mpc", phases.mpc_phase_times(
+                mpc.MPCConfig(N=N, T=max(1, (N - 1) // 2)), x, y, iters)),
+            ("cpml_case1", phases.cpml_phase_times(phases.case1(N), x, y,
+                                                   iters)),
+            ("cpml_case2", phases.cpml_phase_times(phases.case2(N), x, y,
+                                                   iters)),
+        ]:
+            rows[name] = times
+            for phase in ("encode", "comm", "comp", "total"):
+                emit(f"table1_N{N}_{name}_{phase}", times[phase] * 1e6,
+                     f"m={m};d={d};iters={iters}")
+        sp1 = rows["mpc"]["total"] / rows["cpml_case1"]["total"]
+        sp2 = rows["mpc"]["total"] / rows["cpml_case2"]["total"]
+        emit(f"fig2_N{N}_speedup_case1", rows["cpml_case1"]["total"] * 1e6,
+             f"speedup_vs_mpc={sp1:.2f}x")
+        emit(f"fig2_N{N}_speedup_case2", rows["cpml_case2"]["total"] * 1e6,
+             f"speedup_vs_mpc={sp2:.2f}x")
+
+
+def bench_fig3_fig4(m: int, d: int, iters: int = 25):
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=m, d=d, margin=12.0)
+    cfg = phases.case2(8)
+    import time
+    t0 = time.perf_counter()
+    w, hist = protocol.train(cfg, jax.random.PRNGKey(7), x, y, iters=iters,
+                             eval_every=5)
+    dt = time.perf_counter() - t0
+    state = protocol.setup(cfg, jax.random.PRNGKey(7), x, y)
+    eta = protocol.lipschitz_eta(state.xq_real)
+    w2 = jnp.zeros(x.shape[1])
+    xq = state.xq_real[:m]
+    losses_ref = []
+    for t in range(iters):
+        w2 = w2 - eta * (xq.T @ (protocol.sigmoid(xq @ w2) - y)) / m
+        if (t + 1) % 5 == 0:
+            l, a = protocol.loss_and_accuracy(w2, xq, y)
+            losses_ref.append((t + 1, float(l), float(a)))
+    for h, (it, lr_, ar_) in zip(hist, losses_ref):
+        emit(f"fig4_iter{h['iter']}", dt / iters * 1e6,
+             f"loss_cpml={h['loss']:.4f};loss_conv={lr_:.4f}")
+    emit("fig3_accuracy", dt / iters * 1e6,
+         f"acc_cpml={hist[-1]['acc']:.4f};acc_conv={losses_ref[-1][2]:.4f}")
+
+
+def bench_kernels():
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    for (M, K, N) in [(256, 512, 64), (512, 1024, 2)]:
+        a = jnp.asarray(rng.integers(0, field.P, (M, K)), jnp.int32)
+        b = jnp.asarray(rng.integers(0, field.P, (K, N)), jnp.int32)
+        us_ref = time_fn(lambda: ops.modmatmul(a, b, use_pallas=False))
+        emit(f"kernel_modmatmul_ref_{M}x{K}x{N}", us_ref,
+             "jnp-limb path (XLA CPU)")
+        us_pal = time_fn(lambda: ops.modmatmul(a, b, use_pallas=True))
+        emit(f"kernel_modmatmul_pallas_{M}x{K}x{N}", us_pal,
+             "interpret=True (correctness mode; TPU target)")
+    x = jnp.asarray(rng.integers(0, field.P, (512, 256)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, field.P, (256, 1)), jnp.int32)
+    cbar = jnp.asarray(sigmoid_poly.quantized_coeffs(1, 2, 4, 6), jnp.int32)
+    us = time_fn(lambda: ops.coded_grad(x, w, cbar, use_pallas=False))
+    emit("kernel_coded_grad_ref_512x256", us, "unfused jnp path")
+    us = time_fn(lambda: ops.coded_grad(x, w, cbar, use_pallas=True))
+    emit("kernel_coded_grad_pallas_512x256", us,
+         "fused single-pass (interpret)")
+
+
+def bench_roofline(results_dir: str):
+    cells = sorted(glob.glob(os.path.join(results_dir, "dryrun_*.json")))
+    if not cells:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for path in cells:
+        with open(path) as f:
+            c = json.load(f)
+        tag = f"{c['arch']}__{c['shape']}__{c['mesh']}"
+        if c["status"] != "ok":
+            emit(f"roofline_{tag}", 0.0, c["status"])
+            continue
+        t = c["roofline_terms_s"]
+        emit(f"roofline_{tag}", c["step_time_bound_s"] * 1e6,
+             f"dominant={c['dominant']};compute={t['compute_s']:.4f}"
+             f";memory={t['memory_s']:.4f};collective={t['collective_s']:.4f}"
+             f";useful={c.get('useful_ratio') or 0:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (m,d)=(12396,1568); slow on CPU")
+    ap.add_argument("--sections", default="tables,figs,kernels,roofline")
+    ap.add_argument("--results-dir", default="benchmarks/results_final")
+    args = ap.parse_args()
+    m, d = (12396, 1568) if args.full else (1200, 128)
+    Ns = [10, 25, 40] if args.full else [10, 25]
+    iters = 5 if args.full else 3
+    sections = set(args.sections.split(","))
+    print("name,us_per_call,derived")
+    if "tables" in sections:
+        bench_tables_and_fig2(m, d, Ns, iters)
+    if "figs" in sections:
+        bench_fig3_fig4(m if args.full else 800, d if args.full else 64)
+    if "kernels" in sections:
+        bench_kernels()
+    if "roofline" in sections:
+        bench_roofline(args.results_dir)
+
+
+if __name__ == "__main__":
+    main()

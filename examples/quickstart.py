@@ -1,0 +1,46 @@
+"""Quickstart: privacy-preserving logistic regression with CodedPrivateML.
+
+Reproduces the paper's core loop end-to-end on a synthetic MNIST-like task:
+quantize -> Lagrange-encode (T-private) -> coded polynomial gradient on N
+workers -> straggler-tolerant decode -> model update (paper Algorithm 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol
+from repro.data import synthetic
+
+
+def main():
+    # the paper's Case 2 at N=8: K = T = (N+2)/6 -> (2, 1); threshold 7
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)
+    print(f"CodedPrivateML: N={cfg.N} workers, K={cfg.K} parallel, "
+          f"T={cfg.T}-private, threshold={cfg.threshold} "
+          f"(tolerates {cfg.N - cfg.threshold} stragglers)")
+
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=2000, d=256,
+                                margin=12.0)
+    t0 = time.time()
+    w, hist = protocol.train(cfg, jax.random.PRNGKey(7), x, y, iters=25,
+                             eval_every=5)
+    for h in hist:
+        print(f"  iter {h['iter']:3d}  loss {h['loss']:.4f}  "
+              f"acc {h['acc']:.2%}")
+    print(f"trained 25 private iterations in {time.time()-t0:.1f}s")
+
+    # straggler demo: drop one worker — identical model (erasure decode)
+    state = protocol.setup(cfg, jax.random.PRNGKey(0), x, y)
+    full = protocol.step(cfg, jax.random.PRNGKey(1), state, 0.5)
+    drop = protocol.step(cfg, jax.random.PRNGKey(1), state, 0.5,
+                         survivors=np.array([1, 2, 3, 4, 5, 6, 7]))
+    same = bool(jnp.allclose(full.w, drop.w, atol=1e-6))
+    print(f"worker-0 failure -> identical update from 7 survivors: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the full framework path — config -> mesh -> sharded init -> data
+pipeline -> jit train step (remat, chunked loss, blockwise attention) ->
+AdamW -> checkpointing.  The config is a 100M-scale member of the
+tinyllama family (same code path as the 123B dry-run cells).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+
+from repro.configs import registry
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M-param llama-family config (d=512, 8 layers, 32k vocab)
+    base = registry.get_config("tinyllama-1.1b")
+    cfg100m = dataclasses.replace(
+        base, name="llama-100m", num_layers=8, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=2048,
+        block_pattern=(("dense", 8),))
+    print(f"{cfg100m.name}: {cfg100m.param_count()/1e6:.0f}M params")
+
+    rc = train.main(["--steps", str(args.steps),
+                     "--batch", str(args.batch), "--seq", str(args.seq),
+                     "--checkpoint-every", "100",
+                     "--checkpoint-dir", "/tmp/repro_lm100m"],
+                    config_override=cfg100m)
+    raise SystemExit(rc)
+
+
+if __name__ == "__main__":
+    main()

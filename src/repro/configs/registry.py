@@ -1,0 +1,148 @@
+"""--arch <id> resolution + per-cell input_specs (ShapeDtypeStruct only).
+
+`input_specs` builds the exact abstract inputs each (arch x shape) cell
+lowers with: token ids for LM archs, precomputed patch/frame embeddings for
+the stubbed [vlm]/[audio] frontends, decode caches for decode cells.
+No device memory is ever allocated here.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ModelConfig, RunConfig, ShapeConfig
+
+ARCHS: dict[str, str] = {
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1p1b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (one step, no NaNs)."""
+    import dataclasses
+    scale = {}
+    d = 64
+    heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    kv = min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0
+    pattern = tuple((kind, min(count, 2)) for kind, count in
+                    cfg.block_pattern[:2])
+    layers = sum(c for _, c in pattern)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=d,
+        num_heads=heads, num_kv_heads=kv,
+        head_dim=(d // heads if heads else 0),
+        d_ff=(128 if cfg.d_ff else 0),
+        vocab_size=256,
+        num_experts=min(cfg.num_experts, 4),
+        moe_d_ff=(64 if cfg.num_experts else 0),
+        dense_residual_d_ff=(64 if cfg.dense_residual_d_ff else 0),
+        d_inner=(128 if cfg.ssm_state else 0),
+        dt_rank=(8 if cfg.ssm_state else 0),
+        sliding_window=(32 if cfg.sliding_window else None),
+        num_encoder_layers=min(cfg.num_encoder_layers, 2),
+        encoder_seq_len=16,
+        block_pattern=pattern,
+    )
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; reason when skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k dense decode is "
+                       "O(S^2)-infeasible; skipped per brief (DESIGN.md §4)")
+    return True, ""
+
+
+def _tok(mesh, shape, batch_axes):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b = shape[0]
+    spec = P(batch_axes if b % _size(mesh, batch_axes) == 0 else None,
+             *([None] * (len(shape) - 1)))
+    return NamedSharding(mesh, spec)
+
+
+def _size(mesh, axes):
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                rc: RunConfig | None = None) -> dict:
+    """Abstract inputs for one cell.  Decode cells include the cache tree."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import model as M
+    from repro.parallel.rules import spec_for
+
+    rc = rc or RunConfig()
+    B, S = shape.global_batch, shape.seq_len
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bax = batch_axes if (len(batch_axes) and B % _size(mesh, batch_axes) == 0) \
+        else ()
+    bspec = bax if len(bax) > 1 else (bax[0] if bax else None)
+
+    def sd(shape_, dtype, spec):
+        return jax.ShapeDtypeStruct(shape_, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    stub_embeds = cfg.frontend in ("vision", "audio")
+    specs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if stub_embeds and not cfg.is_encoder_decoder:
+            specs["embeds"] = sd((B, S, cfg.d_model), jnp.bfloat16,
+                                 P(bspec, None, None))
+        else:
+            specs["tokens"] = sd((B, S), jnp.int32, P(bspec, None))
+        if cfg.is_encoder_decoder:
+            specs["enc_embeds"] = sd((B, cfg.encoder_seq_len, cfg.d_model),
+                                     jnp.bfloat16, P(bspec, None, None))
+        if shape.kind == "train":
+            specs["labels"] = sd((B, S), jnp.int32, P(bspec, None))
+        return specs
+
+    # decode: one new token + cache of length S
+    specs["tokens"] = sd((B, 1), jnp.int32, P(bspec, None))
+    if cfg.is_encoder_decoder:
+        specs["enc_out"] = sd((B, cfg.encoder_seq_len, cfg.d_model),
+                              jnp.bfloat16, P(bspec, None, None))
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, rc, B, S))
+    cache = {}
+    for key, seg in cache_shapes.items():
+        if key == "index":
+            cache[key] = jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P()))
+            continue
+        seg_specs = {}
+        for name, leaf in seg.items():
+            logical = {
+                "k": (None, "batch", "kv_seq", "kv_heads", None),
+                "v": (None, "batch", "kv_seq", "kv_heads", None),
+                "conv": (None, "batch", None, "inner"),
+                "ssm": (None, "batch", "inner", None),
+            }[name]
+            spec = spec_for(mesh, leaf.shape, logical)
+            seg_specs[name] = jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec))
+        cache[key] = seg_specs
+    specs["cache"] = cache
+    return specs

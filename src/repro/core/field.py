@@ -1,0 +1,214 @@
+"""Finite-field (F_p) arithmetic primitives, int32/MXU-safe.
+
+The paper computes over F_p with p = 15485863 (largest 24-bit prime) using
+int64 CPU ops.  TPUs have no fast int64, so every primitive here is built to
+stay inside int32 (and, on the matmul path, inside exact bf16/fp32 MXU
+arithmetic — see kernels/modmatmul.py).  All functions are shape-polymorphic
+jnp ops usable under jit/shard_map.
+
+Conventions:
+  * field elements are int32 in [0, p)
+  * products of two elements can reach 2*bits(p) — NEVER form a*b directly
+    in int32; use mulmod() / matmul() (8-bit limb split) instead.
+  * any p < 2^30 is supported (addmod needs 2p < 2^31); the paper's 24-bit
+    prime is the faithful default, P30 is our extended-precision option that
+    the limb decomposition supports at identical kernel structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The paper's modulus: largest prime below 2^24 (§5, "CodedPrivateML
+# parameters").
+P = 15485863
+# Extended-precision prime (beyond-paper): 2^30 - 35.  Still int32-safe
+# (2p < 2^31) and 8-bit-limb exact on the MXU; gives ~6 extra headroom bits
+# against wrap-around, which buys larger lc/lx/lw (see sigmoid_poly.py).
+P30 = 1073741789
+
+LIMB_BITS = 8
+LIMB_MASK = (1 << LIMB_BITS) - 1
+
+
+def n_limbs(p: int) -> int:
+    """8-bit limbs needed to cover elements of F_p (3 for P, 4 for P30)."""
+    return -(-p.bit_length() // LIMB_BITS)
+
+
+def fmod(x: jax.Array, p: int = P) -> jax.Array:
+    """Reduce an int32 array (possibly negative) into [0, p)."""
+    r = jnp.remainder(x, jnp.int32(p))
+    return r.astype(jnp.int32)
+
+
+def addmod(a: jax.Array, b: jax.Array, p: int = P) -> jax.Array:
+    """(a + b) mod p.  a,b in [0,p): sum < 2p < 2^31, int32-safe."""
+    s = a + b
+    return jnp.where(s >= p, s - p, s).astype(jnp.int32)
+
+
+def submod(a: jax.Array, b: jax.Array, p: int = P) -> jax.Array:
+    d = a - b
+    return jnp.where(d < 0, d + p, d).astype(jnp.int32)
+
+
+def negmod(a: jax.Array, p: int = P) -> jax.Array:
+    return jnp.where(a == 0, 0, p - a).astype(jnp.int32)
+
+
+def limbs(x: jax.Array, p: int = P) -> list[jax.Array]:
+    """Split int32 field elements into 8-bit limbs (low first)."""
+    return [((x >> (LIMB_BITS * i)) & LIMB_MASK).astype(jnp.int32)
+            for i in range(n_limbs(p))]
+
+
+def double_mod(x: jax.Array, times: int, p: int) -> jax.Array:
+    """x * 2^times mod p via repeated doubling; x stays < 2p < 2^31."""
+    for _ in range(times):
+        x = x + x
+        x = jnp.where(x >= p, x - p, x)
+    return x
+
+
+def mulmod(a: jax.Array, b: jax.Array, p: int = P) -> jax.Array:
+    """Element-wise (a * b) mod p without ever exceeding int32.
+
+    Schoolbook limb x limb products (< 2^16, exact) recombined with
+    shift-by-doubling mod p.
+    """
+    a_l = limbs(a, p)
+    b_l = limbs(b, p)
+    nl = len(a_l)
+    acc = jnp.zeros(jnp.broadcast_shapes(jnp.shape(a), jnp.shape(b)), jnp.int32)
+    for i in range(nl):
+        for j in range(nl):
+            prod = a_l[i] * b_l[j]  # < 2^16, exact
+            acc = addmod(acc, double_mod(fmod(prod, p), LIMB_BITS * (i + j), p), p)
+    return acc
+
+
+def powmod(a: jax.Array, e: int, p: int = P) -> jax.Array:
+    """a^e mod p by square-and-multiply (e is a static python int)."""
+    result = jnp.ones_like(a)
+    base = a
+    while e > 0:
+        if e & 1:
+            result = mulmod(result, base, p)
+        base = mulmod(base, base, p)
+        e >>= 1
+    return result
+
+
+def invmod(a: jax.Array, p: int = P) -> jax.Array:
+    """Modular inverse via Fermat: a^(p-2) mod p.  a must be nonzero."""
+    return powmod(a, p - 2, p)
+
+
+def matmul(a: jax.Array, b: jax.Array, p: int = P,
+           chunk: int = 4096) -> jax.Array:
+    """Exact (a @ b) mod p for int32 field matrices, never leaving int32.
+
+    Both operands are split into 8-bit limbs; limb-product partial sums over a
+    contraction chunk of size <= 2^15 stay < 2^16 * 2^15 = 2^31.  Limbs are
+    recombined with shift-by-doubling mod p.  This is the canonical pure-jnp
+    spec; kernels/modmatmul.py is the Pallas/MXU version of the same math.
+
+    a: (M, K), b: (K, N) -> (M, N) int32 in [0, p).
+    """
+    assert a.ndim == 2 and b.ndim == 2 and b.shape[0] == a.shape[1], (
+        a.shape, b.shape)
+    K = a.shape[-1]
+    chunk = min(chunk, 1 << 15)
+    out = jnp.zeros((a.shape[0], b.shape[1]), jnp.int32)
+    a_l = limbs(a, p)
+    b_l = limbs(b, p)
+    nl = len(a_l)
+    for start in range(0, K, chunk):
+        sl = slice(start, min(start + chunk, K))
+        for i in range(nl):
+            ai = a_l[i][:, sl]
+            for j in range(nl):
+                bj = b_l[j][sl, :]
+                # int32 matmul: products < 2^16, <=2^15 terms -> < 2^31 exact.
+                s = jax.lax.dot_general(
+                    ai, bj, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                out = addmod(out, double_mod(fmod(s, p), LIMB_BITS * (i + j), p), p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy / python int) helpers for building encode/decode matrices.
+# These run once at protocol setup, not in the jit hot path, so python ints
+# (arbitrary precision) are fine and are the clearest spec of the math.
+# ---------------------------------------------------------------------------
+
+def host_inv(a: int, p: int = P) -> int:
+    return pow(int(a) % p, p - 2, p)
+
+
+def host_lagrange_coeffs(eval_points: np.ndarray, interp_points: np.ndarray,
+                         p: int = P) -> np.ndarray:
+    """U[i, j] = prod_{l != i} (alpha_j - beta_l) / (beta_i - beta_l) mod p.
+
+    Returns the (len(interp_points), len(eval_points)) encoding matrix of
+    Eq. (12): column j encodes evaluation at alpha_j.
+    """
+    betas = [int(b) % p for b in interp_points]
+    alphas = [int(a) % p for a in eval_points]
+    kpt = len(betas)
+    U = np.zeros((kpt, len(alphas)), dtype=np.int64)
+    # denominators: d_i = prod_{l != i} (beta_i - beta_l)
+    denom_inv = []
+    for i in range(kpt):
+        d = 1
+        for l in range(kpt):
+            if l != i:
+                d = d * ((betas[i] - betas[l]) % p) % p
+        denom_inv.append(host_inv(d, p))
+    for j, alpha in enumerate(alphas):
+        for i in range(kpt):
+            num = 1
+            for l in range(kpt):
+                if l != i:
+                    num = num * ((alpha - betas[l]) % p) % p
+            U[i, j] = num * denom_inv[i] % p
+    return U.astype(np.int64)
+
+
+def host_vandermonde_inv(points: np.ndarray, p: int = P) -> np.ndarray:
+    """Inverse of the Vandermonde matrix V[i,j] = points[i]^j over F_p.
+
+    Used to interpolate h(z) coefficients from worker evaluations.
+    Gauss-Jordan elimination with modular inverses (host-side, python ints).
+    """
+    pts = [int(x) % p for x in points]
+    n = len(pts)
+    M = [[pow(pts[i], j, p) for j in range(n)] + [1 if k == i else 0 for k in range(n)]
+         for i in range(n)]
+    for col in range(n):
+        piv = next(r for r in range(col, n) if M[r][col] % p != 0)
+        M[col], M[piv] = M[piv], M[col]
+        inv = host_inv(M[col][col], p)
+        M[col] = [v * inv % p for v in M[col]]
+        for r in range(n):
+            if r != col and M[r][col] % p:
+                f = M[r][col]
+                M[r] = [(M[r][c] - f * M[col][c]) % p for c in range(2 * n)]
+    return np.array([[M[i][n + j] for j in range(n)] for i in range(n)],
+                    dtype=np.int64)
+
+
+def to_signed(x: jax.Array, p: int = P) -> jax.Array:
+    """phi^{-1} of Eq. (25): map [0,p) back to signed integers."""
+    half = (p - 1) // 2
+    return jnp.where(x >= half, x - p, x)
+
+
+def from_signed(x: jax.Array, p: int = P) -> jax.Array:
+    """phi of Eq. (7): embed signed integers into [0, p)."""
+    return jnp.where(x < 0, x + p, x).astype(jnp.int32)

@@ -1,0 +1,132 @@
+"""Lagrange coded computing (paper §3.2, §3.4; Yu et al. 2019).
+
+Encoding: split X̄ into K submatrices, append T uniform random masks, fit the
+degree-(K+T-1) interpolant u with u(beta_i) = X̄_i (i<=K) / Z_i (i>K), and
+evaluate at N points alpha -> shares X̃_i = u(alpha_i).  Equivalently a
+mod-p matmul against the (K+T, N) encoding matrix U (Eq. 12).
+
+Decoding: worker i returns h(alpha_i) where h = f(u(z), v(z)) has degree
+<= deg(f)·(K+T-1).  Any R = deg(f)·(K+T-1)+1 surviving evaluations determine
+h; we read off h(beta_k) via a second Lagrange-coefficient matrix (no
+Vandermonde inversion needed on the hot path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field
+
+
+def recovery_threshold(K: int, T: int, r: int) -> int:
+    """Minimum surviving workers: (2r+1)(K+T-1)+1 (Theorem 1)."""
+    return (2 * r + 1) * (K + T - 1) + 1
+
+
+def degree_threshold(K: int, T: int, deg_f: int) -> int:
+    """Threshold for an arbitrary polynomial worker function of degree deg_f."""
+    return deg_f * (K + T - 1) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CodingScheme:
+    """All static data of one Lagrange code: evaluation points + matrices."""
+    N: int          # number of workers / shares
+    K: int          # parallelization (dataset split)
+    T: int          # privacy threshold
+    p: int = field.P
+
+    def __post_init__(self):
+        assert self.K >= 1 and self.T >= 0 and self.N >= self.K + self.T, (
+            f"need N >= K+T, got N={self.N} K={self.K} T={self.T}")
+
+    @functools.cached_property
+    def betas(self) -> np.ndarray:
+        # K+T distinct interpolation points: 1..K+T (disjoint from alphas).
+        return np.arange(1, self.K + self.T + 1, dtype=np.int64)
+
+    @functools.cached_property
+    def alphas(self) -> np.ndarray:
+        # N distinct evaluation points, disjoint from betas.
+        start = self.K + self.T + 1
+        return np.arange(start, start + self.N, dtype=np.int64)
+
+    @functools.cached_property
+    def encode_matrix(self) -> np.ndarray:
+        """U in F_p^{(K+T) x N} of Eq. (12)."""
+        return field.host_lagrange_coeffs(self.alphas, self.betas, self.p)
+
+    def decode_matrix(self, survivors: np.ndarray) -> np.ndarray:
+        """D in F_p^{len(survivors) x K}: h(beta_k) = sum_i D[i,k] h(alpha_i).
+
+        survivors: indices (into [N]) of workers whose results arrived.
+        """
+        pts = self.alphas[np.asarray(survivors)]
+        return field.host_lagrange_coeffs(self.betas[: self.K], pts, self.p)
+
+    def coeff_matrix(self, survivors: np.ndarray) -> np.ndarray:
+        """V^{-1}: recovers the coefficients of h from survivor evaluations."""
+        pts = self.alphas[np.asarray(survivors)]
+        return field.host_vandermonde_inv(pts, self.p)
+
+
+def encode(scheme: CodingScheme, x_parts: jax.Array, masks: jax.Array,
+           p: int | None = None) -> jax.Array:
+    """Encode stacked parts+masks into N shares (Eq. 12).
+
+    x_parts: (K, *part_shape) int32 field elements.
+    masks:   (T, *part_shape) uniform field elements (the Z_i / V_i).
+    Returns shares: (N, *part_shape).
+    """
+    p = p or scheme.p
+    stacked = jnp.concatenate([x_parts, masks], axis=0) if scheme.T else x_parts
+    part_shape = stacked.shape[1:]
+    flat = stacked.reshape(scheme.K + scheme.T, -1)
+    U = jnp.asarray(scheme.encode_matrix, jnp.int32)  # (K+T, N)
+    shares = field.matmul(U.T, flat, p)               # (N, prod(part_shape))
+    return shares.reshape(scheme.N, *part_shape)
+
+
+def draw_masks(key: jax.Array, T: int, part_shape: tuple[int, ...],
+               p: int = field.P) -> jax.Array:
+    """T i.i.d. uniform matrices over F_p (the privacy masks)."""
+    if T == 0:
+        return jnp.zeros((0, *part_shape), jnp.int32)
+    return jax.random.randint(key, (T, *part_shape), 0, p, dtype=jnp.int32)
+
+
+def decode(scheme: CodingScheme, results: jax.Array, survivors: np.ndarray,
+           deg_f: int, p: int | None = None) -> jax.Array:
+    """Recover {h(beta_k)}_{k in [K]} from survivor evaluations (§3.4).
+
+    results:   (S, *res_shape) field elements, S = len(survivors) evaluations
+               h(alpha_i) in survivor order.
+    survivors: static numpy index array; len >= deg_f*(K+T-1)+1.
+    Returns (K, *res_shape): the K decoded sub-results.
+    """
+    p = p or scheme.p
+    need = degree_threshold(scheme.K, scheme.T, deg_f)
+    assert len(survivors) >= need, (
+        f"need {need} survivors for deg(f)={deg_f}, got {len(survivors)}")
+    survivors = np.asarray(survivors)[:need]
+    res_shape = results.shape[1:]
+    flat = results[: need].reshape(need, -1)
+    D = jnp.asarray(scheme.decode_matrix(survivors), jnp.int32)  # (S, K)
+    out = field.matmul(D.T, flat, p)  # (K, prod(res_shape))
+    return out.reshape(scheme.K, *res_shape)
+
+
+def decode_sum(scheme: CodingScheme, results: jax.Array,
+               survivors: np.ndarray, deg_f: int,
+               p: int | None = None) -> jax.Array:
+    """sum_k h(beta_k) — the paper's Eq. (23) — in one matmul."""
+    p = p or scheme.p
+    decoded = decode(scheme, results, survivors, deg_f, p)
+    out = decoded[0]
+    for k in range(1, scheme.K):
+        out = field.addmod(out, decoded[k], p)
+    return out

@@ -1,0 +1,218 @@
+"""BGW-style MPC baseline (paper §5 + Appendix A.5).
+
+The comparison system the paper benchmarks against: Shamir secret sharing of
+the ENTIRE quantized dataset at every worker + a multi-round BGW protocol for
+the gradient polynomial.  Same quantization + sigmoid surrogate as CPML so
+the two systems compute the identical update — only the privacy machinery
+differs:
+
+  * share:      [S]_i = S + sum_t R_t alpha_i^t            (degree-T Shamir)
+  * multiply:   local product -> degree-2T sharing
+  * reduce:     every worker re-shares its product share with a fresh
+                degree-T polynomial; workers combine received sub-shares with
+                Lagrange-at-0 coefficients  ==> one all-to-all round per
+                multiplication (the "communication step" of A.5, vectorized)
+  * reconstruct: interpolate at 0 from 2T+1 shares.
+
+Costs this exposes (and the benchmarks measure): encode O(N·T·m·d) on the
+full dataset per worker (vs CPML's 1/K-sized shares), a collective round per
+multiplication (vs CPML's zero worker<->worker rounds), and no 1/K
+parallelization of the compute.  Privacy: any T <= (N-1)/2 (higher than
+CPML's trade-off — faithfully noted, paper §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field, quantize, sigmoid_poly
+
+
+@dataclasses.dataclass(frozen=True)
+class MPCConfig:
+    N: int
+    T: int
+    r: int = 1
+    lx: int = 2
+    lw: int = 4
+    lc: int = 6
+    p: int = field.P
+
+    def __post_init__(self):
+        assert self.N >= 2 * self.T + 1, (
+            f"BGW needs N >= 2T+1, got N={self.N}, T={self.T}")
+
+    @functools.cached_property
+    def alphas(self) -> np.ndarray:
+        return np.arange(1, self.N + 1, dtype=np.int64)
+
+    @functools.cached_property
+    def lambda0(self) -> np.ndarray:
+        """Lagrange-at-0 coefficients for all N points (degree < N interp)."""
+        return _lagrange_at_zero(self.alphas, self.p)
+
+    def lambda0_first(self, count: int) -> np.ndarray:
+        return _lagrange_at_zero(self.alphas[:count], self.p)
+
+    @property
+    def grad_scale(self) -> int:
+        return sigmoid_poly.gradient_scale_poly(self.lx, self.lw, self.r,
+                                                self.lc)
+
+
+def _lagrange_at_zero(points: np.ndarray, p: int) -> np.ndarray:
+    pts = [int(x) % p for x in points]
+    lam = []
+    for i, ai in enumerate(pts):
+        num, den = 1, 1
+        for l, al in enumerate(pts):
+            if l != i:
+                num = num * al % p
+                den = den * ((al - ai) % p) % p
+        lam.append(num * field.host_inv(den, p) % p)
+    return np.array(lam, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Shamir primitives (vectorized over all N workers: leading axis = workers)
+# ---------------------------------------------------------------------------
+
+def share(cfg: MPCConfig, key: jax.Array, value: jax.Array) -> jax.Array:
+    """Degree-T Shamir shares of `value` -> (N, *value.shape)."""
+    if cfg.T == 0:
+        return jnp.broadcast_to(value[None], (cfg.N, *value.shape))
+    masks = jax.random.randint(key, (cfg.T, *value.shape), 0, cfg.p,
+                               dtype=jnp.int32)
+    alphas = jnp.asarray(cfg.alphas, jnp.int32)          # (N,)
+    shares = jnp.broadcast_to(value[None], (cfg.N, *value.shape))
+    apow = jnp.ones((cfg.N,), jnp.int32)
+    for t in range(cfg.T):
+        apow = field.mulmod(apow, alphas, cfg.p)          # alpha^(t+1)
+        term = field.mulmod(apow.reshape(-1, *([1] * value.ndim)),
+                            masks[t][None], cfg.p)
+        shares = field.addmod(shares, term, cfg.p)
+    return shares
+
+
+def degree_reduce(cfg: MPCConfig, key: jax.Array, shares: jax.Array
+                  ) -> jax.Array:
+    """BGW degree reduction: (N, *s) degree-2T shares -> degree-T shares.
+
+    Each worker re-shares its value (a fresh degree-T Shamir share per
+    recipient) and recipients combine with Lagrange-at-0 weights.  The
+    (N_from -> N_to) exchange is the all-to-all communication round.
+    """
+    # re-share: for each source worker i, degree-T shares across recipients.
+    resh = jax.vmap(lambda k, v: share(cfg, k, v))(
+        jax.random.split(key, cfg.N), shares)             # (N_from, N_to, *s)
+    # all-to-all: recipient j gathers column j.
+    gathered = jnp.swapaxes(resh, 0, 1)                   # (N_to, N_from, *s)
+    lam = jnp.asarray(cfg.lambda0, jnp.int32)             # (N_from,)
+    out = jnp.zeros_like(shares)
+    for i in range(cfg.N):
+        out = field.addmod(out, field.mulmod(
+            jnp.broadcast_to(lam[i], gathered.shape[0:1] + shares.shape[1:]),
+            gathered[:, i], cfg.p), cfg.p)
+    return out
+
+
+def reconstruct(cfg: MPCConfig, shares: jax.Array, degree: int) -> jax.Array:
+    """Interpolate the secret (value at 0) from the first degree+1 shares."""
+    need = degree + 1
+    assert cfg.N >= need, f"cannot reconstruct degree {degree} from {cfg.N}"
+    lam = jnp.asarray(cfg.lambda0_first(need), jnp.int32)
+    out = jnp.zeros(shares.shape[1:], jnp.int32)
+    for i in range(need):
+        out = field.addmod(out, field.mulmod(
+            jnp.broadcast_to(lam[i], shares.shape[1:]), shares[i], cfg.p),
+            cfg.p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The private gradient protocol (same math as CPML's Eq. 19)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MPCState:
+    w: jax.Array
+    x_shares: jax.Array     # (N, m, d) — the FULL dataset at every worker
+    xty: jax.Array
+    m: int
+    xq_real: jax.Array
+    y: jax.Array
+
+
+def setup(cfg: MPCConfig, key: jax.Array, x: jax.Array, y: jax.Array,
+          w0: jax.Array | None = None) -> MPCState:
+    xq = quantize.quantize_data(x, cfg.lx, cfg.p)
+    x_shares = share(cfg, key, xq)
+    xq_real = quantize.dequantize(xq, cfg.lx, cfg.p)
+    xty = xq_real.T @ y.astype(jnp.float32)
+    w = w0 if w0 is not None else jnp.zeros((x.shape[1],), jnp.float32)
+    return MPCState(w=w, x_shares=x_shares, xty=xty, m=x.shape[0],
+                    xq_real=xq_real, y=y)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _step_jit(cfg: MPCConfig, key: jax.Array, w: jax.Array,
+              x_shares: jax.Array, xty: jax.Array,
+              eta_over_m: jax.Array) -> jax.Array:
+    kw, kq, *kred = jax.random.split(key, 3 + cfg.r)
+    cbar = jnp.asarray(
+        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
+        jnp.int32)
+    # master quantizes + shares the weights (same W̄ structure as CPML).
+    wbar = quantize.quantize_weights(kq, w, cfg.lw, cfg.r, cfg.p)   # (d, r)
+    w_shares = share(cfg, kw, wbar)                                 # (N, d, r)
+    # round 1: Z_j = X̄ w̄ʲ — secret×secret -> degree 2T, then reduce.
+    z = jax.vmap(lambda xs, ws: field.matmul(xs, ws, cfg.p))(
+        x_shares, w_shares)                                         # (N, m, r)
+    z = degree_reduce(cfg, kred[0], z)
+    # rounds 2..r: running products of z columns (elementwise muls).
+    prod = z[..., 0]
+    s = field.addmod(
+        jnp.broadcast_to(cbar[0], prod.shape),
+        field.mulmod(jnp.broadcast_to(cbar[1], prod.shape), prod, cfg.p),
+        cfg.p)
+    for i in range(2, cfg.r + 1):
+        prod = field.mulmod(prod, z[..., i - 1], cfg.p)             # deg 2T
+        prod = degree_reduce(cfg, kred[i - 1], prod)
+        s = field.addmod(s, field.mulmod(
+            jnp.broadcast_to(cbar[i], prod.shape), prod, cfg.p), cfg.p)
+    # final multiplication: G = X̄ᵀ s — degree 2T, reconstruct directly.
+    g_shares = jax.vmap(lambda xs, ss: field.matmul(xs.T, ss[:, None], cfg.p)
+                        [:, 0])(x_shares, s)                        # (N, d)
+    decoded = reconstruct(cfg, g_shares, 2 * cfg.T)
+    xg = quantize.dequantize(decoded, cfg.grad_scale, cfg.p)
+    return w - eta_over_m * (xg - xty)
+
+
+def step(cfg: MPCConfig, key: jax.Array, state: MPCState, eta: float
+         ) -> MPCState:
+    w = _step_jit(cfg, key, state.w, state.x_shares, state.xty,
+                  jnp.float32(eta / state.m))
+    return dataclasses.replace(state, w=w)
+
+
+def train(cfg: MPCConfig, key: jax.Array, x: jax.Array, y: jax.Array,
+          iters: int, eta: float | None = None, eval_every: int = 0
+          ) -> tuple[jax.Array, list[dict[str, float]]]:
+    from repro.core import protocol as cpml
+    ksetup, kloop = jax.random.split(key)
+    state = setup(cfg, ksetup, x, y)
+    if eta is None:
+        eta = cpml.lipschitz_eta(state.xq_real)
+    history = []
+    for t in range(iters):
+        state = step(cfg, jax.random.fold_in(kloop, t), state, eta)
+        if eval_every and (t + 1) % eval_every == 0:
+            l, a = cpml.loss_and_accuracy(state.w, state.xq_real, state.y)
+            history.append({"iter": t + 1, "loss": float(l), "acc": float(a)})
+    return state.w, history

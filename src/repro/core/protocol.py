@@ -1,0 +1,287 @@
+"""CodedPrivateML end-to-end protocol (paper Algorithm 1).
+
+Master-side: quantize -> Lagrange-encode -> dispatch -> decode -> update.
+Worker-side: f(X̃_i, W̃_i) = X̃_iᵀ ḡ(X̃_i, W̃_i) over F_p (Eq. 20), a degree
+(2r+1) polynomial, so any (2r+1)(K+T-1)+1 surviving workers decode (Thm. 1).
+
+Execution backends:
+  * "vmap"     — all N workers simulated on one device (tests/benchmarks).
+  * "shard"    — shard_map over a mesh axis: one coded share per device,
+                 zero collectives in the worker step (the paper's key property),
+                 one all_gather for "send results to master".
+  * kernel=True routes the worker computation through the fused Pallas kernel
+    (kernels/coded_grad.py) instead of the jnp field ops.
+
+Straggler tolerance: results arrive as an (N, d) array + a survivor index
+list; the decode matrix for the survivor set is built host-side (static per
+pattern) and applied as one field matmul — semantics of "wait for the fastest
+R workers" preserved as erasure decoding (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field, lagrange, quantize, sigmoid_poly
+
+
+@dataclasses.dataclass(frozen=True)
+class CPMLConfig:
+    N: int                  # workers
+    K: int                  # parallelization (dataset split)
+    T: int                  # privacy threshold
+    r: int = 1              # sigmoid polynomial degree
+    lx: int = 2             # dataset quantization scale (paper §5)
+    lw: int = 4             # weight quantization scale (paper §5)
+    lc: int = 6             # sigmoid-coefficient scale (see sigmoid_poly.py)
+    p: int = field.P
+    backend: str = "vmap"   # "vmap" | "shard"
+    mesh_axis: str = "workers"
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        need = lagrange.recovery_threshold(self.K, self.T, self.r)
+        assert self.N >= need, (
+            f"N={self.N} < recovery threshold {need} for "
+            f"(K={self.K}, T={self.T}, r={self.r}); Theorem 1 violated")
+
+    @property
+    def threshold(self) -> int:
+        return lagrange.recovery_threshold(self.K, self.T, self.r)
+
+    @property
+    def scheme(self) -> lagrange.CodingScheme:
+        return lagrange.CodingScheme(self.N, self.K, self.T, self.p)
+
+    @property
+    def grad_scale(self) -> int:
+        return sigmoid_poly.gradient_scale_poly(self.lx, self.lw, self.r,
+                                                self.lc)
+
+    def headroom_bits(self, x_max: float, m: int) -> float:
+        """log2((p-1)/2) - log2(worst-case decoded magnitude).
+
+        Negative => the decoded sub-gradient h(beta_k) can wrap around
+        (paper §3.1's overflow error).  Worst case per part: sum over m/K
+        samples of x̄ * ḡ at the aligned scale.  Use P30 / smaller lc / larger
+        K when this goes negative (r=2 at the paper's 24-bit prime does).
+        """
+        import math
+        per_part = (m / self.K) * (2 ** self.lx * max(x_max, 1e-9)) \
+            * 2 ** (self.lc + self.r * (self.lx + self.lw))
+        return math.log2((self.p - 1) / 2) - math.log2(per_part)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1+2: quantize + encode the dataset (done once, Algorithm 1 lines 1-3)
+# ---------------------------------------------------------------------------
+
+def pad_rows(x: jax.Array, K: int) -> jax.Array:
+    m = x.shape[0]
+    pad = (-m) % K
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+    return x
+
+
+def encode_dataset(cfg: CPMLConfig, key: jax.Array, x: jax.Array
+                   ) -> tuple[jax.Array, dict[str, Any]]:
+    """Returns shares (N, m/K, d) + master-side cleartext context."""
+    xq = quantize.quantize_data(x, cfg.lx, cfg.p)          # (m, d) field
+    xq = pad_rows(xq, cfg.K)
+    mk = xq.shape[0] // cfg.K
+    parts = xq.reshape(cfg.K, mk, xq.shape[-1])
+    masks = lagrange.draw_masks(key, cfg.T, parts.shape[1:], cfg.p)
+    shares = lagrange.encode(cfg.scheme, parts, masks, cfg.p)
+    ctx = {"xq": xq, "m_padded": xq.shape[0]}
+    return shares, ctx
+
+
+def encode_weights(cfg: CPMLConfig, key: jax.Array, w: jax.Array) -> jax.Array:
+    """Quantize w (Eq. 9-10) and Lagrange-encode W̄ (Eq. 13-14).
+
+    Returns shares (N, d, r).  Note v(beta_i) = W̄ for ALL i <= K (the paper
+    repeats the same W̄ at every data interpolation point), with fresh random
+    masks V each round.
+    """
+    kq, km = jax.random.split(key)
+    wbar = quantize.quantize_weights(kq, w, cfg.lw, cfg.r, cfg.p)  # (d, r)
+    parts = jnp.broadcast_to(wbar[None], (cfg.K, *wbar.shape))
+    masks = lagrange.draw_masks(km, cfg.T, wbar.shape, cfg.p)
+    return lagrange.encode(cfg.scheme, parts, masks, cfg.p)
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: worker computation (Eq. 20) — polynomial over F_p
+# ---------------------------------------------------------------------------
+
+def worker_fn(cfg: CPMLConfig, cbar: jax.Array
+              ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) for ONE worker. (mk,d),(d,r) -> (d,)."""
+
+    def f(x_share: jax.Array, w_share: jax.Array) -> jax.Array:
+        if cfg.use_kernel:
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.coded_grad(x_share, w_share, cbar, cfg.p)
+        xw = field.matmul(x_share, w_share, cfg.p)          # (mk, r)
+        s = sigmoid_poly.gbar_field(xw, cbar, cfg.p)        # (mk,)
+        return field.matmul(x_share.T, s[:, None], cfg.p)[:, 0]  # (d,)
+
+    return f
+
+
+def all_worker_results(cfg: CPMLConfig, cbar: jax.Array, x_shares: jax.Array,
+                       w_shares: jax.Array) -> jax.Array:
+    """(N, mk, d) x (N, d, r) -> (N, d) worker results."""
+    f = worker_fn(cfg, cbar)
+    if cfg.backend == "vmap":
+        return jax.vmap(f)(x_shares, w_shares)
+    elif cfg.backend == "shard":
+        mesh = jax.sharding.get_abstract_mesh()  # inside with-mesh context
+        axis = cfg.mesh_axis
+
+        def shard_body(xs, ws):
+            res = f(xs[0], ws[0])[None]
+            # "send result back to the master": one collective, results
+            # replicated so the (replicated) decode can run everywhere.
+            return jax.lax.all_gather(res, axis, axis=0, tiled=True)
+
+        from jax.sharding import PartitionSpec as Pspec
+        # check_vma=False: the all_gather makes the output replicated, but
+        # the static varying-manual-axes check cannot infer that.
+        return jax.shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(Pspec(axis), Pspec(axis)),
+            out_specs=Pspec(), check_vma=False)(x_shares, w_shares)
+    raise ValueError(cfg.backend)
+
+
+# ---------------------------------------------------------------------------
+# Phase 4: decode + model update (Eq. 23-24, 19)
+# ---------------------------------------------------------------------------
+
+def decode_gradient(cfg: CPMLConfig, results: jax.Array,
+                    decode_mat: jax.Array) -> jax.Array:
+    """Decode the K sub-gradients h(beta_k) and sum them IN THE REAL DOMAIN.
+
+    The paper sums in the field (Eq. 23); summing after per-part
+    dequantization is numerically identical when nothing wraps, and buys
+    log2(K) bits of wrap-around headroom per part — each h(beta_k) only
+    accumulates m/K samples.  results: (R, d) -> real (d,).
+    """
+    out = field.matmul(decode_mat.T, results, cfg.p)  # (K, d) field
+    return quantize.dequantize(out, cfg.grad_scale, cfg.p).sum(axis=0)
+
+
+def make_decode_matrix(cfg: CPMLConfig, survivors: np.ndarray) -> jax.Array:
+    surv = np.asarray(survivors)[: cfg.threshold]
+    return jnp.asarray(cfg.scheme.decode_matrix(surv), jnp.int32)
+
+
+@dataclasses.dataclass
+class CPMLState:
+    w: jax.Array            # real-domain weights (d,)
+    x_shares: jax.Array     # (N, mk, d) coded dataset
+    xty: jax.Array          # real-domain Xqᵀ y (master-side clear part)
+    m: int                  # number of (unpadded) samples
+    xq_real: jax.Array      # dequantized dataset (for loss eval / oracle)
+    y: jax.Array
+
+
+def setup(cfg: CPMLConfig, key: jax.Array, x: jax.Array, y: jax.Array,
+          w0: jax.Array | None = None) -> CPMLState:
+    kx, kw = jax.random.split(key)
+    x_shares, ctx = encode_dataset(cfg, kx, x)
+    xq_real = quantize.dequantize(pad_rows(quantize.quantize_data(x, cfg.lx, cfg.p),
+                                           cfg.K), cfg.lx, cfg.p)
+    y_pad = jnp.concatenate([y, jnp.zeros(ctx["m_padded"] - y.shape[0], y.dtype)])
+    xty = xq_real.T @ y_pad.astype(jnp.float32)
+    d = x.shape[1]
+    w = w0 if w0 is not None else jnp.zeros((d,), jnp.float32)
+    return CPMLState(w=w, x_shares=x_shares, xty=xty, m=x.shape[0],
+                     xq_real=xq_real, y=y_pad)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _step_jit(cfg: CPMLConfig, key: jax.Array, w: jax.Array,
+              x_shares: jax.Array, xty: jax.Array, decode_mat: jax.Array,
+              order: jax.Array, eta_over_m: jax.Array) -> jax.Array:
+    cbar = jnp.asarray(
+        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
+        jnp.int32)
+    w_shares = encode_weights(cfg, key, w)
+    results = all_worker_results(cfg, cbar, x_shares, w_shares)   # (N, d)
+    fastest = jnp.take(results, order, axis=0)                    # (R, d)
+    xg = decode_gradient(cfg, fastest, decode_mat)                # Xᵀ ḡ real
+    grad = (xg - xty)                                             # Xᵀ(ḡ - y)
+    return w - eta_over_m * grad
+
+
+def step(cfg: CPMLConfig, key: jax.Array, state: CPMLState, eta: float,
+         survivors: np.ndarray | None = None) -> CPMLState:
+    """One master iteration.  survivors: indices of workers that responded
+    (None = all N; only the fastest `threshold` are used, like the paper)."""
+    surv = np.arange(cfg.N) if survivors is None else np.asarray(survivors)
+    assert len(surv) >= cfg.threshold, "not enough survivors to decode"
+    surv = surv[: cfg.threshold]
+    dmat = make_decode_matrix(cfg, surv)
+    order = jnp.asarray(surv, jnp.int32)
+    w = _step_jit(cfg, key, state.w, state.x_shares, state.xty, dmat, order,
+                  jnp.float32(eta / state.m))
+    return dataclasses.replace(state, w=w)
+
+
+def lipschitz_eta(xq_real: jax.Array) -> float:
+    """eta = 1/L.  The cost (Eq. 1) carries a 1/m, so its Hessian is
+    (1/m) X̄ᵀ S X̄ with S ⪯ I/4, giving L = max eig(X̄ᵀX̄)/(4m).
+    (The paper's Lemma 2 states L = ||X̄||₂²/4, omitting the 1/m that its own
+    Eq. (1) introduces — with that L the step size is m× too small to
+    reproduce Fig. 3's 25-iteration accuracy.)"""
+    # power iteration — avoids O(d^3) eigendecomposition for large d.
+    m, d = xq_real.shape
+    v = jnp.ones((d,), jnp.float32) / np.sqrt(d)
+    for _ in range(50):
+        v = xq_real.T @ (xq_real @ v)
+        v = v / (jnp.linalg.norm(v) + 1e-30)
+    lam = v @ (xq_real.T @ (xq_real @ v))
+    return float(4.0 * m / lam)
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def loss_and_accuracy(w: jax.Array, x: jax.Array, y: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    z = x @ w
+    yhat = sigmoid(z)
+    eps = 1e-7
+    loss = -jnp.mean(y * jnp.log(yhat + eps) + (1 - y) * jnp.log(1 - yhat + eps))
+    acc = jnp.mean((yhat > 0.5) == (y > 0.5))
+    return loss, acc
+
+
+def train(cfg: CPMLConfig, key: jax.Array, x: jax.Array, y: jax.Array,
+          iters: int, eta: float | None = None,
+          survivor_fn: Callable[[int], np.ndarray] | None = None,
+          eval_every: int = 0) -> tuple[jax.Array, list[dict[str, float]]]:
+    """Full Algorithm 1.  Returns (w, history)."""
+    ksetup, kloop = jax.random.split(key)
+    state = setup(cfg, ksetup, x, y)
+    if eta is None:
+        eta = lipschitz_eta(state.xq_real)
+    history: list[dict[str, float]] = []
+    for t in range(iters):
+        kt = jax.random.fold_in(kloop, t)
+        surv = survivor_fn(t) if survivor_fn else None
+        state = step(cfg, kt, state, eta, surv)
+        if eval_every and (t + 1) % eval_every == 0:
+            l, a = loss_and_accuracy(state.w, state.xq_real[: state.m],
+                                     state.y[: state.m])
+            history.append({"iter": t + 1, "loss": float(l), "acc": float(a)})
+    return state.w, history

@@ -1,0 +1,56 @@
+"""Stochastic & deterministic quantization between R and F_p (paper §3.1).
+
+  * dataset:  X̄ = phi(Round(2^lx · X))                      (Eq. 6)
+  * weights:  w̄^j = phi(Round_stoc(2^lw · w)), j = 1..r      (Eqs. 8-10)
+  * inverse:  Q_p^{-1}(x̄; l) = 2^{-l} · phi^{-1}(x̄)          (Eq. 24)
+
+Stochastic rounding is unbiased (E[Round_stoc(x)] = x), which Lemma 1 needs
+for the gradient estimator.  All functions are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import field
+
+
+def quantize_data(x: jax.Array, lx: int, p: int = field.P) -> jax.Array:
+    """Deterministic round-half-up quantization of the dataset (Eq. 5-6)."""
+    scaled = x * (2.0 ** lx)
+    rounded = jnp.floor(scaled + 0.5).astype(jnp.int32)  # Round() of Eq. (5)
+    return field.from_signed(rounded, p)
+
+
+def quantize_weights(key: jax.Array, w: jax.Array, lw: int, r: int,
+                     p: int = field.P) -> jax.Array:
+    """r independent stochastic quantizations of w (Eq. 9-10).
+
+    Returns W̄ of shape (*w.shape, r): column j is one unbiased realization.
+    """
+    scaled = w * (2.0 ** lw)
+    floor = jnp.floor(scaled)
+    frac = scaled - floor
+    u = jax.random.uniform(key, (*w.shape, r))
+    rounded = floor[..., None] + (u < frac[..., None]).astype(scaled.dtype)
+    return field.from_signed(rounded.astype(jnp.int32), p)
+
+
+def dequantize(x: jax.Array, l: int, p: int = field.P) -> jax.Array:
+    """Q_p^{-1} of Eq. (24): field -> real with total scale 2^{-l}."""
+    return field.to_signed(x, p).astype(jnp.float32) * (2.0 ** (-l))
+
+
+def gradient_scale(lx: int, lw: int, r: int) -> int:
+    """Total fixed-point scale of the decoded gradient, l = lx + r(lx+lw).
+
+    f = X̃ᵀ ḡ(X̃·W̃): the degree-(r) product term carries r factors of
+    (2^lx · 2^lw) and the outer X̃ᵀ one more 2^lx (paper, below Eq. 24).
+    """
+    return lx + r * (lx + lw)
+
+
+def required_prime_bits(x_max: float, lx: int) -> int:
+    """Minimum bits so p >= 2^(lx+1) max|X| + 1 (no wrap-around, §3.1)."""
+    import math
+    return max(1, math.ceil(math.log2(2 ** (lx + 1) * max(x_max, 1e-9) + 1)))

@@ -1,0 +1,103 @@
+"""Polynomial sigmoid surrogate + the unbiased product estimator (paper §3.3).
+
+ĝ(z) = sum_i c_i z^i           — least-squares fit of 1/(1+e^{-z})   (Eq. 15)
+ḡ(X̄, W̄) = sum_i c_i prod_{j<=i} (X̄ w̄^j)                            (Eq. 17)
+
+E[ḡ] = ĝ(X̄ w) because the r weight quantizations are independent and each is
+unbiased — the property Lemma 1 and the convergence proof rest on.
+
+Coefficient quantization (a gap the paper leaves implicit): the real c_i must
+live in F_p.  We quantize them at an explicit scale 2^lc and align every term
+of ḡ to the SAME total scale lc + r(lx+lw) by pre-multiplying lower-degree
+terms with the missing (2^{lx+lw})^{r-i} factor.  The decoded gradient then
+dequantizes with l = lc + lx + r(lx+lw) (generalizes the paper's Eq. 24 which
+corresponds to lc = 0 — under which a typical fitted slope c_1 ~ 0.2 would
+round to ZERO; see tests/test_sigmoid_poly.py).  lc trades coefficient
+precision against wrap-around headroom exactly like lx/lw (§3.1 discussion).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field
+
+# Default fit interval.  Chosen so that the degree-1 LSQ slope (~0.24) is
+# representable with small lc; MNIST-scale logits stay inside it.
+FIT_LO, FIT_HI = -4.0, 4.0
+
+
+@functools.lru_cache(maxsize=None)
+def fit_sigmoid(r: int, z_min: float = FIT_LO, z_max: float = FIT_HI,
+                num: int = 2001) -> tuple[float, ...]:
+    """Degree-r least-squares fit of the sigmoid on [z_min, z_max] (Eq. 15)."""
+    z = np.linspace(z_min, z_max, num)
+    y = 1.0 / (1.0 + np.exp(-z))
+    V = np.stack([z ** i for i in range(r + 1)], axis=1)
+    coeffs, *_ = np.linalg.lstsq(V, y, rcond=None)
+    return tuple(float(c) for c in coeffs)
+
+
+def poly_eval_real(coeffs, z):
+    out = jnp.zeros_like(z)
+    for i, c in enumerate(coeffs):
+        out = out + c * z ** i
+    return out
+
+
+def quantized_coeffs(r: int, lx: int, lw: int, lc: int = 6,
+                     p: int = field.P,
+                     z_range: tuple[float, float] = (FIT_LO, FIT_HI)
+                     ) -> np.ndarray:
+    """Field representation c̄_i of c_i, every ḡ term scale-aligned to
+    lc + r(lx+lw):  c̄_i = round(c_i · 2^{lc + (r-i)(lx+lw)}) mod p."""
+    coeffs = fit_sigmoid(r, *z_range)
+    out = []
+    for i, c in enumerate(coeffs):
+        scale = 2 ** (lc + (r - i) * (lx + lw))
+        out.append(int(round(c * scale)) % p)
+    return np.array(out, dtype=np.int64)
+
+
+def gradient_scale_poly(lx: int, lw: int, r: int, lc: int = 6) -> int:
+    """Total scale of X̄ᵀḡ when ḡ uses quantized_coeffs: lc + lx + r(lx+lw)."""
+    return lc + lx + r * (lx + lw)
+
+
+def gbar_field(xw: jax.Array, cbar: jax.Array, p: int = field.P) -> jax.Array:
+    """ḡ over F_p given the per-degree products XW̄ (Eq. 17), field coeffs c̄.
+
+    xw: (..., r) field elements — column j is X̄ @ w̄^j (scale 2^{lx+lw}).
+    cbar: (r+1,) field elements from quantized_coeffs.
+    Returns (...,) field elements at uniform scale lc + r(lx+lw).
+    """
+    r = xw.shape[-1]
+    out = jnp.broadcast_to(cbar[0].astype(jnp.int32), xw.shape[:-1])
+    prod = None
+    for i in range(1, r + 1):
+        prod = xw[..., i - 1] if prod is None else field.mulmod(
+            prod, xw[..., i - 1], p)
+        out = field.addmod(out, field.mulmod(
+            jnp.broadcast_to(cbar[i].astype(jnp.int32), prod.shape), prod, p), p)
+    return out
+
+
+def gbar_real(x: jax.Array, w_quants: jax.Array, coeffs,
+              lx: int, lw: int, p: int = field.P) -> jax.Array:
+    """Real-domain reference of Eq. (17) for tests: unbiased ĝ estimate.
+
+    x: real (quantized-then-dequantized) data; w_quants: (d, r) field (F_p).
+    """
+    from repro.core import quantize
+    r = w_quants.shape[-1]
+    out = jnp.full(x.shape[:-1], coeffs[0], jnp.float32)
+    prod = None
+    for i in range(1, r + 1):
+        wj = quantize.dequantize(w_quants[:, i - 1], lw, p)
+        term = x @ wj
+        prod = term if prod is None else prod * term
+        out = out + coeffs[i] * prod
+    return out

@@ -1,0 +1,55 @@
+"""Deterministic synthetic datasets (offline stand-ins for MNIST + LM data).
+
+The paper trains binary MNIST (3 vs 7), (m, d) = (12396, 1568) / (12396, 784).
+The container has no dataset downloads, so we generate a distribution-faithful
+stand-in: sparse non-negative pixel-like features in [0, 1] with a planted
+linear separator passed through a sigmoid label model.  Same m, d, same
+feature range, same "most pixels near zero" sparsity — so quantization/
+overflow behaviour matches the real thing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mnist_like(key: jax.Array, m: int = 12396, d: int = 784,
+               sparsity: float = 0.8, margin: float = 4.0
+               ) -> tuple[jax.Array, jax.Array]:
+    """Binary classification with pixel-like features. Returns (X, y)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.uniform(k1, (m, d))
+    mask = jax.random.uniform(k2, (m, d)) > sparsity
+    x = jnp.where(mask, x, 0.0)                      # mostly-zero "pixels"
+    w_true = jax.random.normal(k3, (d,)) / np.sqrt(d)
+    logits = margin * (x @ w_true)
+    logits = logits - jnp.median(logits)             # balanced classes
+    y = (jax.random.uniform(k4, (m,)) < jax.nn.sigmoid(logits)).astype(
+        jnp.float32)
+    return x, y
+
+
+def lm_batch(key: jax.Array, batch: int, seq: int, vocab: int
+             ) -> dict[str, jax.Array]:
+    """Synthetic next-token-prediction batch (tokens + shifted labels)."""
+    tokens = jax.random.randint(key, (batch, seq + 1), 0, vocab,
+                                dtype=jnp.int32)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+def feature_probe_data(key: jax.Array, m: int, d_feat: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Frozen-LM-feature probe task: features ~ N(0,1)/sqrt(d), binary label.
+
+    Used by the paper-faithful private head training on top of an LM: the
+    "dataset" X is a feature matrix extracted by the (frozen) backbone.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (m, d_feat)) / np.sqrt(d_feat)
+    # shift to non-negative range like post-GeLU features, keep |x| <= 1
+    x = jnp.clip(x + 0.5, 0.0, 1.0)
+    w_true = jax.random.normal(k2, (d_feat,))
+    y = (jax.random.uniform(k3, (m,)) < jax.nn.sigmoid(4.0 * (x @ w_true))
+         ).astype(jnp.float32)
+    return x, y

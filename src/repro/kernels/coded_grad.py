@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused CodedPrivateML worker step (paper Eq. 20).
+
+f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) with ḡ = sum_i c̄_i prod_{j<=i}(X̃ w̃ʲ) mod p.
+
+Unfused, the worker reads X̃ twice from HBM (once for Z = X̃W̃, once for the
+X̃ᵀ· reduction).  Since X̃ is by far the largest operand (m/K x d vs d x r),
+this kernel streams each X̃ row-block through VMEM exactly once:
+
+    per row-block b:  Z_b = X̃_b @ W̃        (d-chunked, limb-exact MXU)
+                      s_b = poly(Z_b, c̄)    (VPU mod arithmetic)
+                      out += X̃_bᵀ @ s_b     (reuses the X̃_b block in VMEM)
+
+=> HBM traffic ~ halves; arithmetic intensity of the worker step ~ doubles.
+This is the paper's compute hot spot, so it is the kernel we optimize.
+
+Constraints: full W̃ (d x r) and the (1, d) accumulator row live in VMEM —
+fine for the paper's scales (d ~ 1.5k-8k: d*r*4B < 256KB).  The general
+tiled path is kernels/modmatmul.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import field
+
+MAX_CHUNK = 256  # fp32-exact contraction depth for 8-bit limb products
+
+
+def _limbs_bf16(x, nl):
+    return [((x >> (field.LIMB_BITS * i)) & field.LIMB_MASK).astype(jnp.bfloat16)
+            for i in range(nl)]
+
+
+def _exact_modmatmul_block(a, b, p, nl):
+    """(a @ b) mod p for in-VMEM blocks, chunked at MAX_CHUNK contraction."""
+    K = a.shape[-1]
+    accs = [jnp.zeros((a.shape[0], b.shape[1]), jnp.int32)
+            for _ in range(2 * nl - 1)]
+    for start in range(0, K, MAX_CHUNK):
+        a_c = a[:, start: start + MAX_CHUNK]
+        b_c = b[start: start + MAX_CHUNK, :]
+        a_l = _limbs_bf16(a_c, nl)
+        b_l = _limbs_bf16(b_c, nl)
+        for i in range(nl):
+            for j in range(nl):
+                prod = jax.lax.dot_general(
+                    a_l[i], b_l[j], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32).astype(jnp.int32)
+                accs[i + j] = field.addmod(accs[i + j], field.fmod(prod, p), p)
+    out = accs[0]
+    for s in range(1, 2 * nl - 1):
+        out = field.addmod(out, field.double_mod(accs[s], field.LIMB_BITS * s, p),
+                           p)
+    return out
+
+
+def _coded_grad_kernel(x_ref, w_ref, c_ref, o_ref, *, p: int, nl: int,
+                       r: int, rows: int):
+    """Grid step over one X̃ row-block; accumulates into the (1, d) output."""
+    b = pl.program_id(0)
+    x = x_ref[...]                     # (bm, d) int32
+    w = w_ref[...]                     # (d, r)  int32
+    # Z = X̃ @ W̃ mod p  (bm, r)
+    z = _exact_modmatmul_block(x, w, p, nl)
+    # s = ḡ(Z) = c̄_0 + sum_i c̄_i * prod_{j<=i} z_j   (bm,)
+    s = jnp.full((z.shape[0],), c_ref[0], jnp.int32)
+    prod = None
+    for i in range(1, r + 1):
+        zi = z[:, i - 1]
+        prod = zi if prod is None else field.mulmod(prod, zi, p)
+        s = field.addmod(s, field.mulmod(
+            jnp.broadcast_to(c_ref[i], prod.shape), prod, p), p)
+    # out += sᵀ @ X̃  -> (1, d); contraction depth bm <= 256 keeps exactness.
+    contrib = _exact_modmatmul_block(s[None, :], x, p, nl)
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = field.addmod(o_ref[...], contrib, p)
+
+
+def coded_grad(x: jax.Array, w: jax.Array, cbar: jax.Array,
+               p: int = field.P, bm: int = MAX_CHUNK,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused worker step: x (mk, d), w (d, r), cbar (r+1,) -> (d,) mod p."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    mk, d = x.shape
+    r = w.shape[1]
+    bm = min(bm, MAX_CHUNK, mk)  # row-block is also the 2nd contraction depth
+    mp = -(-mk // bm) * bm
+    x_p = jnp.pad(x, ((0, mp - mk), (0, 0)))  # zero rows: ḡ(0)=c0 but s*0ᵀ...
+    # NOTE: padded rows produce s=c̄_0 != 0, but contribute s * x_row = 0
+    # because the padded x rows are zero — the X̃ᵀ reduction kills them.
+    nl = field.n_limbs(p)
+    kernel = functools.partial(_coded_grad_kernel, p=p, nl=nl, r=r, rows=bm)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda b: (b, 0)),
+            pl.BlockSpec((d, r), lambda b: (0, 0)),
+            pl.BlockSpec((r + 1,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.int32),
+        interpret=interpret,
+    )(x_p, w, cbar.astype(jnp.int32))
+    return out[0]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fused mamba-1 selective scan (§Perf cell A).
+
+The pure-JAX chunked scan materializes h_all = (B, S, d_inner, n) in HBM —
+549 TB/layer for falcon-mamba prefill_32k, 34x the useful I/O, making the
+cell the worst roofline fraction of the 40-cell table.  The CUDA original
+keeps h in SRAM; this is the TPU-native equivalent: h lives in a VMEM
+scratch tile, the sequence is streamed through VMEM in blk_s tiles, and HBM
+traffic collapses to the kernel's operands + outputs:
+
+    inputs : x, dt (B,S,di), Bm, Cm (B,S,n), A (di,n), D (di)
+    outputs: y (B,S,di), h_last (B,di,n)
+
+Grid (B, di/blk_di, S/blk_s); the S axis is innermost/sequential, carrying
+h (blk_di, n) in scratch across S-tiles (same revisiting pattern as the
+modmatmul accumulator).  Within a tile a fori_loop steps time — sequential,
+but each step is a (blk_di x n) VPU op with zero HBM traffic.
+
+Validated against the pure-jnp oracle (ref_selective_scan / models.mamba) in
+interpret mode: tests/test_kernels_mamba.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, bm_ref, cm_ref, a_log_ref, d_ref, h0_ref,
+                 y_ref, hlast_ref, h_scratch, *, blk_s: int, s_steps: int):
+    """One (b, di-block, s-block) step."""
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0]          # (blk_di, n)
+
+    A = -jnp.exp(a_log_ref[...])            # (blk_di, n)
+    Dv = d_ref[...]                         # (blk_di,)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)        # (blk_di,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)      # (blk_di,)
+        b_t = bm_ref[0, t].astype(jnp.float32)       # (n,)
+        c_t = cm_ref[0, t].astype(jnp.float32)       # (n,)
+        a_t = jnp.exp(dt_t[:, None] * A)             # (blk_di, n)
+        h = a_t * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = (h * c_t[None, :]).sum(-1) + Dv * x_t  # (blk_di,)
+        y_ref[0, t] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, blk_s, step, h_scratch[...])
+    h_scratch[...] = h
+
+    @pl.when(si == s_steps - 1)
+    def _emit():
+        hlast_ref[0] = h
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, bm: jax.Array, cm: jax.Array,
+                   a_log: jax.Array, d: jax.Array, h0: jax.Array,
+                   blk_di: int = 512, blk_s: int = 256,
+                   interpret: bool | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Fused scan.  x/dt: (B,S,di); bm/cm: (B,S,n); a_log: (di,n); d: (di,);
+    h0: (B,di,n).  Returns (y (B,S,di) f32, h_last (B,di,n) f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S, di = x.shape
+    n = bm.shape[-1]
+    blk_di = min(blk_di, di)
+    blk_s = min(blk_s, S)
+    assert di % blk_di == 0, (di, blk_di)
+    Sp = -(-S // blk_s) * blk_s
+    if Sp != S:  # pad time with dt=0 -> a=1, b=0 (identity steps)
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        x, dt = jnp.pad(x, pad), jnp.pad(dt, pad)
+        bm, cm = jnp.pad(bm, pad), jnp.pad(cm, pad)
+    s_steps = Sp // blk_s
+    kernel = functools.partial(_scan_kernel, blk_s=blk_s, s_steps=s_steps)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, di // blk_di, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, blk_s, blk_di), lambda b, i, s: (b, s, i)),
+            pl.BlockSpec((1, blk_s, blk_di), lambda b, i, s: (b, s, i)),
+            pl.BlockSpec((1, blk_s, n), lambda b, i, s: (b, s, 0)),
+            pl.BlockSpec((1, blk_s, n), lambda b, i, s: (b, s, 0)),
+            pl.BlockSpec((blk_di, n), lambda b, i, s: (i, 0)),
+            pl.BlockSpec((blk_di,), lambda b, i, s: (i,)),
+            pl.BlockSpec((1, blk_di, n), lambda b, i, s: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_s, blk_di), lambda b, i, s: (b, s, i)),
+            pl.BlockSpec((1, blk_di, n), lambda b, i, s: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((blk_di, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bm, cm, a_log, d, h0)
+    return y[:, :S], h_last
+
+
+def ref_selective_scan(x, dt, bm, cm, a_log, d, h0):
+    """Pure-jnp oracle: naive sequential recurrence (f32)."""
+    B, S, di = x.shape
+    A = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs
+        x_t, dt_t = x_t.astype(jnp.float32), dt_t.astype(jnp.float32)
+        a_t = jnp.exp(dt_t[:, :, None] * A[None])
+        h = a_t * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :].astype(jnp.float32)
+        y_t = (h * c_t[:, None, :].astype(jnp.float32)).sum(-1) + d * x_t
+        return h, y_t
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                   bm.swapaxes(0, 1), cm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_last
+
+
+def io_bytes(B: int, S: int, di: int, n: int, in_bytes: int = 2,
+             out_bytes: int = 4) -> int:
+    """HBM traffic of the fused kernel: operands + outputs only.
+
+    Used by EXPERIMENTS.md §Perf to compute the kernel-adjusted memory term
+    for the mamba cells (the kernel cannot be Mosaic-compiled on this CPU
+    container; correctness is validated in interpret mode)."""
+    inputs = (2 * B * S * di + 2 * B * S * n) * in_bytes \
+        + (di * n + di) * 4 + B * di * n * 4
+    outputs = B * S * di * out_bytes + B * di * n * 4
+    return inputs + outputs

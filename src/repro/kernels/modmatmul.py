@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: exact matmul over F_p via 8-bit-limb MXU decomposition.
+
+The paper's workers spend their time on finite-field matmuls (Eq. 20).  On
+EC2 CPUs that is int64 scalar code; the TPU-native adaptation (DESIGN.md §3):
+
+  * split both operands into nl 8-bit limbs (nl = ceil(bits(p)/8): 3 for the
+    paper's 24-bit prime, 4 for our 30-bit extension);
+  * limbs are < 256 so they are EXACT in bf16; limb-pair products < 2^16 are
+    exact in the MXU's fp32 accumulation tree for up to 2^8 summands
+    -> contraction is tiled at bk <= 256;
+  * per (i, j, k) grid step the nl^2 limb-pair partial products land in
+    2nl-1 int32 VMEM accumulators (indexed by limb weight i+j), reduced
+    mod p every step so nothing exceeds int32;
+  * on the last k step the accumulators are recombined as
+    sum_s acc_s * 2^{8s} mod p with shift-by-doubling (never > 2p).
+
+Grid: (M/bm, N/bn, K/bk), k innermost (sequential accumulation).
+VMEM per step: bm*bk + bk*bn int32 inputs + (2nl-1)*bm*bn int32 scratch
+= (128*256 + 256*128 + 5*128*128)*4B ~ 0.9 MB with default blocks: well
+inside the ~16MB v5e VMEM budget, MXU-aligned (128-multiples).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import field
+
+# fp32 accumulation of limb products (< 2^16) is exact for <= 2^8 terms.
+MAX_BK = 256
+
+
+def _combine_limbs(accs, p):
+    """sum_s accs[s] * 2^{8s} mod p, values always < 2p (int32-safe)."""
+    out = accs[0]
+    for s in range(1, len(accs)):
+        out = field.addmod(out, field.double_mod(accs[s], field.LIMB_BITS * s, p),
+                           p)
+    return out
+
+
+def _modmatmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, p: int, nl: int,
+                      k_steps: int):
+    """One (i, j, k) grid step.  acc_ref: (2nl-1, bm, bn) int32 scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]  # (bm, bk) int32 field elements
+    b = b_ref[...]  # (bk, bn)
+    a_l = [((a >> (field.LIMB_BITS * i)) & field.LIMB_MASK).astype(jnp.bfloat16)
+           for i in range(nl)]
+    b_l = [((b >> (field.LIMB_BITS * j)) & field.LIMB_MASK).astype(jnp.bfloat16)
+           for j in range(nl)]
+    for i in range(nl):
+        for j in range(nl):
+            # MXU: bf16 x bf16 -> fp32, exact (limbs < 2^8, bk <= 2^8).
+            prod = jax.lax.dot_general(
+                a_l[i], b_l[j], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(jnp.int32)
+            s = i + j
+            acc_ref[s] = field.addmod(acc_ref[s], field.fmod(prod, p), p)
+
+    @pl.when(k == k_steps - 1)
+    def _emit():
+        accs = [acc_ref[s] for s in range(2 * nl - 1)]
+        o_ref[...] = _combine_limbs(accs, p)
+
+
+def modmatmul(a: jax.Array, b: jax.Array, p: int = field.P,
+              bm: int = 128, bn: int = 128, bk: int = MAX_BK,
+              interpret: bool | None = None) -> jax.Array:
+    """(a @ b) mod p.  a: (M, K) int32 in [0,p), b: (K, N) int32 in [0,p)."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    assert bk <= MAX_BK, "bk > 256 breaks fp32 exactness of limb products"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    M, K = a.shape
+    _, N = b.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    # pad to block multiples; zero padding is exact under mod-p matmul.
+    Mp, Np, Kp = (-(-M // bm) * bm), (-(-N // bn) * bn), (-(-K // bk) * bk)
+    a_p = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    b_p = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
+    nl = field.n_limbs(p)
+    k_steps = Kp // bk
+    kernel = functools.partial(_modmatmul_kernel, p=p, nl=nl, k_steps=k_steps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Np // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((2 * nl - 1, bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:M, :N]

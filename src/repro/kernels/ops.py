@@ -1,0 +1,34 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute under interpret=True; on TPU the
+same BlockSpecs compile to Mosaic.  `use_pallas=False` falls back to the
+pure-jnp oracle — handy for dry-run lowering where the interpreter's
+per-element python would be pointlessly slow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import field
+from repro.kernels import coded_grad as _cg
+from repro.kernels import modmatmul as _mm
+from repro.kernels import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("p", "use_pallas"))
+def modmatmul(a: jax.Array, b: jax.Array, p: int = field.P,
+              use_pallas: bool = True) -> jax.Array:
+    if use_pallas:
+        return _mm.modmatmul(a, b, p)
+    return _ref.modmatmul_ref(a, b, p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "use_pallas"))
+def coded_grad(x: jax.Array, w: jax.Array, cbar: jax.Array,
+               p: int = field.P, use_pallas: bool = True) -> jax.Array:
+    if use_pallas:
+        return _cg.coded_grad(x, w, cbar, p)
+    return _ref.coded_grad_ref(x, w, cbar, p)

@@ -1,0 +1,331 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's HloCostAnalysis counts every `while` body ONCE, so with scan-over-layers
+the reported flops/bytes/collectives are ~L-times too small.  This analyzer
+walks the call graph from ENTRY, multiplying each while body by its trip
+count (recovered from the loop-condition constant), giving per-device:
+
+  * dot flops          (2 * out_elems * contraction_size, incl. nested whiles)
+  * bytes accessed     (operands + outputs of every materializing op)
+  * collective bytes   (per kind; all-reduce counted 2x = RS+AG)
+
+This is the honest "from the compiled artifact" roofline source; dryrun.py
+cross-checks it against the analytic model-FLOPs count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+# ops that don't touch memory (aliases / metadata)
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _sig_dims(sig: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _sig_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _sig_dims(sig):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _strip_meta(line: str) -> str:
+    line = _COMMENT_RE.sub("", line)
+    for marker in (", metadata=", ", backend_config=", ", frontend_attributes=",
+                   ", sharding="):
+        i = line.find(marker)
+        if i != -1:
+            line = line[:i]
+    return line
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_sig: str
+    op: str
+    rest: str          # argument list + attrs (metadata-stripped)
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    symtab: dict[str, str]          # value name -> type signature
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    """Returns ({name: computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        if not line:
+            continue
+        if not line.startswith(" ") and ("{" in line) and ("=" not in line.split("{")[0]):
+            # computation header: "%name (...) -> type {" or "ENTRY %name ..."
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        s = _strip_meta(line)
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, sig, op, rest = m.groups()
+        # operand names: ONLY inside the argument parens (attrs like
+        # condition=%c / body=%b / calls=%f come after the closing paren).
+        args = rest.split(")")[0]
+        operands = _OPERAND_RE.findall(args)
+        cur.instrs.append(Instr(name, sig, op, rest, operands))
+        cur.symtab[name] = sig
+    assert entry, "no ENTRY computation found"
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
+    out_elems = 1
+    for _, dims in _sig_dims(instr.out_sig):
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    contract = 1
+    if m and instr.operands:
+        lhs_sig = symtab.get(instr.operands[0], "")
+        dims_list = _sig_dims(lhs_sig)
+        if dims_list:
+            lhs_dims = dims_list[0][1]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max s32 constant in the loop condition — JAX scans compare iter < N."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant" and "s32" in ins.out_sig:
+            m = re.match(r"(-?\d+)\)?", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] += v * mult
+
+
+def _attr_target(instr: Instr, attr: str) -> str | None:
+    m = re.search(attr + r"=%([\w.\-]+)", instr.rest)
+    return m.group(1) if m else None
+
+
+_UNARY_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose",
+                      "broadcast"}
+
+
+def _trace_to_param(comp: Computation, name: str) -> str | None:
+    """Follow unary chains back to a fusion parameter, if any."""
+    by_name = {i.name: i for i in comp.instrs}
+    seen = 0
+    while name in by_name and seen < 20:
+        ins = by_name[name]
+        if ins.op == "parameter":
+            return name
+        if ins.op in _UNARY_PASSTHROUGH and ins.operands:
+            name = ins.operands[0]
+            seen += 1
+            continue
+        return None
+    return None
+
+
+def _fusion_slice_discount(tgt: Computation, ins: Instr, nb: int) -> int:
+    """Fusions that only SLICE (or in-place UPDATE) big parameters touch the
+    slice, not the buffer — discount the buffer-sized operand charges.
+    This matters enormously inside scans: chunked readers would otherwise be
+    charged the full carried array every iteration."""
+    sliced: dict[str, list[int]] = {}
+    for si in tgt.instrs:
+        if si.op in ("dynamic-slice", "slice") and si.operands:
+            src = _trace_to_param(tgt, si.operands[0])
+            if src is not None:
+                sliced.setdefault(src, []).append(_sig_bytes(si.out_sig))
+        elif si.op == "dynamic-update-slice" and len(si.operands) > 1:
+            src = _trace_to_param(tgt, si.operands[0])
+            upd = _sig_bytes(tgt.symtab.get(si.operands[1], ""))
+            if src is not None:
+                buf = _sig_bytes(tgt.symtab.get(src, ""))
+                # in place: read+write slice instead of read buf + write buf
+                nb -= max(0, 2 * (buf - upd))
+    for src, slices in sliced.items():
+        buf = _sig_bytes(tgt.symtab.get(src, ""))
+        nb -= max(0, buf - sum(slices))
+    # NOTE: no output-size floor — a DUS-root fusion's output is the aliased
+    # full buffer, which the in-place update never re-writes.
+    return max(nb, 0)
+
+
+# Ops whose operands/outputs we charge to HBM.  Naked elementwise/convert/
+# broadcast chains are NOT charged: on TPU they fuse into their consumers
+# (XLA CPU leaves more of them unfused, which would inflate the memory term).
+# Fusions are charged at the call site — that IS the fusion boundary.
+_BYTE_OPS = {"fusion", "call", "dot", "convolution", "reduce", "sort",
+             "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+             "copy", "concatenate", "pad", "reduce-window", "select-and-scatter",
+             "transpose", "reverse", "cholesky", "triangular-solve", "rng",
+             "rng-bit-generator", "reshape", "slice"}
+
+
+def analyze(text: str, top_k: int = 0) -> dict:
+    """Trip-count-aware per-device cost.  top_k > 0 also returns the largest
+    collective / byte-moving ops (effective = per-op bytes x trip product)."""
+    comps, entry = parse_module(text)
+    memo: dict[str, Cost] = {}
+    drill: list[tuple[float, str, str]] = []
+
+    def line_cost(comp: Computation, ins: Instr, mult: float,
+                  cost_of) -> Cost:
+        """Cost of a single instruction (recursing into calls)."""
+        c = Cost()
+        if ins.op == "while":
+            body = _attr_target(ins, "body")
+            cond = _attr_target(ins, "condition")
+            trips = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                c.add(cost_of(body, mult * trips), trips)
+            if cond in comps:
+                c.add(cost_of(cond, mult * trips), trips)
+            c.bytes += _sig_bytes(ins.out_sig)   # carry moves once
+            return c
+        if ins.op in ("fusion", "call", "async-start"):
+            tgt = _attr_target(ins, "calls") or _attr_target(ins, "to_apply")
+            nb = _sig_bytes(ins.out_sig) + sum(
+                _sig_bytes(comp.symtab.get(o, "")) for o in ins.operands)
+            if tgt in comps:
+                sub = cost_of(tgt, mult)
+                c.flops += sub.flops              # dots inside fusions
+                for k, v in sub.coll.items():
+                    c.coll[k] += v
+                nb = _fusion_slice_discount(comps[tgt], ins, nb)
+            c.bytes += nb
+            if top_k:
+                drill.append((nb * mult, "bytes", f"{ins.op} {ins.name}"))
+            return c
+        if ins.op == "conditional":
+            for attr in ("true_computation", "false_computation"):
+                tgt = _attr_target(ins, attr)
+                if tgt in comps:
+                    c.add(cost_of(tgt, mult))
+            m = re.findall(r"branch_computations=\{([^}]*)\}", ins.rest)
+            if m:
+                for t in _OPERAND_RE.findall(m[0]):
+                    if t in comps:
+                        c.add(cost_of(t, mult))
+            c.bytes += _sig_bytes(ins.out_sig)
+            return c
+        base = ins.op.replace("-start", "")
+        if base in _COLLECTIVES:
+            nbytes = _sig_bytes(ins.out_sig)
+            if base == "all-reduce":
+                nbytes *= 2
+            c.coll[base] += nbytes
+            c.bytes += _sig_bytes(ins.out_sig)
+            if top_k:
+                drill.append((nbytes * mult, "collective",
+                              f"{base} {ins.name} {ins.out_sig[:60]}"))
+            return c
+        if ins.op in _FREE_OPS or ins.op.endswith("-done"):
+            return c
+        if ins.op in ("dot", "convolution"):
+            c.flops += _dot_flops(ins, comp.symtab)
+        if ins.op in _BYTE_OPS:
+            if ins.op == "dynamic-slice":
+                # reads only the slice it extracts
+                nb = 2 * _sig_bytes(ins.out_sig)
+            elif ins.op == "dynamic-update-slice" and len(ins.operands) > 1:
+                # in-place: read-modify-write of the slice region only
+                nb = 2 * _sig_bytes(comp.symtab.get(ins.operands[1], ""))
+            else:
+                nb = _sig_bytes(ins.out_sig) + sum(
+                    _sig_bytes(comp.symtab.get(o, "")) for o in ins.operands)
+            c.bytes += nb
+            if top_k and nb > 0:
+                drill.append((nb * mult, "bytes", f"{ins.op} {ins.name}"))
+        return c
+
+    def cost_of(name: str, mult: float = 1.0) -> Cost:
+        # memoize on name only for totals (mult affects only drill entries;
+        # drill dedup below keeps the max-mult occurrence).
+        comp = comps.get(name)
+        if comp is None:
+            return Cost()
+        if name in memo and not top_k:
+            return memo[name]
+        c = Cost()
+        for ins in comp.instrs:
+            c.add(line_cost(comp, ins, mult, cost_of))
+        memo[name] = c
+        return c
+
+    c = cost_of(entry)
+    out = {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collectives": dict(c.coll),
+        "collective_total": float(sum(c.coll.values())),
+    }
+    if top_k:
+        drill.sort(reverse=True)
+        out["top_ops"] = [
+            {"effective_bytes": round(b), "kind": k, "op": o}
+            for b, k, o in drill[:top_k]]
+    return out

@@ -1,0 +1,110 @@
+"""Serving driver: batched prefill + decode, optional Lagrange-coded LM head.
+
+`--coded-head` routes the vocab projection through core/coded_linear: the
+head is Lagrange-encoded over N logical shards (K data + T privacy masks),
+so any K+T shard results reconstruct exact logits — per-token straggler/
+failure tolerance for the TP group, demonstrated by `--kill-shard i`.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import RunConfig
+from repro.core import coded_linear as CL
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+
+
+def greedy_decode(cfg, rc, params, prompt, steps, coded=None, survivors=None):
+    """prompt: (B, S) tokens. Returns (B, steps) generated tokens."""
+    B, S = prompt.shape
+    logits, cache = M.prefill(cfg, rc, params, {"tokens": prompt},
+                              cache_len=S + steps)
+    outs = []
+    decode = jax.jit(lambda p, c, b: M.decode_step(cfg, rc, p, c, b))
+    for _ in range(steps):
+        if coded is not None:
+            # replace the head projection with the coded path
+            h = logits["hidden"]
+            lg = CL.coded_head_apply(coded["cfg"], h[:, -1], coded["shares"],
+                                     survivors=survivors)
+            tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+        logits, cache = decode(params, cache, {"tokens": tok})
+    return jnp.concatenate(outs, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=list(registry.ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--coded-head", action="store_true")
+    ap.add_argument("--coded-k", type=int, default=4)
+    ap.add_argument("--coded-t", type=int, default=1)
+    ap.add_argument("--coded-n", type=int, default=6)
+    ap.add_argument("--kill-shard", type=int, default=-1,
+                    help="simulate loss of one coded head shard")
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = registry.reduced_config(cfg)
+    rc = RunConfig(q_block=min(512, args.prompt_len),
+                   kv_block=min(1024, args.prompt_len),
+                   scan_chunk=min(128, args.prompt_len))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+
+    t0 = time.time()
+    if args.coded_head:
+        # vocab must divide K: pad config choice onto the reduced vocab
+        ccfg = CL.CodedLinearConfig(N=args.coded_n, K=args.coded_k,
+                                    T=args.coded_t)
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"]).astype(jnp.float32)
+        v = w.shape[1] - (w.shape[1] % args.coded_k)
+        w = w[:, :v]
+        shares = CL.encode_weights(ccfg, jax.random.PRNGKey(2), w)
+        survivors = None
+        if args.kill_shard >= 0:
+            survivors = np.array([i for i in range(ccfg.N)
+                                  if i != args.kill_shard])
+            print(f"killed shard {args.kill_shard}; decoding from "
+                  f"{len(survivors)} survivors (threshold {ccfg.threshold})")
+        # coded head needs hidden states: run uncoded backbone, coded head
+        B, S = prompt.shape
+        h, _ = M.backbone(cfg, rc, params, {"tokens": prompt})
+        lg = CL.coded_head_apply(ccfg, h[:, -1].astype(jnp.float32), shares,
+                                 survivors=survivors)
+        ref = (h[:, -1].astype(jnp.float32) @ w)
+        err = float(jnp.abs(lg - ref).max() / (jnp.abs(ref).max() + 1e-9))
+        tok_coded = jnp.argmax(lg, -1)
+        tok_ref = jnp.argmax(ref, -1)
+        agree = float((tok_coded == tok_ref).mean())
+        print(f"coded head: rel err {err:.4f}, argmax agreement {agree:.2%}, "
+              f"useful fraction K/N = {args.coded_k}/{args.coded_n}")
+        return 0
+    toks = greedy_decode(cfg, rc, params, prompt, args.gen)
+    dt = time.time() - t0
+    print(f"generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", np.asarray(toks[0])[:16])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,159 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba's mamba branch).
+
+Training/prefill uses a CHUNKED parallel scan: lax.scan over sequence chunks
+carrying the (B, d_inner, n) state, with an associative_scan inside each
+chunk.  This bounds the materialized (B, chunk, d_inner, n) tensor — the
+full-sequence associative scan would need B*S*d_inner*n elements (~TBs for
+falcon-mamba train_4k), the TPU-native equivalent of the paper's fused CUDA
+kernel trick (DESIGN.md hardware-adaptation).
+
+Decode is the exact single-step recurrence with (conv window, ssm state)
+carried in the cache — O(1) per token, the reason SSM archs run long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.layers import ParamSpec
+
+
+def mamba_template(cfg: ModelConfig, d_model: int | None = None
+                   ) -> dict[str, ParamSpec]:
+    d = d_model or cfg.d_model
+    di, n, dtr, cw = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.conv_width
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamSpec((cw, di), (None, "inner")),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * n), ("inner", None)),
+        "dt_proj": ParamSpec((dtr, di), (None, "inner")),
+        "dt_bias": ParamSpec((di,), ("inner",), init="ones"),
+        "A_log": ParamSpec((di, n), ("inner", None), dtype=jnp.float32,
+                           init="ones"),
+        "D": ParamSpec((di,), ("inner",), dtype=jnp.float32, init="ones"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _ssm_params(p: dict, x: jax.Array):
+    """x: (B, L, di) post-conv activations -> (dt, B_mat, C_mat)."""
+    dtr = p["dt_proj"].shape[0]
+    n = (p["x_proj"].shape[1] - dtr) // 2
+    proj = x @ p["x_proj"]                                   # (B, L, dtr+2n)
+    dt = jax.nn.softplus(proj[..., :dtr] @ p["dt_proj"]
+                         + p["dt_bias"].astype(proj.dtype))  # (B, L, di)
+    Bm = proj[..., dtr: dtr + n]                             # (B, L, n)
+    Cm = proj[..., dtr + n:]                                 # (B, L, n)
+    return dt.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _discretize(p, dt, Bm, x, dtype=jnp.float32):
+    """a = exp(dt*A) (B,L,di,n); b = dt*B*x (B,L,di,n)."""
+    A = -jnp.exp(p["A_log"])                                 # (di, n)
+    a = jnp.exp(dt[..., None] * A[None, None]).astype(dtype)
+    b = (dt[..., None] * Bm[:, :, None, :]
+         * x.astype(jnp.float32)[..., None]).astype(dtype)
+    return a, b
+
+
+def _chunk_scan(a, b, h0):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t within one chunk.
+
+    a,b: (B, L, di, n); h0: (B, di, n).  Returns (h_all (B,L,di,n), h_last).
+    The associative combine runs in the a/b dtype (bf16 under
+    RunConfig.ssm_dtype="bf16"); the carried state stays f32 at chunk
+    boundaries, bounding error accumulation to one chunk length.
+    """
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = (a_c.astype(jnp.float32) * h0[:, None]
+             + b_c.astype(jnp.float32))
+    return h_all, h_all[:, -1]
+
+
+def mamba_mix(cfg: ModelConfig, rc: RunConfig, p: dict, x_in: jax.Array,
+              h0: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Selective-scan core. x_in: (B, S, di) pre-conv. Returns (y, h_last)."""
+    B, S, di = x_in.shape
+    n = cfg.ssm_state
+    cw = cfg.conv_width
+    # depthwise causal conv
+    xp = jnp.pad(x_in, ((0, 0), (cw - 1, 0), (0, 0)))
+    x = sum(xp[:, i: i + S] * p["conv_w"][i][None, None] for i in range(cw))
+    x = jax.nn.silu(x + p["conv_b"].astype(x.dtype))
+    dt, Bm, Cm = _ssm_params(p, x)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+    chunk = min(rc.scan_chunk, S)
+    nchunks = -(-S // chunk)
+    Sp = nchunks * chunk
+    if Sp != S:  # pad with a=1, b=0 (identity steps)
+        pad = Sp - S
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    ab_dt = jnp.bfloat16 if rc.ssm_dtype == "bf16" else jnp.float32
+    a, b = _discretize(p, dt, Bm, x, ab_dt)
+
+    def chunk_step(h, inputs):
+        a_c, b_c, C_c, x_c = inputs      # (B, chunk, ...)
+        h_all, h_last = _chunk_scan(a_c, b_c, h)
+        y = jnp.einsum("blin,bln->bli", h_all, C_c)
+        y = y + p["D"][None, None] * x_c.astype(jnp.float32)
+        return h_last, y
+
+    def to_chunks(t):
+        return t.reshape(B, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h_last, ys = jax.lax.scan(chunk_step, h0,
+                              (to_chunks(a), to_chunks(b), to_chunks(Cm),
+                               to_chunks(x)))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
+    return y.astype(x_in.dtype), h_last
+
+
+def mamba_forward(cfg: ModelConfig, rc: RunConfig, p: dict, x: jax.Array
+                  ) -> jax.Array:
+    """Full mamba block. x: (B, S, d_model) -> (B, S, d_model)."""
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    y, _ = mamba_mix(cfg, rc, p, x_in)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_core(cfg: ModelConfig, p: dict, x_in: jax.Array,
+                      cache: dict) -> tuple[jax.Array, dict]:
+    """Single-token recurrence on the pre-conv branch input.
+
+    x_in: (B, 1, di); cache: conv (B, cw-1, di), ssm (B, di, n).
+    Returns (y (B, 1, di), new cache).  O(1) in context length.
+    """
+    conv_buf = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in],
+                               axis=1)                      # (B, cw, di)
+    xc = jnp.einsum("bwi,wi->bi", conv_buf, p["conv_w"])[:, None]
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xc.dtype))
+    dt, Bm, Cm = _ssm_params(p, xc)              # (B, 1, ...)
+    a, b = _discretize(p, dt, Bm, xc)            # (B, 1, di, n)
+    h = a[:, 0] * cache["ssm"] + b[:, 0]         # (B, di, n)
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0])[:, None]
+    y = y + p["D"][None, None] * xc.astype(jnp.float32)
+    return y.astype(x_in.dtype), {"conv": conv_buf[:, 1:], "ssm": h}
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict
+                 ) -> tuple[jax.Array, dict]:
+    """Full-block single-token step.  x: (B, 1, d_model)."""
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)          # (B, 1, di)
+    y, new_cache = mamba_decode_core(cfg, p, x_in, cache)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, new_cache

@@ -1,0 +1,497 @@
+"""Model assembly: segments of homogeneous blocks, scan-over-layers, loss.
+
+A model is a sequence of SEGMENTS from ModelConfig.block_pattern; a segment
+with count > 1 is a lax.scan over stacked layer params (compile time is
+independent of depth), count == 1 is inlined.  Kinds:
+
+  dense        attn + mlp                      (llama/mistral/qwen family)
+  dense_global dense with full attention even when cfg.sliding_window is set
+  moe          attn + MoE (+ optional parallel dense residual — arctic)
+  mamba        mamba-1 block                    (falcon-mamba)
+  hybrid       parallel attn ∥ mamba heads + mlp (hymba); SWA by default
+  hybrid_global hybrid with full attention      (hymba's few global layers)
+  enc / dec    whisper encoder / decoder (cross-attention) blocks
+
+Forward modes: `loss` (train), `prefill` (returns cache), `decode` (one
+token, cache update).  The vocab loss is seq-chunked so the (B,S,V) logits
+tensor never materializes (mandatory at 150k vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers, mamba, moe
+from repro.models.layers import ParamSpec
+from repro.parallel.rules import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig) -> ParamSpec:
+    return ParamSpec((cfg.d_model,), (None,), init="ones")
+
+
+def block_template(cfg: ModelConfig, kind: str) -> dict[str, Any]:
+    base = kind.replace("_global", "")
+    t: dict[str, Any] = {}
+    if base in ("dense", "moe", "hybrid", "enc", "dec"):
+        t["norm1"] = _norm(cfg)
+        t["attn"] = layers.attn_template(cfg)
+    if base in ("dense", "enc", "dec", "hybrid"):
+        t["norm2"] = _norm(cfg)
+        t["mlp"] = layers.mlp_template(cfg)
+    if base == "moe":
+        t["norm2"] = _norm(cfg)
+        t["moe"] = moe.moe_template(cfg)
+    if base == "mamba":
+        t["norm1"] = _norm(cfg)
+        t["mamba"] = mamba.mamba_template(cfg)
+    if base == "hybrid":
+        t["norm_m"] = _norm(cfg)
+        t["mamba"] = mamba.mamba_template(cfg)
+    if base == "dec":
+        t["norm_x"] = _norm(cfg)
+        t["xattn"] = layers.attn_template(cfg)
+    return t
+
+
+def model_template(cfg: ModelConfig) -> dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    t: dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "final_norm": _norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    for si, (kind, count) in enumerate(cfg.block_pattern):
+        t[f"seg{si}"] = {"kind": kind, "count": count,
+                         "params": block_template(cfg, kind)}
+    if cfg.is_encoder_decoder:
+        t["enc"] = {"kind": "enc", "count": cfg.num_encoder_layers,
+                    "params": block_template(cfg, "enc")}
+        t["enc_norm"] = _norm(cfg)
+    return t
+
+
+def _iter_leaves(tree, path=()):
+    if isinstance(tree, ParamSpec):
+        yield path, tree
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            if k in ("kind", "count"):
+                continue
+            yield from _iter_leaves(v, path + (k,))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.bfloat16) -> Params:
+    """Materialize the template (smoke tests / real training).
+
+    Segment leaves get a stacked leading layer dim when count > 1 (scanned).
+    """
+    tmpl = model_template(cfg)
+
+    def build(tree, path, stack):
+        if isinstance(tree, ParamSpec):
+            shape = ((stack, *tree.shape) if stack > 1 else tree.shape)
+            k = jax.random.fold_in(key, hash(path) % (2 ** 31))
+            if tree.init == "zeros":
+                return jnp.zeros(shape, tree.dtype)
+            if tree.init == "ones":
+                return jnp.ones(shape, tree.dtype)
+            fan_in = tree.shape[-2] if len(tree.shape) >= 2 else tree.shape[-1]
+            return (jax.random.normal(k, shape, jnp.float32)
+                    * (fan_in ** -0.5)).astype(tree.dtype)
+        if isinstance(tree, dict):
+            if "kind" in tree:
+                return {"params": build(tree["params"], path + ("params",),
+                                        tree["count"])}
+            return {k: build(v, path + (k,), stack) for k, v in tree.items()}
+        return tree
+
+    return {k: build(v, (k,), 1) for k, v in tmpl.items()}
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct tree (no allocation) for AOT lowering."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0),
+                                              dtype))
+
+
+def param_specs(cfg: ModelConfig, mesh, seq_parallel: bool = False) -> Params:
+    """PartitionSpec tree matching init_params structure."""
+    from repro.parallel import rules
+    tmpl = model_template(cfg)
+
+    def build(tree, stacked):
+        if isinstance(tree, ParamSpec):
+            shape = ((1,) + tree.shape) if stacked else tree.shape
+            logical = ((None,) + tree.logical) if stacked else tree.logical
+            return rules.spec_for(mesh, shape, logical, seq_parallel)
+        if isinstance(tree, dict):
+            if "kind" in tree:
+                return {"params": build(tree["params"], tree["count"] > 1)}
+            return {k: build(v, stacked) for k, v in tree.items()}
+        return tree
+
+    return {k: build(v, False) for k, v in tmpl.items()}
+
+
+# ---------------------------------------------------------------------------
+# block forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+def _window(cfg: ModelConfig, kind: str) -> int | None:
+    if kind.endswith("_global"):
+        return None
+    return cfg.sliding_window
+
+
+def block_forward(cfg: ModelConfig, rc: RunConfig, kind: str, p: Params,
+                  x: jax.Array, positions: jax.Array,
+                  enc_out: jax.Array | None = None,
+                  collect_cache: bool = False):
+    """One block. Returns (x, cache_entry_or_None)."""
+    base = kind.replace("_global", "")
+    window = _window(cfg, kind)
+    cache = {}
+    if base in ("dense", "moe", "enc", "dec", "hybrid"):
+        h = layers.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        causal = base != "enc"
+        q, k, v = layers.attn_qkv(cfg, p["attn"], h, positions)
+        if collect_cache:
+            cache["k"], cache["v"] = k, v
+        # context-parallel path when head count doesn't divide the TP axis
+        # (GSPMD's fallbacks there are replication or score all-reduces).
+        from repro.parallel.rules import _ACTIVE
+        mesh = _ACTIVE["mesh"]
+        S_here = x.shape[1]
+        use_cp = (mesh is not None and "model" in mesh.axis_names
+                  and cfg.num_heads % mesh.shape["model"] != 0
+                  and S_here % mesh.shape["model"] == 0
+                  and S_here == q.shape[1] and S_here > 1)
+        if use_cp:
+            attn_out = layers.context_parallel_attention(
+                mesh, q, k, v, causal=causal, window=window,
+                q_block=rc.q_block, kv_block=rc.kv_block,
+                softcap=cfg.attn_logit_softcap, compute_dtype=rc.attn_dtype)
+        else:
+            attn_out = layers.blockwise_attention(
+                q, k, v, causal=causal, window=window, q_block=rc.q_block,
+                kv_block=rc.kv_block, softcap=cfg.attn_logit_softcap,
+                compute_dtype=rc.attn_dtype)
+        B, S, _ = x.shape
+        attn_out = attn_out.reshape(B, S, -1) @ p["attn"]["wo"]
+        if base == "hybrid":
+            hm = layers.rmsnorm(x, p["norm_m"], cfg.norm_eps)
+            xz = hm @ p["mamba"]["in_proj"]
+            x_in, z = jnp.split(xz, 2, axis=-1)
+            ym, h_last = mamba.mamba_mix(cfg, rc, p["mamba"], x_in)
+            if collect_cache:
+                cw = cfg.conv_width
+                cache["conv"] = x_in[:, -(cw - 1):]
+                cache["ssm"] = h_last
+            mamba_out = (ym * jax.nn.silu(z)) @ p["mamba"]["out_proj"]
+            x = x + attn_out + mamba_out
+        else:
+            x = x + attn_out
+        x = constrain(x, ("batch", "seq", None))
+        if base == "dec":
+            hx = layers.rmsnorm(x, p["norm_x"], cfg.norm_eps)
+            # cross-attention: kv from encoder output, not cached per step
+            B, S, _ = x.shape
+            Se = enc_out.shape[1]
+            q = (hx @ p["xattn"]["wq"]).reshape(B, S, cfg.num_heads,
+                                                cfg.head_dim)
+            k = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, cfg.num_kv_heads,
+                                                     cfg.head_dim)
+            v = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, cfg.num_kv_heads,
+                                                     cfg.head_dim)
+            xo = layers.blockwise_attention(q, k, v, causal=False,
+                                            q_block=rc.q_block,
+                                            kv_block=rc.kv_block)
+            x = x + xo.reshape(B, S, -1) @ p["xattn"]["wo"]
+        h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if base == "moe":
+            x = x + moe.moe_forward(cfg, rc, p["moe"], h2)
+        else:
+            x = x + layers.mlp_forward(cfg, p["mlp"], h2)
+    elif base == "mamba":
+        h = layers.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        xz = h @ p["mamba"]["in_proj"]
+        x_in, z = jnp.split(xz, 2, axis=-1)
+        ym, h_last = mamba.mamba_mix(cfg, rc, p["mamba"], x_in)
+        if collect_cache:
+            cw = cfg.conv_width
+            cache["conv"] = x_in[:, -(cw - 1):]
+            cache["ssm"] = h_last
+        x = x + (ym * jax.nn.silu(z)) @ p["mamba"]["out_proj"]
+    else:
+        raise ValueError(kind)
+    x = constrain(x, ("batch", "seq", None))
+    return x, (cache if collect_cache else None)
+
+
+def _segment_forward(cfg, rc, seg_kind, count, seg_params, x, positions,
+                     enc_out=None, collect_cache=False):
+    """Scan a homogeneous segment (or inline a single block)."""
+    fwd = functools.partial(block_forward, cfg, rc, seg_kind,
+                            enc_out=enc_out, collect_cache=collect_cache)
+    if rc.remat == "block":
+        fwd = jax.checkpoint(fwd)
+    if count == 1:
+        x, cache = fwd(seg_params, x, positions)
+        return x, (jax.tree.map(lambda t: t[None], cache)
+                   if collect_cache else None)
+
+    def body(carry, layer_params):
+        y, c = fwd(layer_params, carry, positions)
+        return y, c
+
+    x, caches = jax.lax.scan(body, x, seg_params)
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# full model forwards
+# ---------------------------------------------------------------------------
+
+def embed_input(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    if "embeds" in batch:                 # stubbed modality frontend
+        return batch["embeds"].astype(params["embed"].dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return constrain(x, ("batch", "seq", None))
+
+
+def backbone(cfg: ModelConfig, rc: RunConfig, params: Params, batch: dict,
+             collect_cache: bool = False):
+    """Runs embedding + all segments.  Returns (hidden, caches)."""
+    x = embed_input(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        e = batch["enc_embeds"].astype(x.dtype)
+        Be, Se = e.shape[:2]
+        epos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (Be, Se))
+        e, _ = _segment_forward(cfg, rc, "enc", cfg.num_encoder_layers,
+                                params["enc"]["params"], e, epos)
+        enc_out = layers.rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+    caches = {}
+    for si, (kind, count) in enumerate(cfg.block_pattern):
+        x, cache = _segment_forward(
+            cfg, rc, kind, count, params[f"seg{si}"]["params"], x, positions,
+            enc_out=enc_out, collect_cache=collect_cache)
+        if collect_cache:
+            caches[f"seg{si}"] = cache
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def lm_head(cfg: ModelConfig, params: Params, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w
+
+
+def chunked_loss(cfg: ModelConfig, rc: RunConfig, params: Params,
+                 h: jax.Array, labels: jax.Array) -> jax.Array:
+    """Seq-chunked softmax CE: (B,S,V) logits never materialize."""
+    B, S, d = h.shape
+    chunk = min(rc.loss_chunk, S)
+    nch = -(-S // chunk)
+    Sp = nch * chunk
+    if Sp != S:
+        h = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, Sp - S)),
+                         constant_values=-1)
+    hc = h.reshape(B, nch, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nch, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_ce(hx, lx):
+        logits = lm_head(cfg, params, hx).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1)[..., 0]
+        valid = (lx >= 0).astype(jnp.float32)
+        return ((logz - gold) * valid).sum(), valid.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, c = chunk_ce(*xs)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, rc: RunConfig, params: Params,
+            batch: dict) -> jax.Array:
+    h, _ = backbone(cfg, rc, params, batch)
+    return chunked_loss(cfg, rc, params, h, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, rc: RunConfig, params: Params, batch: dict,
+            cache_len: int):
+    """Prefill: returns (last-position logits, decode cache)."""
+    h, caches = backbone(cfg, rc, params, batch, collect_cache=True)
+    S = h.shape[1]
+    logits = lm_head(cfg, params, h[:, -1:])
+    cache = init_cache(cfg, rc, h.shape[0], cache_len, dtype=h.dtype)
+    for si, (kind, count) in enumerate(cfg.block_pattern):
+        src = caches[f"seg{si}"]
+        dst = cache[f"seg{si}"]
+        if "k" in dst:
+            size = dst["k"].shape[2]
+            if S >= size:
+                # ring alignment: token t lives at slot t % size
+                last = jax.tree.map(lambda t: t[:, :, -size:], src)
+                shift = S % size
+                dst["k"] = jnp.roll(last["k"], shift, axis=2)
+                dst["v"] = jnp.roll(last["v"], shift, axis=2)
+            else:
+                dst["k"] = dst["k"].at[:, :, :S].set(src["k"])
+                dst["v"] = dst["v"].at[:, :, :S].set(src["v"])
+        if "ssm" in dst:
+            dst["ssm"] = src["ssm"].astype(jnp.float32)
+            dst["conv"] = src["conv"]
+    cache["index"] = jnp.int32(S)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, rc: RunConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache pytree.  SWA segments get ring buffers of window size;
+    global/full segments get max_len; mamba segments get O(1) state."""
+    cache: dict[str, Any] = {"index": jnp.int32(0)}
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    for si, (kind, count) in enumerate(cfg.block_pattern):
+        base = kind.replace("_global", "")
+        seg: dict[str, Any] = {}
+        if base in ("dense", "moe", "hybrid", "dec", "enc"):
+            window = _window(cfg, kind)
+            size = min(max_len, window) if window else max_len
+            seg["k"] = jnp.zeros((count, batch, size, kh, hd), dtype)
+            seg["v"] = jnp.zeros((count, batch, size, kh, hd), dtype)
+        if base in ("mamba", "hybrid"):
+            seg["conv"] = jnp.zeros((count, batch, cfg.conv_width - 1,
+                                     cfg.d_inner), dtype)
+            seg["ssm"] = jnp.zeros((count, batch, cfg.d_inner, cfg.ssm_state),
+                                   jnp.float32)
+        cache[f"seg{si}"] = seg
+    return cache
+
+
+def _decode_attn(cfg, p, x, seg_cache_layer, index, window, positions):
+    """One layer's cached attention at decode time (ring buffer for SWA)."""
+    B = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = layers.attn_qkv(cfg, p, x, positions)
+    kc, vc = seg_cache_layer["k"], seg_cache_layer["v"]
+    size = kc.shape[1]
+    slot = index % size if window else index
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, 1)
+    filled = jnp.minimum(index + 1, size)
+    out = layers.decode_attention(q, kc, vc, filled, window=None)
+    return out.reshape(B, 1, -1) @ p["wo"], {"k": kc, "v": vc}
+
+
+def decode_block(cfg: ModelConfig, rc: RunConfig, kind: str, p: Params,
+                 x: jax.Array, cache_layer: dict, index: jax.Array,
+                 enc_out: jax.Array | None = None):
+    base = kind.replace("_global", "")
+    window = _window(cfg, kind)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+    new_cache = {}
+    if base in ("dense", "moe", "dec", "hybrid"):
+        hnorm = layers.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out, kv = _decode_attn(cfg, p["attn"], hnorm, cache_layer, index,
+                                    window, positions)
+        new_cache.update(kv)
+        if base == "hybrid":
+            hm = layers.rmsnorm(x, p["norm_m"], cfg.norm_eps)
+            xz = hm @ p["mamba"]["in_proj"]
+            x_in, z = jnp.split(xz, 2, axis=-1)
+            ym, mcache = mamba.mamba_decode_core(
+                cfg, p["mamba"], x_in,
+                {"conv": cache_layer["conv"], "ssm": cache_layer["ssm"]})
+            new_cache.update(mcache)
+            x = x + attn_out + (ym * jax.nn.silu(z)) @ p["mamba"]["out_proj"]
+        else:
+            x = x + attn_out
+        if base == "dec":
+            hx = layers.rmsnorm(x, p["norm_x"], cfg.norm_eps)
+            Se = enc_out.shape[1]
+            q = (hx @ p["xattn"]["wq"]).reshape(B, 1, cfg.num_heads,
+                                                cfg.head_dim)
+            k = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, cfg.num_kv_heads,
+                                                     cfg.head_dim)
+            v = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, cfg.num_kv_heads,
+                                                     cfg.head_dim)
+            xo = layers.decode_attention(q, k, v, jnp.int32(Se))
+            x = x + xo.reshape(B, 1, -1) @ p["xattn"]["wo"]
+        h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if base == "moe":
+            x = x + moe.moe_forward(cfg, rc, p["moe"], h2)
+        else:
+            x = x + layers.mlp_forward(cfg, p["mlp"], h2)
+    elif base == "mamba":
+        hnorm = layers.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        xz = hnorm @ p["mamba"]["in_proj"]
+        x_in, z = jnp.split(xz, 2, axis=-1)
+        ym, mcache = mamba.mamba_decode_core(
+            cfg, p["mamba"], x_in,
+            {"conv": cache_layer["conv"], "ssm": cache_layer["ssm"]})
+        new_cache.update(mcache)
+        x = x + (ym * jax.nn.silu(z)) @ p["mamba"]["out_proj"]
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, rc: RunConfig, params: Params,
+                cache: dict, batch: dict):
+    """One decode step: batch {'tokens': (B,1)} -> (logits (B,1,V), cache)."""
+    x = embed_input(cfg, params, batch)
+    index = cache["index"]
+    enc_out = batch.get("enc_out")
+    new_cache: dict[str, Any] = {"index": index + 1}
+    for si, (kind, count) in enumerate(cfg.block_pattern):
+        seg_params = params[f"seg{si}"]["params"]
+        seg_cache = cache[f"seg{si}"]
+        if count == 1:
+            layer_p = jax.tree.map(lambda t: t, seg_params)
+            layer_c = jax.tree.map(lambda t: t[0], seg_cache)
+            x, nc = decode_block(cfg, rc, kind, layer_p, x, layer_c, index,
+                                 enc_out)
+            new_cache[f"seg{si}"] = jax.tree.map(lambda t: t[None], nc)
+        else:
+            def body(carry, xs):
+                layer_p, layer_c = xs
+                y, nc = decode_block(cfg, rc, kind, layer_p, carry, layer_c,
+                                     index, enc_out)
+                return y, nc
+
+            x, ncs = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_cache[f"seg{si}"] = ncs
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(cfg, params, x)
+    return logits, new_cache

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer: GShard-style top-k dispatch (+ sort-based alt).
+
+Default path is capacity-based einsum dispatch (GSPMD-robust: the dispatch
+einsums lower to all-to-alls when experts are sharded over 'model' and tokens
+over 'data').  The sort-based path avoids the dispatch-einsum FLOPs bloat and
+is the §Perf hillclimb candidate for the MoE cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.layers import ParamSpec
+
+
+def moe_template(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    t = {
+        "router": ParamSpec((d, e), ("embed", None), dtype=jnp.float32),
+        "w1": ParamSpec((e, d, ff), ("experts", "embed", None)),
+        "w3": ParamSpec((e, d, ff), ("experts", "embed", None)),
+        "w2": ParamSpec((e, ff, d), ("experts", None, "embed")),
+    }
+    if cfg.dense_residual_d_ff:
+        dff = cfg.dense_residual_d_ff
+        t["res_w1"] = ParamSpec((d, dff), ("embed", "ffn"))
+        t["res_w3"] = ParamSpec((d, dff), ("embed", "ffn"))
+        t["res_w2"] = ParamSpec((dff, d), ("ffn", "embed"))
+    return t
+
+
+def _top_k_gating(cfg: ModelConfig, router_logits: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """(..., E) logits -> (weights, indices) both (..., k), softmax-normed."""
+    k = cfg.experts_per_token
+    weights, idx = jax.lax.top_k(router_logits, k)
+    weights = jax.nn.softmax(weights.astype(jnp.float32), axis=-1)
+    return weights, idx
+
+
+def moe_forward_einsum(cfg: ModelConfig, rc: RunConfig, p: dict,
+                       x: jax.Array) -> jax.Array:
+    """GShard dispatch.  x: (B, S, d) -> (B, S, d).
+
+    Tokens are split into groups of rc.moe_group_size (default: one group
+    per batch row); capacity per (group, expert) C = ceil(g * k * cf / E).
+    Over-capacity tokens are dropped (combine weight zero) — standard
+    Switch/GShard semantics.  Smaller groups cut the (tokens, E, C)
+    dispatch/combine tensors and their all-to-alls linearly in C (§Perf).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    g = S if not rc.moe_group_size else min(rc.moe_group_size, B * S)
+    if (B * S) % g:
+        g = S
+    xg = x.reshape(B * S // g, g, d)
+    G = xg.shape[0]
+    C = max(4, int(-(-g * k * cfg.capacity_factor // E)))
+    C = min(C, g)
+    cdt = jnp.bfloat16 if rc.moe_combine_dtype == "bf16" else jnp.float32
+    logits = xg.astype(jnp.float32) @ p["router"]           # (G, g, E)
+    weights, idx = _top_k_gating(cfg, logits)               # (G, g, k)
+    # expert-assignment one-hots, then position-in-expert via cumsum
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # (G, g, k, E)
+    assign = onehot * weights[..., None]
+    flat = onehot.reshape(G, g * k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, k, E)
+    keep = pos < C
+    assign = (assign * keep).astype(cdt)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                            dtype=cdt)[..., :C]             # (G, g, k, E, C)
+    combine = (assign[..., None] * pos_oh).sum(2)           # (G, g, E, C)
+    dispatch = (combine > 0).astype(x.dtype)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, xg)         # all-to-all in SPMD
+    h = jnp.einsum("becd,edf->becf", xe, p["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", xe, p["w3"])
+    ye = jnp.einsum("becf,efd->becd", h, p["w2"])
+    out = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye)
+    out = out.reshape(B, S, d)
+    if cfg.dense_residual_d_ff:
+        res = jax.nn.silu(x @ p["res_w1"]) * (x @ p["res_w3"])
+        out = out + res @ p["res_w2"]
+    return out
+
+
+def moe_forward_sort(cfg: ModelConfig, rc: RunConfig, p: dict,
+                     x: jax.Array) -> jax.Array:
+    """Sort-based dispatch: no (E*C)-wide one-hot matmuls.
+
+    Tokens are sorted by assigned expert; each expert processes a contiguous
+    padded slab.  FLOPs = gather + expert matmuls only.  (§Perf candidate.)
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    C = max(4, int(-(-N * k * cfg.capacity_factor // E)))
+    xf = x.reshape(N, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    weights, idx = _top_k_gating(cfg, logits)               # (N, k)
+    flat_e = idx.reshape(-1)                                 # (N*k,)
+    order = jnp.argsort(flat_e)                              # stable
+    sorted_e = flat_e[order]
+    # position within expert for capacity check
+    same = jnp.cumsum(jnp.ones_like(sorted_e), 0) - 1
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))    # (E,)
+    pos_in_e = same - seg_start[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)   # drop -> scratch
+    token_of = order // k
+    # build (E*C+1) slab of token rows
+    slab = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xf[token_of])
+    xe = slab[: E * C].reshape(E, C, d)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * C, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], 0)
+    w_flat = weights.reshape(-1)[order]
+    contrib = ye[slot] * w_flat[:, None].astype(ye.dtype)
+    out = jnp.zeros((N, d), x.dtype).at[token_of].add(contrib)
+    if cfg.dense_residual_d_ff:
+        res = jax.nn.silu(xf @ p["res_w1"]) * (xf @ p["res_w3"])
+        out = out + res @ p["res_w2"]
+    return out.reshape(B, S, d)
+
+
+def moe_forward(cfg: ModelConfig, rc: RunConfig, p: dict, x: jax.Array
+                ) -> jax.Array:
+    if rc.moe_impl == "sort":
+        return moe_forward_sort(cfg, rc, p, x)
+    return moe_forward_einsum(cfg, rc, p, x)

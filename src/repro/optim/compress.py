@@ -1,0 +1,46 @@
+"""Beyond-paper: gradient compression from the paper's own quantizer.
+
+The paper's stochastic quantizer (Eq. 8) is unbiased — exactly the property a
+compressed data-parallel all-reduce needs.  We quantize per-leaf gradients to
+`bits`-bit integers with a per-leaf scale before the (simulated) cross-pod
+reduction, cutting DCN bytes by 32/bits at zero bias (variance shows up as
+the sigma^2 term of Theorem 1's rate, same trade as the paper's lw knob).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_grad(key: jax.Array, g: jax.Array, bits: int = 8
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Unbiased stochastic fixed-point quantization. Returns (q int, scale)."""
+    g = g.astype(jnp.float32)
+    maxval = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    levels = (1 << (bits - 1)) - 1
+    scaled = g / maxval * levels
+    floor = jnp.floor(scaled)
+    frac = scaled - floor
+    u = jax.random.uniform(key, g.shape)
+    q = floor + (u < frac)
+    return q.astype(jnp.int32), maxval / levels
+
+
+def dequantize_grad(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(key: jax.Array, grads, bits: int = 8):
+    """Quantize every leaf (fresh key per leaf); returns (q_tree, scales)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales = [], []
+    for k, g in zip(keys, leaves):
+        q, s = quantize_grad(k, g, bits)
+        qs.append(q)
+        scales.append(s)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
+
+
+def decompress_tree(q_tree, scales):
+    return jax.tree.map(dequantize_grad, q_tree, scales)

@@ -1,0 +1,94 @@
+"""Optimizers from scratch (no optax): AdamW + SGD-momentum, schedules,
+global-norm clipping, and the paper-derived quantized gradient compressor.
+
+State layout mirrors the param tree (scan-stacked leaves keep their leading
+layer dim), so the same sharding specs apply to optimizer state — the FSDP
+memory math in DESIGN.md §5 depends on this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | sgd
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    compress: str = "none"           # none | stochastic_quant (optim/compress)
+    compress_bits: int = 8
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * cos
+
+
+def init_state(cfg: OptimizerConfig, params: Any) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "adamw":
+        state["mu"] = jax.tree.map(zeros32, params)
+        state["nu"] = jax.tree.map(zeros32, params)
+    else:
+        state["mom"] = jax.tree.map(zeros32, params)
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def apply_updates(cfg: OptimizerConfig, params: Any, grads: Any,
+                  state: dict) -> tuple[Any, dict, dict]:
+    """One optimizer step.  Returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    if cfg.name == "adamw":
+        mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                          state["nu"], grads)
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = {"step": step, "mu": mu, "nu": nu}
+    else:
+        mom = jax.tree.map(lambda m, g: cfg.momentum * m + g,
+                           state["mom"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mom)
+        new_state = {"step": step, "mom": mom}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,124 @@
+"""Logical-axis -> PartitionSpec rules (divisible-or-replicate policy).
+
+Every parameter template leaf carries logical axis names (ParamSpec.logical);
+activations are constrained via `act_spec`.  The policy:
+
+  * `embed`   -> 'data'   (FSDP: weights sharded over the DP axis, all-
+                           gathered per layer by GSPMD — ZeRO-3 style)
+  * `heads` / `kv_heads` / `ffn` / `vocab` / `inner` / `experts` -> 'model'
+  * `batch`   -> ('pod','data') on the multi-pod mesh, 'data' otherwise
+  * `seq`     -> 'model' when RunConfig.seq_parallel (activations only)
+  * a dim is sharded ONLY if its size divides the mesh-axes product —
+    otherwise it silently replicates (awkward head counts: 25, 56, 6).
+
+This single policy covers all 10 assigned architectures (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec
+
+
+def logical_rules(mesh: Mesh, seq_parallel: bool = False
+                  ) -> dict[str, tuple[str, ...]]:
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    model_axes = ("model",) if "model" in axes else ()
+    return {
+        "batch": batch_axes,
+        "embed": tuple(a for a in ("data",) if a in axes),
+        "heads": model_axes,
+        "kv_heads": model_axes,
+        "ffn": model_axes,
+        "vocab": model_axes,
+        "experts": model_axes,
+        "inner": model_axes,
+        "seq": model_axes if seq_parallel else (),
+        "kv_seq": model_axes,   # long-context decode: shard the cache on seq
+    }
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def spec_for(mesh: Mesh, shape: tuple[int, ...],
+             logical: tuple[str | None, ...],
+             seq_parallel: bool = False) -> P:
+    """PartitionSpec for one array, applying divisible-or-replicate.
+
+    Count-qualified names `heads[n]` shard only when BOTH the dim size and
+    the head count n divide the axis (see layers.attn_template)."""
+    rules = logical_rules(mesh, seq_parallel)
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        count = None
+        if name and name.endswith("]") and "[" in name:
+            base, cnt = name[:-1].split("[")
+            name, count = base, int(cnt)
+        axes = rules.get(name, ()) if name else ()
+        axes = tuple(a for a in axes if a not in used)
+        size = _axes_size(mesh, axes)
+        ok = bool(axes) and dim % size == 0 and (
+            count is None or count % size == 0)
+        if ok:
+            parts.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for(mesh: Mesh, spec_leaf: ParamSpec, stacked: bool = False,
+                 seq_parallel: bool = False) -> NamedSharding:
+    shape = ((1,) + spec_leaf.shape) if stacked else spec_leaf.shape
+    logical = ((None,) + spec_leaf.logical) if stacked else spec_leaf.logical
+    return NamedSharding(mesh, spec_for(mesh, shape, logical, seq_parallel))
+
+
+def act_spec(mesh: Mesh, x_shape: tuple[int, ...],
+             logical: tuple[str | None, ...],
+             seq_parallel: bool = False) -> P:
+    return spec_for(mesh, x_shape, logical, seq_parallel)
+
+
+_ACTIVE: dict[str, Any] = {"mesh": None, "seq_parallel": False}
+
+
+class use_rules_mesh:
+    """Context manager: activates activation-sharding constraints.
+
+    The launcher wraps lowering/execution in this; without it `constrain`
+    is a no-op so models run unannotated on a single device (smoke tests).
+    """
+
+    def __init__(self, mesh: Mesh, seq_parallel: bool = False):
+        self.state = (mesh, seq_parallel)
+
+    def __enter__(self):
+        self.prev = (_ACTIVE["mesh"], _ACTIVE["seq_parallel"])
+        _ACTIVE["mesh"], _ACTIVE["seq_parallel"] = self.state
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE["mesh"], _ACTIVE["seq_parallel"] = self.prev
+        return False
+
+
+def constrain(x: jax.Array, logical: tuple[str | None, ...]) -> jax.Array:
+    """with_sharding_constraint under use_rules_mesh, else no-op."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, x.shape, logical, _ACTIVE["seq_parallel"])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

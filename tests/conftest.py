@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+multi-device behaviour is tested via subprocesses (test_distributed.py)."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def exact_modmatmul(a, b, p):
+    """Python-int (object dtype) oracle — immune to int64 overflow."""
+    ao = np.asarray(a).astype(object)
+    bo = np.asarray(b).astype(object)
+    return (ao @ bo) % p

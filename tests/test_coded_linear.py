@@ -1,0 +1,62 @@
+"""Lagrange-coded TP linear layer (beyond-paper feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coded_linear as cl
+
+
+def setup_layer(key, N=8, K=5, T=2, d=48, v=40, m=12):
+    cfg = cl.CodedLinearConfig(N=N, K=K, T=T, lh=7, lw=7)
+    kw, kh, ke = jax.random.split(key, 3)
+    w = jax.random.normal(kw, (d, v)) * 0.5
+    h = jax.random.normal(kh, (m, d)) * 0.5
+    shares = cl.encode_weights(cfg, ke, w)
+    return cfg, w, h, shares
+
+
+def test_exact_vs_quantized_reference(key):
+    cfg, w, h, shares = setup_layer(key)
+    got = cl.coded_head_apply(cfg, h, shares)
+    want = h @ w
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert rel < 0.02, rel     # fixed-point error only
+
+
+@pytest.mark.parametrize("drop", [[0], [7]])
+def test_straggler_sets_decode_identically(key, drop):
+    # N=8, K=5, T=2 -> threshold 7: tolerates exactly one loss
+    cfg, w, h, shares = setup_layer(key)
+    base = cl.coded_head_apply(cfg, h, shares)
+    surv = np.array([i for i in range(cfg.N) if i not in drop])
+    got = cl.coded_head_apply(cfg, h, shares, survivors=surv)
+    assert np.allclose(np.asarray(base), np.asarray(got), atol=1e-5)
+
+
+def test_two_shard_losses_with_wider_code(key):
+    cfg, w, h, shares = setup_layer(key, N=9, K=5, T=2)   # threshold 7 of 9
+    base = cl.coded_head_apply(cfg, h, shares)
+    surv = np.array([i for i in range(cfg.N) if i not in (2, 5)])
+    got = cl.coded_head_apply(cfg, h, shares, survivors=surv)
+    assert np.allclose(np.asarray(base), np.asarray(got), atol=1e-5)
+
+
+def test_threshold_requirement(key):
+    cfg, w, h, shares = setup_layer(key)
+    assert cfg.threshold == 7        # K+T = 5+2
+    with pytest.raises(AssertionError):
+        cl.CodedLinearConfig(N=6, K=5, T=2)
+
+
+def test_weight_privacy_masking(key):
+    """T=2: any 2 shares of a ZERO weight matrix are pure mask — uniform."""
+    cfg = cl.CodedLinearConfig(N=6, K=2, T=2)
+    w = jnp.zeros((8, 10))
+    samples = []
+    for i in range(100):
+        shares = cl.encode_weights(cfg, jax.random.PRNGKey(i), w)
+        samples.append(np.asarray(shares[0]).ravel())
+    vals = np.concatenate(samples).astype(np.float64) / cfg.p
+    assert abs(vals.mean() - 0.5) < 0.03
+    assert abs(vals.var() - 1 / 12) < 0.01

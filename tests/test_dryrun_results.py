@@ -1,0 +1,79 @@
+"""Validates the recorded dry-run sweeps (deliverables e/g).
+
+These tests read the committed benchmarks/results* JSONs — they assert the
+multi-pod dry-run actually succeeded for every (arch x shape) cell and that
+the roofline records are complete and well-formed.  If the results are
+regenerated, the same invariants must hold.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs import registry
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+FINAL = os.path.join(ROOT, "benchmarks", "results_final")
+MULTIPOD = os.path.join(ROOT, "benchmarks", "results")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(FINAL, "dryrun_*.json")),
+    reason="dry-run sweep results not generated yet")
+
+
+def _load(d, mesh):
+    out = {}
+    for p in glob.glob(os.path.join(d, f"dryrun_*__{mesh}.json")):
+        c = json.load(open(p))
+        out[(c["arch"], c["shape"])] = c
+    return out
+
+
+def test_all_cells_present_single_pod():
+    cells = _load(FINAL, "16x16")
+    for arch in registry.ARCHS:
+        for shape in SHAPES:
+            assert (arch, shape) in cells, f"missing cell {arch} x {shape}"
+    assert len(cells) == 40
+
+
+def test_no_errors_and_correct_skips():
+    cells = _load(FINAL, "16x16")
+    for (arch, shape), c in cells.items():
+        assert c["status"] in ("ok", "skipped"), (arch, shape, c.get("error"))
+        cfg = registry.get_config(arch)
+        should_skip = (shape == "long_500k" and not cfg.sub_quadratic)
+        assert (c["status"] == "skipped") == should_skip, (arch, shape)
+
+
+def test_multipod_compiles():
+    cells = _load(MULTIPOD, "2x16x16")
+    assert len(cells) == 40
+    n_ok = sum(c["status"] == "ok" for c in cells.values())
+    n_skip = sum(c["status"] == "skipped" for c in cells.values())
+    assert n_ok == 33 and n_skip == 7
+    for c in cells.values():
+        if c["status"] == "ok":
+            assert c["chips"] == 512
+
+
+def test_roofline_records_complete():
+    cells = _load(FINAL, "16x16")
+    for (arch, shape), c in cells.items():
+        if c["status"] != "ok":
+            continue
+        t = c["roofline_terms_s"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            assert t[term] >= 0, (arch, shape, term)
+        assert c["dominant"] in ("compute_s", "memory_s", "collective_s")
+        assert c["hlo_flops_per_device"] > 0
+        assert c["model_flops_global"] > 0
+        assert 0 < c["useful_ratio"] < 2.0, (arch, shape, c["useful_ratio"])
+        # trip-count-aware dot flops must exceed XLA's once-counted number
+        # for dot-dominated steps (train/prefill).  Decode steps at batch 1
+        # are elementwise-heavy: XLA counts those, our analyzer counts dots.
+        if shape in ("train_4k", "prefill_32k"):
+            assert c["hlo_flops_per_device"] >= \
+                c["xla_cost_flops_per_device"], (arch, shape)

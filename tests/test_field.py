@@ -1,0 +1,91 @@
+"""Property tests for the F_p arithmetic layer (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field
+from conftest import exact_modmatmul
+
+PRIMES = [field.P, field.P30]
+elem = lambda p: st.integers(min_value=0, max_value=p - 1)
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_ring_laws(p, data):
+    a = data.draw(elem(p))
+    b = data.draw(elem(p))
+    c = data.draw(elem(p))
+    A, B, C = (jnp.int32(x) for x in (a, b, c))
+    assert int(field.addmod(A, B, p)) == (a + b) % p
+    assert int(field.submod(A, B, p)) == (a - b) % p
+    assert int(field.mulmod(A, B, p)) == (a * b) % p
+    # distributivity
+    lhs = field.mulmod(A, field.addmod(B, C, p), p)
+    rhs = field.addmod(field.mulmod(A, B, p), field.mulmod(A, C, p), p)
+    assert int(lhs) == int(rhs)
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_inverse_and_pow(p, data):
+    a = data.draw(st.integers(min_value=1, max_value=p - 1))
+    A = jnp.int32(a)
+    assert int(field.mulmod(field.invmod(A, p), A, p)) == 1
+    e = data.draw(st.integers(min_value=0, max_value=50))
+    assert int(field.powmod(A, e, p)) == pow(a, e, p)
+
+
+@pytest.mark.parametrize("p", PRIMES)
+def test_signed_roundtrip(p):
+    half = (p - 1) // 2
+    vals = jnp.array([-half, -1, 0, 1, half - 1], jnp.int32)
+    assert (field.to_signed(field.from_signed(vals, p), p) == vals).all()
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@pytest.mark.parametrize("shape", [(3, 4, 5), (17, 33, 9), (1, 300, 2),
+                                   (64, 64, 64)])
+def test_matmul_exact(p, shape, rng):
+    M, K, N = shape
+    a = jnp.asarray(rng.integers(0, p, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, (K, N)), jnp.int32)
+    got = np.asarray(field.matmul(a, b, p)).astype(object)
+    want = exact_modmatmul(a, b, p)
+    assert (got == want).all()
+
+
+def test_matmul_large_contraction(rng):
+    """Contraction > chunk: the chunked path must still be exact."""
+    p = field.P30
+    a = jnp.asarray(rng.integers(0, p, (4, 40000)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, (40000, 3)), jnp.int32)
+    got = np.asarray(field.matmul(a, b, p)).astype(object)
+    assert (got == exact_modmatmul(a, b, p)).all()
+
+
+def test_host_lagrange_matches_interpolation():
+    """U columns must evaluate the interpolant: sum_i f(beta_i) U[i,j] = f(alpha_j)
+    for any polynomial of degree < K+T (take f = monomials)."""
+    p = field.P
+    betas = np.arange(1, 6)       # K+T = 5
+    alphas = np.arange(6, 10)
+    U = field.host_lagrange_coeffs(alphas, betas, p)
+    for deg in range(5):
+        fb = np.array([pow(int(b), deg, p) for b in betas], dtype=object)
+        fa = (fb @ U.astype(object)) % p
+        want = np.array([pow(int(a), deg, p) for a in alphas], dtype=object)
+        assert (fa == want).all()
+
+
+def test_vandermonde_inv():
+    p = field.P
+    pts = np.array([2, 5, 9, 11])
+    Vinv = field.host_vandermonde_inv(pts, p)
+    V = np.array([[pow(int(x), j, p) for j in range(4)] for x in pts],
+                 dtype=object)
+    eye = (V @ Vinv.astype(object)) % p
+    assert (eye == np.eye(4, dtype=object)).all()

@@ -1,0 +1,75 @@
+"""Trip-count-aware HLO analyzer (the roofline engine)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_scan_trip_count_multiplication():
+    """flops of a scanned matmul must scale with scan length."""
+    def make(L):
+        def f(ws, x):
+            def body(c, w):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+        ws = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+        comp = jax.jit(f).lower(ws, x).compile()
+        return H.analyze(comp.as_text())["flops"]
+
+    f4, f16 = make(4), make(16)
+    expected4 = 4 * 2 * 8 * 32 * 32
+    assert f4 == pytest.approx(expected4, rel=0.01)
+    assert f16 == pytest.approx(4 * f4, rel=0.01)
+
+
+def test_plain_dot_flops():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.bfloat16)
+    comp = jax.jit(f).lower(a, b).compile()
+    res = H.analyze(comp.as_text())
+    assert res["flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_nested_scan():
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ c2), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    comp = jax.jit(f).lower(x).compile()
+    res = H.analyze(comp.as_text())
+    want = 5 * 3 * 2 * 16 * 16 * 16
+    assert res["flops"] == pytest.approx(want, rel=0.05)
+
+
+def test_shape_bytes_parsing():
+    assert H._sig_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert H._sig_bytes("(f32[8,8], s32[])") == 8 * 8 * 4 + 4
+    assert H._sig_bytes("pred[]") == 1
+    # attr braces must not be parsed as shapes
+    assert H._sig_bytes("dimensions={1,0}") == 0
+
+
+def test_top_ops_drilldown():
+    def f(ws, x):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    comp = jax.jit(f).lower(ws, x).compile()
+    res = H.analyze(comp.as_text(), top_k=5)
+    assert len(res["top_ops"]) == 5
+    assert res["top_ops"][0]["effective_bytes"] >= \
+        res["top_ops"][-1]["effective_bytes"]

@@ -1,0 +1,85 @@
+"""Pallas kernel sweeps vs the pure-jnp ref.py oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field, sigmoid_poly
+from repro.kernels import ops, ref
+from conftest import exact_modmatmul
+
+PRIMES = [field.P, field.P30]
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@pytest.mark.parametrize("shape", [
+    (8, 16, 8), (128, 256, 128), (100, 300, 50), (1, 1, 1), (257, 129, 65),
+    (64, 1000, 32),
+])
+def test_modmatmul_shapes(p, shape, rng):
+    M, K, N = shape
+    a = jnp.asarray(rng.integers(0, p, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, (K, N)), jnp.int32)
+    got = np.asarray(ops.modmatmul(a, b, p, use_pallas=True)).astype(object)
+    want = exact_modmatmul(a, b, p)
+    assert (got == want).all(), f"mismatch at {shape} p={p}"
+
+
+@pytest.mark.parametrize("p", PRIMES)
+def test_modmatmul_extreme_values(p):
+    """All entries p-1 — worst case for limb overflow."""
+    a = jnp.full((32, 512), p - 1, jnp.int32)
+    b = jnp.full((512, 16), p - 1, jnp.int32)
+    got = np.asarray(ops.modmatmul(a, b, p, use_pallas=True)).astype(object)
+    assert (got == exact_modmatmul(a, b, p)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 80), k=st.integers(1, 120), n=st.integers(1, 60),
+       seed=st.integers(0, 2 ** 20))
+def test_modmatmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, field.P, (m, k)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, field.P, (k, n)), jnp.int32)
+    got = np.asarray(ops.modmatmul(a, b, use_pallas=True)).astype(object)
+    assert (got == exact_modmatmul(a, b, field.P)).all()
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@pytest.mark.parametrize("mk,d,r", [(64, 32, 1), (300, 64, 2), (257, 96, 3),
+                                    (16, 8, 1)])
+def test_coded_grad_fused(p, mk, d, r, rng):
+    x = jnp.asarray(rng.integers(0, p, (mk, d)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, p, (d, r)), jnp.int32)
+    cbar = jnp.asarray(sigmoid_poly.quantized_coeffs(r, 2, 4, 6, p), jnp.int32)
+    got = ops.coded_grad(x, w, cbar, p, use_pallas=True)
+    want = ref.coded_grad_ref(x, w, cbar, p)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ref_oracle_against_numpy(rng):
+    """ref.py itself is validated against python-int ground truth."""
+    p = field.P
+    x = jnp.asarray(rng.integers(0, p, (60, 24)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, p, (24, 2)), jnp.int32)
+    cbar = jnp.asarray(sigmoid_poly.quantized_coeffs(2, 2, 4, 6, p), jnp.int32)
+    got = np.asarray(ref.coded_grad_ref(x, w, cbar, p)).astype(object)
+    xo = np.asarray(x).astype(object)
+    wo = np.asarray(w).astype(object)
+    z = (xo @ wo) % p
+    s = (int(cbar[0]) + int(cbar[1]) * z[:, 0] + int(cbar[2]) * z[:, 0] * z[:, 1]) % p
+    want = (xo.T @ s) % p
+    assert (got == want).all()
+
+
+def test_block_shape_invariance(rng):
+    """Kernel output independent of BlockSpec tiling choices."""
+    from repro.kernels import modmatmul as mm
+    p = field.P
+    a = jnp.asarray(rng.integers(0, p, (100, 200)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, (200, 70)), jnp.int32)
+    outs = [np.asarray(mm.modmatmul(a, b, p, bm=bm, bn=bn, bk=bk,
+                                    interpret=True))
+            for bm, bn, bk in [(32, 32, 64), (128, 128, 256), (16, 64, 32)]]
+    assert all(np.array_equal(outs[0], o) for o in outs[1:])

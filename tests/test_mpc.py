@@ -1,0 +1,57 @@
+"""BGW/Shamir MPC baseline (paper A.5): primitives + trajectory parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import field, mpc_baseline as mpc, protocol
+from repro.data import synthetic
+
+
+def test_requires_honest_majority():
+    with pytest.raises(AssertionError):
+        mpc.MPCConfig(N=6, T=3)
+
+
+def test_share_reconstruct(key):
+    cfg = mpc.MPCConfig(N=7, T=3)
+    v = jax.random.randint(key, (4, 6), 0, field.P, dtype=jnp.int32)
+    sh = mpc.share(cfg, key, v)
+    assert sh.shape == (7, 4, 6)
+    rec = mpc.reconstruct(cfg, sh, cfg.T)
+    assert np.array_equal(np.asarray(rec), np.asarray(v))
+
+
+def test_t_shares_reveal_nothing_statistically(key):
+    """A single share of constant data should look uniform over F_p."""
+    cfg = mpc.MPCConfig(N=5, T=2)
+    v = jnp.ones((512,), jnp.int32)
+    sh = mpc.share(cfg, key, v)
+    vals = np.asarray(sh[0]).astype(np.float64) / field.P
+    assert abs(vals.mean() - 0.5) < 0.05
+    assert abs(vals.var() - 1 / 12) < 0.02
+
+
+def test_multiplication_with_degree_reduction(key):
+    cfg = mpc.MPCConfig(N=7, T=3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.random.randint(k1, (8,), 0, field.P, dtype=jnp.int32)
+    b = jax.random.randint(k2, (8,), 0, field.P, dtype=jnp.int32)
+    sa, sb = mpc.share(cfg, k1, a), mpc.share(cfg, k2, b)
+    prod = field.mulmod(sa, sb, field.P)          # degree 2T
+    red = mpc.degree_reduce(cfg, k3, prod)        # back to degree T
+    rec = mpc.reconstruct(cfg, red, cfg.T)
+    assert np.array_equal(np.asarray(rec),
+                          np.asarray(field.mulmod(a, b, field.P)))
+
+
+def test_mpc_matches_cpml_trajectory():
+    """Same quantization + surrogate => (near-)identical training curves.
+    Differences come only from independent stochastic weight draws."""
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(42), m=400, d=30)
+    mcfg = mpc.MPCConfig(N=7, T=3, r=1)
+    ccfg = protocol.CPMLConfig(N=7, K=2, T=1, r=1)
+    _, mh = mpc.train(mcfg, jax.random.PRNGKey(7), x, y, iters=6, eval_every=6)
+    _, ch = protocol.train(ccfg, jax.random.PRNGKey(7), x, y, iters=6,
+                           eval_every=6)
+    assert abs(mh[-1]["loss"] - ch[-1]["loss"]) < 2e-3

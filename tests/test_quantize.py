@@ -1,0 +1,53 @@
+"""Stochastic quantization (paper §3.1): unbiasedness + roundtrip bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import field, quantize
+
+
+def test_deterministic_roundtrip(key):
+    x = jax.random.uniform(key, (64, 8), minval=-1.0, maxval=1.0)
+    for lx in (2, 4, 8):
+        q = quantize.quantize_data(x, lx)
+        back = quantize.dequantize(q, lx)
+        assert float(jnp.abs(back - x).max()) <= 2.0 ** (-lx - 1) + 1e-6
+
+
+def test_stochastic_unbiased(key):
+    """E[Round_stoc(x)] = x — the core of Lemma 1."""
+    w = jnp.array([0.3, -0.7, 1.25, -2.6], jnp.float32)
+    lw = 2
+    reps = 4000
+    qs = quantize.quantize_weights(key, jnp.tile(w, (reps, 1)).T.reshape(-1),
+                                   lw, 1)[..., 0]
+    back = quantize.dequantize(qs, lw).reshape(4, reps)
+    est = back.mean(axis=1)
+    assert np.allclose(np.asarray(est), np.asarray(w), atol=4e-3)
+
+
+def test_independent_quantizations_differ(key):
+    w = jax.random.uniform(key, (256,))
+    q = quantize.quantize_weights(key, w, 4, 2)
+    assert q.shape == (256, 2)
+    assert (np.asarray(q[:, 0]) != np.asarray(q[:, 1])).any()
+
+
+def test_negative_embedding(key):
+    x = jnp.array([-3.7, -0.1, 0.0, 2.2])
+    q = quantize.quantize_data(x, 2)
+    assert (np.asarray(q) >= 0).all() and (np.asarray(q) < field.P).all()
+    assert np.allclose(np.asarray(quantize.dequantize(q, 2)),
+                       [-3.75, 0.0, 0.0, 2.25])
+
+
+def test_gradient_scale():
+    assert quantize.gradient_scale(lx=2, lw=4, r=1) == 2 + 6
+    assert quantize.gradient_scale(lx=2, lw=4, r=2) == 2 + 12
+
+
+def test_required_prime_bits():
+    # paper: p >= 2^(lx+1) max|X| + 1 = 9 for lx=2, |X|<=1 -> 4 bits
+    assert quantize.required_prime_bits(1.0, 2) == 4
+    assert quantize.required_prime_bits(255.0, 8) == 17

@@ -1,0 +1,64 @@
+"""Sigmoid surrogate (paper §3.3): fit quality, unbiasedness, scale algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import field, quantize, sigmoid_poly as sp
+
+
+def test_fit_quality():
+    # deg 2 == deg 1 on a symmetric interval (sigmoid-0.5 is odd, c2 = 0)
+    for r, tol in [(1, 0.15), (2, 0.15), (3, 0.05)]:
+        c = sp.fit_sigmoid(r)
+        z = np.linspace(sp.FIT_LO, sp.FIT_HI, 500)
+        err = np.abs(np.polyval(list(reversed(c)), z) - 1 / (1 + np.exp(-z)))
+        assert err.max() < tol, (r, err.max())
+
+
+def test_lc_zero_degenerates():
+    """Documents the paper's implicit-scale gap: at lc=0 the linear
+    coefficient underflows to 0 (gradient signal vanishes)."""
+    c = sp.quantized_coeffs(r=1, lx=2, lw=4, lc=0)
+    assert c[1] == 0
+    c6 = sp.quantized_coeffs(r=1, lx=2, lw=4, lc=6)
+    assert c6[1] > 0
+
+
+def test_gbar_unbiased(key):
+    """E[ḡ(X̄, W̄)] = ĝ(X̄ w) over quantization draws (Eq. 18)."""
+    d, m, r, lx, lw = 16, 32, 2, 2, 4
+    x = jax.random.uniform(key, (m, d), minval=0, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,)) * 0.3
+    xq = quantize.dequantize(quantize.quantize_data(x, lx), lx)
+    coeffs = sp.fit_sigmoid(r)
+    want = sp.poly_eval_real(coeffs, xq @ w)
+    acc = jnp.zeros(m)
+    reps = 600
+    for i in range(reps):
+        wbar = quantize.quantize_weights(jax.random.PRNGKey(i + 10), w, lw, r)
+        acc = acc + sp.gbar_real(xq, wbar, coeffs, lx, lw)
+    est = acc / reps
+    assert float(jnp.abs(est - want).max()) < 0.02
+
+
+def test_field_real_consistency(key):
+    """gbar_field at the aligned scale == gbar_real up to coeff rounding."""
+    d, m, r, lx, lw, lc = 8, 20, 1, 2, 4, 8
+    p = field.P30
+    x = jax.random.uniform(key, (m, d), minval=0, maxval=1)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,)) * 0.2
+    xq = quantize.quantize_data(x, lx, p)
+    wbar = quantize.quantize_weights(jax.random.PRNGKey(2), w, lw, r, p)
+    xw = field.matmul(xq, wbar, p)
+    cbar = jnp.asarray(sp.quantized_coeffs(r, lx, lw, lc, p), jnp.int32)
+    got = quantize.dequantize(sp.gbar_field(xw, cbar, p), lc + r * (lx + lw), p)
+    coeffs = sp.fit_sigmoid(r)
+    want = sp.gbar_real(quantize.dequantize(xq, lx, p), wbar, coeffs, lx, lw,
+                        p)
+    assert float(jnp.abs(got - want).max()) < 1e-2
+
+
+def test_gradient_scale_poly():
+    assert sp.gradient_scale_poly(2, 4, 1, 6) == 6 + 2 + 6
+    assert sp.gradient_scale_poly(2, 4, 2, 0) == 0 + 2 + 12

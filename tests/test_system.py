@@ -1,0 +1,110 @@
+"""End-to-end system behaviour: drivers, paper-reproduction invariants."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_train_driver_reduced(tmp_path):
+    from repro.launch import train
+    rc = train.main(["--arch", "tinyllama-1.1b", "--reduced", "--steps", "8",
+                     "--batch", "4", "--seq", "32", "--log-every", "100",
+                     "--checkpoint-dir", str(tmp_path)])
+    assert rc == 0
+
+
+def test_train_driver_resume(tmp_path):
+    from repro.launch import train
+    train.main(["--arch", "tinyllama-1.1b", "--reduced", "--steps", "6",
+                "--batch", "2", "--seq", "32", "--checkpoint-every", "3",
+                "--checkpoint-dir", str(tmp_path), "--log-every", "100"])
+    rc = train.main(["--arch", "tinyllama-1.1b", "--reduced", "--steps", "3",
+                     "--batch", "2", "--seq", "32", "--resume",
+                     "--checkpoint-dir", str(tmp_path), "--log-every", "100"])
+    assert rc == 0
+
+
+def test_serve_driver_reduced():
+    from repro.launch import serve
+    rc = serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+                     "--prompt-len", "16", "--gen", "4"])
+    assert rc == 0
+
+
+def test_serve_coded_head_with_failure():
+    from repro.launch import serve
+    rc = serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+                     "--prompt-len", "16", "--coded-head", "--coded-k", "4",
+                     "--coded-t", "1", "--coded-n", "6", "--kill-shard", "3"])
+    assert rc == 0
+
+
+def test_paper_accuracy_reproduction():
+    """Fig. 3-style: CPML accuracy ~= conventional logistic regression on a
+    separable MNIST-like task after 25 iterations (small scale for CI)."""
+    from repro.core import protocol
+    from repro.data import synthetic
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=800, d=60,
+                                margin=12.0)
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)
+    w, hist = protocol.train(cfg, jax.random.PRNGKey(7), x, y, iters=25,
+                             eval_every=25)
+    # uncoded reference
+    state = protocol.setup(cfg, jax.random.PRNGKey(7), x, y)
+    eta = protocol.lipschitz_eta(state.xq_real)
+    w2 = jnp.zeros(x.shape[1])
+    xq = state.xq_real[:800]
+    for _ in range(25):
+        w2 = w2 - eta * (xq.T @ (protocol.sigmoid(xq @ w2) - y)) / 800
+    _, acc_ref = protocol.loss_and_accuracy(w2, xq, y)
+    acc_coded = hist[-1]["acc"]
+    assert acc_coded > 0.8
+    assert abs(acc_coded - float(acc_ref)) < 0.03
+
+
+@pytest.mark.slow
+def test_shard_map_backend_multidevice():
+    """CPML 'shard' backend on an 8-device forced-CPU mesh == vmap backend."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import protocol
+from repro.data import synthetic
+
+x, y = synthetic.mnist_like(jax.random.PRNGKey(42), m=400, d=30)
+mesh = jax.make_mesh((8,), ("workers",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+cfgv = protocol.CPMLConfig(N=8, K=2, T=1, r=1, backend="vmap")
+sv = protocol.setup(cfgv, jax.random.PRNGKey(0), x, y)
+wv = protocol.step(cfgv, jax.random.PRNGKey(1), sv, 0.5).w
+cfgs = protocol.CPMLConfig(N=8, K=2, T=1, r=1, backend="shard")
+ss = protocol.setup(cfgs, jax.random.PRNGKey(0), x, y)
+with jax.set_mesh(mesh):
+    ws = protocol.step(cfgs, jax.random.PRNGKey(1), ss, 0.5).w
+assert np.allclose(np.asarray(wv), np.asarray(ws), atol=1e-6), \
+    float(jnp.abs(wv - ws).max())
+print("SHARD_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SHARD_OK" in out.stdout, out.stdout + out.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess():
+    """The real dry-run path (512 host devices, production mesh) for the
+    smallest arch — proves lower+compile+analysis works end to end."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "train_4k", "--out", "/tmp/dryrun_test"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert "ok=1" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
