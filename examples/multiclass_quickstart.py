@@ -1,0 +1,55 @@
+"""Multi-class quickstart: 10-way private classification with CodedPrivateML.
+
+The coded engine trains c = 10 one-vs-all logistic heads over a SINGLE set
+of coded dataset shares — the dataset is quantized + Lagrange-encoded once,
+and every round's worker pass serves all 10 heads (the X̃ read is amortized
+across classes; see DESIGN.md §6).  Training runs as one jitted lax.scan.
+
+Per-class accuracy is reported against the cleartext quantized baseline:
+the same quantized dataset X̄, the TRUE sigmoid, the same iteration count.
+
+    PYTHONPATH=src python examples/multiclass_quickstart.py
+"""
+import time
+
+import jax
+
+from repro.core import protocol
+from repro.data import synthetic
+
+
+def main():
+    c = 10
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1, c=c, batch_rows=256)
+    print(f"CodedPrivateML: N={cfg.N} workers, K={cfg.K} parallel, "
+          f"T={cfg.T}-private, {c} one-vs-all heads over ONE coded dataset, "
+          f"mini-batches of {cfg.K * cfg.batch_rows} coded rows/round")
+
+    x, y = synthetic.multiclass_mnist_like(jax.random.PRNGKey(1), m=4000,
+                                           d=256, c=c)
+    t0 = time.time()
+    w, hist = protocol.train(cfg, jax.random.PRNGKey(7), x, y, iters=60,
+                             eval_every=15)
+    for h in hist:
+        print(f"  iter {h['iter']:3d}  loss {h['loss']:.4f}  "
+              f"acc {h['acc']:.2%}")
+    print(f"trained 60 private iterations in {time.time()-t0:.1f}s "
+          f"(one jitted scan, no per-step host round trips)")
+
+    # cleartext quantized baseline: same X̄, true sigmoid, same step count
+    wc, xq = protocol.cleartext_baseline(cfg, x, y, iters=60)
+
+    acc_coded = protocol.per_class_accuracy(w, xq, y)
+    acc_clear = protocol.per_class_accuracy(wc, xq, y)
+    print(f"{'class':>5} {'coded':>8} {'cleartext':>10}")
+    for cls in range(c):
+        print(f"{cls:>5} {float(acc_coded[cls]):>8.2%} "
+              f"{float(acc_clear[cls]):>10.2%}")
+    _, overall = protocol.multiclass_loss_and_accuracy(w, xq, y)
+    _, overall_c = protocol.multiclass_loss_and_accuracy(wc, xq, y)
+    print(f"overall: coded {float(overall):.2%} vs cleartext "
+          f"{float(overall_c):.2%}")
+
+
+if __name__ == "__main__":
+    main()

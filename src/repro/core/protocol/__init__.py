@@ -1,0 +1,70 @@
+"""CodedPrivateML layered protocol engine (paper Algorithm 1).
+
+The protocol is a pipeline of four composable stages, one module each:
+
+  encode.py   quantize -> Lagrange-encode (dataset once, weights per round)
+  compute.py  worker polynomial f (Eq. 20); backends: vmap / shard / kernel
+  decode.py   survivor pattern -> cached decode matrix -> dequantize
+  engine.py   training drivers: scan-jitted train(), per-step reference,
+              multi-class one-vs-all heads, coded mini-batch SGD
+  config.py   the static CPMLConfig every stage specializes on
+
+This package re-exports the full public API, so ``from repro.core import
+protocol`` keeps working exactly as it did when protocol was one module.
+See DESIGN.md §4-§6 for the stage contracts and backend matrix.
+"""
+from repro.core.protocol.config import CPMLConfig
+from repro.core.protocol.encode import (
+    encode_dataset,
+    encode_weights,
+    pad_rows,
+)
+from repro.core.protocol.compute import (
+    all_worker_results,
+    worker_fn,
+)
+from repro.core.protocol.decode import (
+    decode_gradient,
+    decode_parts,
+    make_decode_matrix,
+)
+from repro.core.protocol.engine import (
+    CPMLState,
+    Schedule,
+    cleartext_baseline,
+    lipschitz_eta,
+    loss_and_accuracy,
+    make_schedule,
+    multiclass_loss_and_accuracy,
+    per_class_accuracy,
+    setup,
+    sigmoid,
+    step,
+    train,
+    train_reference,
+)
+
+__all__ = [
+    "CPMLConfig",
+    "CPMLState",
+    "Schedule",
+    "all_worker_results",
+    "cleartext_baseline",
+    "decode_gradient",
+    "decode_parts",
+    "encode_dataset",
+    "encode_weights",
+    "lipschitz_eta",
+    "loss_and_accuracy",
+    "make_decode_matrix",
+    "make_schedule",
+    "multiclass_loss_and_accuracy",
+    "pad_rows",
+    "per_class_accuracy",
+    "setup",
+    "sigmoid",
+    "step",
+    "train",
+    "train_reference",
+    "worker_fn",
+]

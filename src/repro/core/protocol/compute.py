@@ -1,0 +1,74 @@
+"""Compute stage: the worker-side polynomial f (paper Eq. 20), per backend.
+
+f(X̃, W̃) = X̃ᵀ ḡ(X̃, W̃) over F_p — degree (2r+1) in the encoding variable,
+so any (2r+1)(K+T-1)+1 surviving workers decode (Thm. 1).  The multi-head
+generalization stacks c one-vs-all polynomials over the SAME share:
+W̃ (d, c, r) -> result (d, c); the dominant X̃ read is amortized across heads.
+
+Backend matrix (DESIGN.md §4):
+  * "vmap"     — all N workers simulated on one device (tests/benchmarks).
+  * "shard"    — shard_map over a mesh axis: one coded share per device,
+                 zero collectives in the worker step (the paper's key
+                 property), one all_gather for "send results to master".
+  * use_kernel — routes the per-worker computation through the fused Pallas
+                 kernel (kernels/coded_grad.py) on EITHER backend.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core.protocol.config import CPMLConfig
+
+
+def worker_fn(cfg: CPMLConfig, cbar: jax.Array
+              ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """f(X̃, W̃) for ONE worker. (mk, d), (d, c, r) -> (d, c).
+
+    Legacy binary shape (d, r) is also accepted and returns (d,) — the
+    pre-multi-class contract, still used by benchmarks/phases.py.
+    """
+
+    def f(x_share: jax.Array, w_share: jax.Array) -> jax.Array:
+        if w_share.ndim == 2:
+            return f(x_share, w_share[:, None, :])[:, 0]
+        c = w_share.shape[1]
+        if cfg.use_kernel:
+            from repro.kernels import ops as kernel_ops
+            if c == 1:
+                return kernel_ops.coded_grad(
+                    x_share, w_share[:, 0, :], cbar, cfg.p)[:, None]
+            return kernel_ops.coded_grad_mc(x_share, w_share, cbar, cfg.p)
+        # the unfused jnp path IS the kernel oracle (itself pinned to a
+        # python-int ground truth in test_kernels.py)
+        from repro.kernels import ref
+        return ref.coded_grad_mc_ref(x_share, w_share, cbar, cfg.p)
+
+    return f
+
+
+def all_worker_results(cfg: CPMLConfig, cbar: jax.Array, x_shares: jax.Array,
+                       w_shares: jax.Array) -> jax.Array:
+    """(N, mk, d) x (N, d, c, r) -> (N, d, c) worker results."""
+    f = worker_fn(cfg, cbar)
+    if cfg.backend == "vmap":
+        return jax.vmap(f)(x_shares, w_shares)
+    elif cfg.backend == "shard":
+        from repro.parallel import compat
+        mesh = compat.ambient_mesh()  # inside with-mesh / set_mesh context
+        axis = cfg.mesh_axis
+
+        def shard_body(xs, ws):
+            res = f(xs[0], ws[0])[None]
+            # "send result back to the master": one collective, results
+            # replicated so the (replicated) decode can run everywhere.
+            return jax.lax.all_gather(res, axis, axis=0, tiled=True)
+
+        from jax.sharding import PartitionSpec as Pspec
+        # check=False: the all_gather makes the output replicated, but the
+        # static replication check cannot infer that.
+        return compat.shard_map(shard_body, mesh,
+                                (Pspec(axis), Pspec(axis)),
+                                Pspec())(x_shares, w_shares)
+    raise ValueError(cfg.backend)

@@ -1,0 +1,59 @@
+"""Decode stage: survivor pattern -> decode matrix -> field decode -> real.
+
+Straggler tolerance as erasure decoding (DESIGN.md §3): results arrive as an
+(N, d, c) array + a survivor index list; the decode matrix for the survivor
+set is built host-side (static per pattern, cacheable across rounds) and
+applied as one field matmul — the semantics of "wait for the fastest R
+workers" with zero recomputation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field, quantize
+from repro.core.protocol.config import CPMLConfig
+
+
+def make_decode_matrix(cfg: CPMLConfig, survivors: np.ndarray) -> jax.Array:
+    surv = np.asarray(survivors)[: cfg.threshold]
+    return jnp.asarray(_cached_decode_matrix(cfg.scheme, tuple(int(i) for i in surv)),
+                       jnp.int32)
+
+
+@functools.lru_cache(maxsize=512)
+def _cached_decode_matrix(scheme, survivors: tuple[int, ...]) -> np.ndarray:
+    """Host Lagrange-coefficient solve, cached per (scheme, pattern).
+
+    Training loops reuse a handful of survivor patterns across thousands of
+    rounds; the O(R^2 K) host solve runs once per pattern.
+    """
+    return scheme.decode_matrix(np.asarray(survivors))
+
+
+def decode_parts(cfg: CPMLConfig, results: jax.Array,
+                 decode_mat: jax.Array) -> jax.Array:
+    """Recover the K per-part field results h(beta_k) from survivors.
+
+    results: (R, d, c) field evaluations h(alpha_i) in survivor order.
+    Returns (K, d, c) field elements — EXACTLY X̄_kᵀ ḡ(X̄_k, W̄) mod p.
+    """
+    flat = results.reshape(results.shape[0], -1)
+    out = field.matmul(decode_mat.T, flat, cfg.p)          # (K, d*c)
+    return out.reshape(cfg.K, *results.shape[1:])
+
+
+def decode_gradient(cfg: CPMLConfig, results: jax.Array,
+                    decode_mat: jax.Array) -> jax.Array:
+    """Decode the K sub-gradients h(beta_k) and sum them IN THE REAL DOMAIN.
+
+    The paper sums in the field (Eq. 23); summing after per-part
+    dequantization is numerically identical when nothing wraps, and buys
+    log2(K) bits of wrap-around headroom per part — each h(beta_k) only
+    accumulates m/K samples.  results: (R, d, c) -> real (d, c).
+    """
+    out = decode_parts(cfg, results, decode_mat)
+    return quantize.dequantize(out, cfg.grad_scale, cfg.p).sum(axis=0)

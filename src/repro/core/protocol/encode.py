@@ -1,0 +1,52 @@
+"""Encode stage: quantize + Lagrange-encode datasets and weights.
+
+Algorithm 1 lines 1-3.  The dataset is encoded ONCE (the paper's one-time
+encoding property); weights are re-encoded every round because W changes.
+Both are shape-generic: weights may be (d,) binary vectors or (d, c)
+one-vs-all matrices — quantization, masking and encoding all act
+elementwise/linearly, so the c heads ride through a single encode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lagrange, quantize
+from repro.core.protocol.config import CPMLConfig
+
+
+def pad_rows(x: jax.Array, K: int) -> jax.Array:
+    m = x.shape[0]
+    pad = (-m) % K
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+    return x
+
+
+def encode_dataset(cfg: CPMLConfig, key: jax.Array, x: jax.Array
+                   ) -> tuple[jax.Array, dict[str, Any]]:
+    """Returns shares (N, m/K, d) + master-side cleartext context."""
+    xq = quantize.quantize_data(x, cfg.lx, cfg.p)          # (m, d) field
+    xq = pad_rows(xq, cfg.K)
+    mk = xq.shape[0] // cfg.K
+    parts = xq.reshape(cfg.K, mk, xq.shape[-1])
+    masks = lagrange.draw_masks(key, cfg.T, parts.shape[1:], cfg.p)
+    shares = lagrange.encode(cfg.scheme, parts, masks, cfg.p)
+    ctx = {"xq": xq, "m_padded": xq.shape[0]}
+    return shares, ctx
+
+
+def encode_weights(cfg: CPMLConfig, key: jax.Array, w: jax.Array) -> jax.Array:
+    """Quantize w (Eq. 9-10) and Lagrange-encode W̄ (Eq. 13-14).
+
+    w: (d,) or (d, c) real weights.  Returns shares (N, *w.shape, r).
+    Note v(beta_i) = W̄ for ALL i <= K (the paper repeats the same W̄ at every
+    data interpolation point), with fresh random masks V each round.
+    """
+    kq, km = jax.random.split(key)
+    wbar = quantize.quantize_weights(kq, w, cfg.lw, cfg.r, cfg.p)
+    parts = jnp.broadcast_to(wbar[None], (cfg.K, *wbar.shape))
+    masks = lagrange.draw_masks(km, cfg.T, wbar.shape, cfg.p)
+    return lagrange.encode(cfg.scheme, parts, masks, cfg.p)

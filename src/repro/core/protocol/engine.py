@@ -1,0 +1,377 @@
+"""Engine stage: training driver over the encode/compute/decode stages.
+
+Algorithm 1, generalized three ways beyond the paper (DESIGN.md §6):
+
+  * MULTI-CLASS — W is a (d, c) matrix of c one-vs-all logistic heads; the
+    dataset is encoded once and every round's single worker pass serves all
+    c heads (compute.py amortizes the X̃ read).
+  * MINI-BATCH SGD — each round selects ``cfg.batch_rows`` rows of the
+    once-encoded shares.  Row selection commutes with Lagrange encoding
+    (encoding is elementwise-linear across the K parts), so a row-subset of
+    X̃_i is a valid encoding of the same row-subset of every X̄_k: the paper's
+    one-time-encoding property survives mini-batching.
+  * FULLY-JITTED SCAN — train() runs ONE jitted jax.lax.scan over all
+    iterations: per-round PRNG keys are pre-split, survivor patterns are a
+    static schedule whose decode matrices are precomputed host-side and
+    stacked, and batch indices are pre-drawn.  No host↔device round trip or
+    re-trace per iteration.  ``train_reference`` is the per-step loop the
+    scan must match bit-for-bit (tests/test_scan_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize, sigmoid_poly
+from repro.core.protocol import compute, decode, encode
+from repro.core.protocol.config import CPMLConfig
+
+
+# ---------------------------------------------------------------------------
+# State + setup
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CPMLState:
+    w: jax.Array            # real weights: (d,) when c == 1, else (d, c)
+    x_shares: jax.Array     # (N, mk, d) coded dataset (encoded ONCE)
+    xty: jax.Array          # real X̄ᵀY, full padded data: (d,) or (d, c)
+    m: int                  # number of (unpadded) samples
+    mk: int                 # rows per part (padded m / K)
+    xq_real: jax.Array      # dequantized dataset (m_padded, d) — loss/oracle
+    xq_parts: jax.Array     # the same, split (K, mk, d) — mini-batch xty
+    y: jax.Array            # padded labels, original form (m_padded,)
+    y_parts: jax.Array      # targets split (K, mk, c) real (one-hot if c>1)
+
+
+def _targets(cfg: CPMLConfig, y: jax.Array) -> jax.Array:
+    """(m,) labels -> (m, c) real regression targets for the c heads."""
+    if cfg.c == 1:
+        return y.astype(jnp.float32)[:, None]
+    return jax.nn.one_hot(y.astype(jnp.int32), cfg.c, dtype=jnp.float32)
+
+
+def setup(cfg: CPMLConfig, key: jax.Array, x: jax.Array, y: jax.Array,
+          w0: jax.Array | None = None) -> CPMLState:
+    """Encode the dataset + precompute all master-side cleartext context.
+
+    y: (m,) float 0/1 labels when cfg.c == 1, integer class ids otherwise.
+    """
+    kx, _ = jax.random.split(key)
+    x_shares, ctx = encode.encode_dataset(cfg, kx, x)
+    xq_real = quantize.dequantize(ctx["xq"], cfg.lx, cfg.p)
+    m_padded = ctx["m_padded"]
+    mk = m_padded // cfg.K
+    y_pad = jnp.concatenate([y, jnp.zeros(m_padded - y.shape[0], y.dtype)])
+    targets = _targets(cfg, y_pad)                       # (m_padded, c)
+    xty = _w_public(cfg, xq_real.T @ targets)            # (d,) or (d, c)
+    d = x.shape[1]
+    if w0 is None:
+        w = jnp.zeros((d,) if cfg.c == 1 else (d, cfg.c), jnp.float32)
+    else:
+        w = w0
+    return CPMLState(
+        w=w, x_shares=x_shares, xty=xty, m=x.shape[0], mk=mk,
+        xq_real=xq_real, xq_parts=xq_real.reshape(cfg.K, mk, d),
+        y=y_pad, y_parts=targets.reshape(cfg.K, mk, cfg.c))
+
+
+def _w_internal(cfg: CPMLConfig, w: jax.Array) -> jax.Array:
+    return w[:, None] if cfg.c == 1 and w.ndim == 1 else w
+
+
+def _w_public(cfg: CPMLConfig, w2: jax.Array) -> jax.Array:
+    return w2[:, 0] if cfg.c == 1 else w2
+
+
+# ---------------------------------------------------------------------------
+# One protocol round (shared verbatim by step(), train_reference(), and the
+# scan body — this sharing is what makes scan-vs-loop bit-identity hold)
+# ---------------------------------------------------------------------------
+
+def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
+           x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
+           xty_full: jax.Array, dmat: jax.Array, order: jax.Array,
+           batch_idx: jax.Array | None, eta: jax.Array, m_int: jax.Array
+           ) -> jax.Array:
+    """w2 (d, c) -> updated (d, c).  One full encode->compute->decode round.
+
+    Batch index i selects global sample k*mk + i from every part k; rows
+    with k*mk + i >= m are all-zero padding, so the 1/batch normalization
+    counts only the real rows — otherwise rounds touching the padded tail
+    would take a systematically smaller step.
+    """
+    cbar = jnp.asarray(
+        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
+        jnp.int32)
+    w_shares = encode.encode_weights(cfg, key, w2)       # (N, d, c, r)
+    if batch_idx is None:
+        xb, xty = x_shares, xty_full
+        scale = eta / m_int.astype(jnp.float32)
+    else:
+        # coded sub-batch: the SAME row subset of every share / part.
+        xb = jnp.take(x_shares, batch_idx, axis=1)       # (N, b, d)
+        xqb = jnp.take(xq_parts, batch_idx, axis=1)      # (K, b, d)
+        yb = jnp.take(y_parts, batch_idx, axis=1)        # (K, b, c)
+        xty = jnp.einsum("kbd,kbc->dc", xqb, yb)
+        mk = xq_parts.shape[1]
+        part0 = jnp.arange(cfg.K, dtype=jnp.int32) * mk  # global row offsets
+        real = jnp.sum((batch_idx[None, :] + part0[:, None]) < m_int)
+        scale = eta / real.astype(jnp.float32)
+    results = compute.all_worker_results(cfg, cbar, xb, w_shares)  # (N, d, c)
+    fastest = jnp.take(results, order, axis=0)                     # (R, d, c)
+    xg = decode.decode_gradient(cfg, fastest, dmat)                # (d, c)
+    return w2 - scale * (xg - xty)
+
+
+_round_jit = jax.jit(_round, static_argnums=(0,))
+
+
+def _scale_args(cfg: CPMLConfig, eta: float, state: CPMLState):
+    """(eta, m) scalars for _round's gradient normalization."""
+    return (jnp.float32(eta), jnp.int32(state.m))
+
+
+def step(cfg: CPMLConfig, key: jax.Array, state: CPMLState, eta: float,
+         survivors: np.ndarray | None = None,
+         batch_idx: jax.Array | None = None) -> CPMLState:
+    """One master iteration.  survivors: indices of workers that responded
+    (None = all N; only the fastest `threshold` are used, like the paper).
+    batch_idx: (batch_rows,) row indices for this round's coded sub-batch
+    (required iff cfg.batch_rows is set)."""
+    surv = np.arange(cfg.N) if survivors is None else np.asarray(survivors)
+    assert len(surv) >= cfg.threshold, "not enough survivors to decode"
+    surv = surv[: cfg.threshold]
+    dmat = decode.make_decode_matrix(cfg, surv)
+    order = jnp.asarray(surv, jnp.int32)
+    assert (batch_idx is not None) == (cfg.batch_rows is not None), \
+        "batch_idx must be given exactly when cfg.batch_rows is set"
+    w2 = _round_jit(cfg, key, _w_internal(cfg, state.w), state.x_shares,
+                    state.xq_parts, state.y_parts, _w_internal(cfg, state.xty),
+                    dmat, order, batch_idx, *_scale_args(cfg, eta, state))
+    return dataclasses.replace(state, w=_w_public(cfg, w2))
+
+
+# ---------------------------------------------------------------------------
+# Static per-round schedule (keys / survivor decode matrices / batches)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Schedule:
+    """Everything the scan needs per round, precomputed and stacked."""
+    keys: jax.Array               # (iters, key) per-round weight-encode keys
+    decode_mats: jax.Array        # (iters, R, K) int32 — survivor decode
+    orders: jax.Array             # (iters, R) int32 — survivor indices
+    batch_idx: jax.Array | None   # (iters, b) int32 or None (full batch)
+
+
+def make_schedule(cfg: CPMLConfig, kloop: jax.Array, iters: int, mk: int,
+                  survivor_fn: Callable[[int], np.ndarray] | None = None
+                  ) -> Schedule:
+    keys = jax.vmap(lambda t: jax.random.fold_in(kloop, t))(jnp.arange(iters))
+    dmats, orders = [], []
+    for t in range(iters):
+        surv = survivor_fn(t) if survivor_fn is not None else None
+        surv = np.arange(cfg.N) if surv is None else np.asarray(surv)
+        assert len(surv) >= cfg.threshold, f"round {t}: too few survivors"
+        surv = surv[: cfg.threshold]
+        dmats.append(np.asarray(decode.make_decode_matrix(cfg, surv)))
+        orders.append(surv.astype(np.int32))
+    batch_idx = None
+    if cfg.batch_rows is not None:
+        assert cfg.batch_rows <= mk, (
+            f"batch_rows={cfg.batch_rows} exceeds the {mk} rows per "
+            f"encoded part (padded m / K)")
+        bkeys = jax.vmap(lambda t: jax.random.fold_in(kloop, iters + t))(
+            jnp.arange(iters))
+        batch_idx = jax.vmap(
+            lambda k: jax.random.choice(k, mk, (cfg.batch_rows,),
+                                        replace=False))(bkeys).astype(jnp.int32)
+    return Schedule(keys=keys,
+                    decode_mats=jnp.asarray(np.stack(dmats), jnp.int32),
+                    orders=jnp.asarray(np.stack(orders), jnp.int32),
+                    batch_idx=batch_idx)
+
+
+# ---------------------------------------------------------------------------
+# Training drivers: one jitted scan (production) + per-step reference loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _train_scan(cfg: CPMLConfig, eval_every: int, w0: jax.Array,
+                x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
+                xty_full: jax.Array, keys: jax.Array, dmats: jax.Array,
+                orders: jax.Array, batch_idx: jax.Array | None,
+                eta: jax.Array, m_int: jax.Array,
+                x_eval: jax.Array, y_eval: jax.Array):
+    def body(w2, xs):
+        t, key, dmat, order, bidx = xs
+        w_new = _round(cfg, key, w2, x_shares, xq_parts, y_parts, xty_full,
+                       dmat, order, bidx, eta, m_int)
+        if eval_every:
+            # full-data metrics only on the rounds train() will report
+            metrics = jax.lax.cond(
+                (t + 1) % eval_every == 0,
+                lambda w: _eval_metrics(cfg, w, x_eval, y_eval),
+                lambda w: (jnp.float32(0), jnp.float32(0)),
+                w_new)
+            return w_new, metrics
+        return w_new, None
+
+    ts = jnp.arange(keys.shape[0])
+    return jax.lax.scan(body, w0, (ts, keys, dmats, orders, batch_idx))
+
+
+def train(cfg: CPMLConfig, key: jax.Array, x: jax.Array, y: jax.Array,
+          iters: int, eta: float | None = None,
+          survivor_fn: Callable[[int], np.ndarray] | None = None,
+          eval_every: int = 0) -> tuple[jax.Array, list[dict[str, float]]]:
+    """Full Algorithm 1 as ONE jitted scan.  Returns (w, history)."""
+    ksetup, kloop = jax.random.split(key)
+    state = setup(cfg, ksetup, x, y)
+    if eta is None:
+        eta = lipschitz_eta(state.xq_real)
+    sched = make_schedule(cfg, kloop, iters, state.mk, survivor_fn)
+    w2, metrics = _train_scan(
+        cfg, int(eval_every), _w_internal(cfg, state.w), state.x_shares,
+        state.xq_parts, state.y_parts, _w_internal(cfg, state.xty), sched.keys,
+        sched.decode_mats, sched.orders, sched.batch_idx,
+        *_scale_args(cfg, eta, state),
+        state.xq_real[: state.m], state.y[: state.m])
+    history: list[dict[str, float]] = []
+    if eval_every:
+        losses, accs = metrics
+        for t in range(eval_every - 1, iters, eval_every):
+            history.append({"iter": t + 1, "loss": float(losses[t]),
+                            "acc": float(accs[t])})
+    return _w_public(cfg, w2), history
+
+
+def train_reference(cfg: CPMLConfig, key: jax.Array, x: jax.Array,
+                    y: jax.Array, iters: int, eta: float | None = None,
+                    survivor_fn: Callable[[int], np.ndarray] | None = None,
+                    eval_every: int = 0
+                    ) -> tuple[jax.Array, list[dict[str, float]]]:
+    """Per-step loop over the SAME schedule/round function as train().
+
+    Exists as the bit-exactness oracle for the scan engine (and as the
+    debuggable path: each round is a separate jit call you can inspect).
+    """
+    ksetup, kloop = jax.random.split(key)
+    state = setup(cfg, ksetup, x, y)
+    if eta is None:
+        eta = lipschitz_eta(state.xq_real)
+    sched = make_schedule(cfg, kloop, iters, state.mk, survivor_fn)
+    scale_args = _scale_args(cfg, eta, state)
+    w2 = _w_internal(cfg, state.w)
+    history: list[dict[str, float]] = []
+    for t in range(iters):
+        bidx = None if sched.batch_idx is None else sched.batch_idx[t]
+        w2 = _round_jit(cfg, sched.keys[t], w2, state.x_shares,
+                        state.xq_parts, state.y_parts,
+                        _w_internal(cfg, state.xty),
+                        sched.decode_mats[t], sched.orders[t], bidx,
+                        *scale_args)
+        if eval_every and (t + 1) % eval_every == 0:
+            l, a = _eval_metrics(cfg, w2, state.xq_real[: state.m],
+                                 state.y[: state.m])
+            history.append({"iter": t + 1, "loss": float(l), "acc": float(a)})
+    return _w_public(cfg, w2), history
+
+
+# ---------------------------------------------------------------------------
+# Cleartext-side helpers: step size, metrics
+# ---------------------------------------------------------------------------
+
+def lipschitz_eta(xq_real: jax.Array) -> float:
+    """eta = 1/L.  The cost (Eq. 1) carries a 1/m, so its Hessian is
+    (1/m) X̄ᵀ S X̄ with S ⪯ I/4, giving L = max eig(X̄ᵀX̄)/(4m).
+    (The paper's Lemma 2 states L = ||X̄||₂²/4, omitting the 1/m that its own
+    Eq. (1) introduces — with that L the step size is m× too small to
+    reproduce Fig. 3's 25-iteration accuracy.)  One-vs-all heads share the
+    same X, hence the same L."""
+    # power iteration — avoids O(d^3) eigendecomposition for large d.
+    m, d = xq_real.shape
+    v = jnp.ones((d,), jnp.float32) / np.sqrt(d)
+    for _ in range(50):
+        v = xq_real.T @ (xq_real @ v)
+        v = v / (jnp.linalg.norm(v) + 1e-30)
+    lam = v @ (xq_real.T @ (xq_real @ v))
+    return float(4.0 * m / lam)
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def cleartext_baseline(cfg: CPMLConfig, x: jax.Array, y: jax.Array,
+                       iters: int, eta: float | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Non-private GD on the quantized dataset with the TRUE sigmoid.
+
+    The comparison baseline the paper's Fig. 3/4 plots against: same X̄ as
+    the coded engine sees, no polynomial surrogate, no coding.  Returns
+    (w, xq) with w shaped like train()'s output ((d,) when c == 1) and xq
+    the dequantized dataset for metric evaluation.
+    """
+    xq = quantize.dequantize(quantize.quantize_data(x, cfg.lx, cfg.p),
+                             cfg.lx, cfg.p)
+    m = x.shape[0]
+    if eta is None:
+        eta = lipschitz_eta(xq)
+    targets = _targets(cfg, y)                           # (m, c)
+    w = jnp.zeros((x.shape[1], cfg.c))
+    for _ in range(iters):
+        w = w - eta * (xq.T @ (sigmoid(xq @ w) - targets)) / m
+    return _w_public(cfg, w), xq
+
+
+def loss_and_accuracy(w: jax.Array, x: jax.Array, y: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Binary logistic loss + accuracy (w (d,), y (m,) in {0,1})."""
+    z = x @ w
+    yhat = sigmoid(z)
+    eps = 1e-7
+    loss = -jnp.mean(y * jnp.log(yhat + eps) + (1 - y) * jnp.log(1 - yhat + eps))
+    acc = jnp.mean((yhat > 0.5) == (y > 0.5))
+    return loss, acc
+
+
+def multiclass_loss_and_accuracy(w: jax.Array, x: jax.Array, labels: jax.Array
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """One-vs-all logistic loss (mean over heads) + argmax accuracy.
+
+    w (d, c), labels (m,) integer class ids.
+    """
+    z = x @ w                                            # (m, c)
+    yhat = sigmoid(z)
+    onehot = jax.nn.one_hot(labels.astype(jnp.int32), w.shape[1],
+                            dtype=jnp.float32)
+    eps = 1e-7
+    loss = -jnp.mean(onehot * jnp.log(yhat + eps)
+                     + (1 - onehot) * jnp.log(1 - yhat + eps))
+    acc = jnp.mean(jnp.argmax(z, axis=1) == labels.astype(jnp.int32))
+    return loss, acc
+
+
+def per_class_accuracy(w: jax.Array, x: jax.Array, labels: jax.Array
+                       ) -> jax.Array:
+    """(c,) recall per class under the argmax decision rule."""
+    pred = jnp.argmax(x @ w, axis=1)
+    labels = labels.astype(jnp.int32)
+    c = w.shape[1]
+    hit = jnp.zeros((c,)).at[labels].add(pred == labels)
+    cnt = jnp.zeros((c,)).at[labels].add(1.0)
+    return hit / jnp.maximum(cnt, 1.0)
+
+
+def _eval_metrics(cfg: CPMLConfig, w2: jax.Array, x: jax.Array,
+                  y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    if cfg.c == 1:
+        return loss_and_accuracy(w2[:, 0], x, y)
+    return multiclass_loss_and_accuracy(w2, x, y)

@@ -30,6 +30,26 @@ def mnist_like(key: jax.Array, m: int = 12396, d: int = 784,
     return x, y
 
 
+def multiclass_mnist_like(key: jax.Array, m: int = 12396, d: int = 784,
+                          c: int = 10, sparsity: float = 0.8,
+                          margin: float = 6.0
+                          ) -> tuple[jax.Array, jax.Array]:
+    """c-class classification with pixel-like features. Returns (X, labels).
+
+    Same feature distribution as mnist_like (sparse, [0, 1]) so quantization
+    and wrap-around behaviour match; labels are sampled from a softmax over c
+    planted linear scores — the one-vs-all coded engine's natural target.
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.uniform(k1, (m, d))
+    mask = jax.random.uniform(k2, (m, d)) > sparsity
+    x = jnp.where(mask, x, 0.0)                      # mostly-zero "pixels"
+    w_true = jax.random.normal(k3, (d, c)) / np.sqrt(d)
+    logits = margin * (x @ w_true)
+    labels = jax.random.categorical(k4, logits, axis=-1).astype(jnp.int32)
+    return x, labels
+
+
 def lm_batch(key: jax.Array, batch: int, seq: int, vocab: int
              ) -> dict[str, jax.Array]:
     """Synthetic next-token-prediction batch (tokens + shifted labels)."""

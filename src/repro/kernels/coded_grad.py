@@ -13,9 +13,13 @@ this kernel streams each X̃ row-block through VMEM exactly once:
 => HBM traffic ~ halves; arithmetic intensity of the worker step ~ doubles.
 This is the paper's compute hot spot, so it is the kernel we optimize.
 
-Constraints: full W̃ (d x r) and the (1, d) accumulator row live in VMEM —
-fine for the paper's scales (d ~ 1.5k-8k: d*r*4B < 256KB).  The general
-tiled path is kernels/modmatmul.py.
+Multi-class (one-vs-all, DESIGN.md §4): the kernel is c-head generic.  W̃ is
+laid out (d, c*r) so the SAME streamed X̃ pass feeds all c polynomial heads
+(amortizing the dominant HBM read across classes); output block is (c, d).
+
+Constraints: full W̃ (d x c*r) and the (c, d) accumulator live in VMEM —
+fine for the paper's scales (d ~ 1.5k-8k: d*c*r*4B < 2MB at c=10,r=2).  The
+general tiled path is kernels/modmatmul.py.
 """
 from __future__ import annotations
 
@@ -60,23 +64,33 @@ def _exact_modmatmul_block(a, b, p, nl):
 
 
 def _coded_grad_kernel(x_ref, w_ref, c_ref, o_ref, *, p: int, nl: int,
-                       r: int, rows: int):
-    """Grid step over one X̃ row-block; accumulates into the (1, d) output."""
+                       r: int, c: int):
+    """Grid step over one X̃ row-block; accumulates into the (c, d) output.
+
+    W̃ arrives as (d, c*r): column block cls*r..cls*r+r holds the r
+    realizations of head cls, so ONE limb-matmul feeds all c polynomial
+    heads — the X̃ block is read from VMEM once regardless of c (this is
+    the amortization that makes multi-class one-vs-all nearly free).
+    """
     b = pl.program_id(0)
     x = x_ref[...]                     # (bm, d) int32
-    w = w_ref[...]                     # (d, r)  int32
-    # Z = X̃ @ W̃ mod p  (bm, r)
+    w = w_ref[...]                     # (d, c*r) int32
+    # Z = X̃ @ W̃ mod p  (bm, c*r)
     z = _exact_modmatmul_block(x, w, p, nl)
-    # s = ḡ(Z) = c̄_0 + sum_i c̄_i * prod_{j<=i} z_j   (bm,)
-    s = jnp.full((z.shape[0],), c_ref[0], jnp.int32)
-    prod = None
-    for i in range(1, r + 1):
-        zi = z[:, i - 1]
-        prod = zi if prod is None else field.mulmod(prod, zi, p)
-        s = field.addmod(s, field.mulmod(
-            jnp.broadcast_to(c_ref[i], prod.shape), prod, p), p)
-    # out += sᵀ @ X̃  -> (1, d); contraction depth bm <= 256 keeps exactness.
-    contrib = _exact_modmatmul_block(s[None, :], x, p, nl)
+    # s[:, cls] = ḡ(Z_cls) = c̄_0 + sum_i c̄_i * prod_{j<=i} z_{cls,j}
+    cols = []
+    for cls in range(c):
+        s = jnp.full((z.shape[0],), c_ref[0], jnp.int32)
+        prod = None
+        for i in range(1, r + 1):
+            zi = z[:, cls * r + i - 1]
+            prod = zi if prod is None else field.mulmod(prod, zi, p)
+            s = field.addmod(s, field.mulmod(
+                jnp.broadcast_to(c_ref[i], prod.shape), prod, p), p)
+        cols.append(s)
+    S = jnp.stack(cols, axis=0)        # (c, bm)
+    # out += Sᵀᵀ @ X̃ -> (c, d); contraction depth bm <= 256 keeps exactness.
+    contrib = _exact_modmatmul_block(S, x, p, nl)
 
     @pl.when(b == 0)
     def _init():
@@ -85,32 +99,51 @@ def _coded_grad_kernel(x_ref, w_ref, c_ref, o_ref, *, p: int, nl: int,
     o_ref[...] = field.addmod(o_ref[...], contrib, p)
 
 
-def coded_grad(x: jax.Array, w: jax.Array, cbar: jax.Array,
-               p: int = field.P, bm: int = MAX_CHUNK,
-               interpret: bool | None = None) -> jax.Array:
-    """Fused worker step: x (mk, d), w (d, r), cbar (r+1,) -> (d,) mod p."""
-    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+def _coded_grad_impl(x: jax.Array, w3: jax.Array, cbar: jax.Array,
+                     p: int, bm: int, interpret: bool | None) -> jax.Array:
+    """x (mk, d), w3 (d, c, r), cbar (r+1,) -> (d, c) mod p."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     mk, d = x.shape
-    r = w.shape[1]
+    _, c, r = w3.shape
+    w2 = w3.reshape(d, c * r)
     bm = min(bm, MAX_CHUNK, mk)  # row-block is also the 2nd contraction depth
     mp = -(-mk // bm) * bm
     x_p = jnp.pad(x, ((0, mp - mk), (0, 0)))  # zero rows: ḡ(0)=c0 but s*0ᵀ...
     # NOTE: padded rows produce s=c̄_0 != 0, but contribute s * x_row = 0
     # because the padded x rows are zero — the X̃ᵀ reduction kills them.
     nl = field.n_limbs(p)
-    kernel = functools.partial(_coded_grad_kernel, p=p, nl=nl, r=r, rows=bm)
+    kernel = functools.partial(_coded_grad_kernel, p=p, nl=nl, r=r, c=c)
     out = pl.pallas_call(
         kernel,
         grid=(mp // bm,),
         in_specs=[
             pl.BlockSpec((bm, d), lambda b: (b, 0)),
-            pl.BlockSpec((d, r), lambda b: (0, 0)),
+            pl.BlockSpec((d, c * r), lambda b: (0, 0)),
             pl.BlockSpec((r + 1,), lambda b: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, d), lambda b: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, d), jnp.int32),
+        out_specs=pl.BlockSpec((c, d), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, d), jnp.int32),
         interpret=interpret,
-    )(x_p, w, cbar.astype(jnp.int32))
-    return out[0]
+    )(x_p, w2, cbar.astype(jnp.int32))
+    return out.T
+
+
+def coded_grad(x: jax.Array, w: jax.Array, cbar: jax.Array,
+               p: int = field.P, bm: int = MAX_CHUNK,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused worker step: x (mk, d), w (d, r), cbar (r+1,) -> (d,) mod p."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    return _coded_grad_impl(x, w[:, None, :], cbar, p, bm, interpret)[:, 0]
+
+
+def coded_grad_mc(x: jax.Array, w: jax.Array, cbar: jax.Array,
+                  p: int = field.P, bm: int = MAX_CHUNK,
+                  interpret: bool | None = None) -> jax.Array:
+    """Multi-head fused worker step (one-vs-all logistic regression).
+
+    x (mk, d), w (d, c, r), cbar (r+1,) -> (d, c) mod p.  The c heads share
+    the single streamed pass over X̃ (see _coded_grad_kernel).
+    """
+    assert x.ndim == 2 and w.ndim == 3 and x.shape[1] == w.shape[0]
+    return _coded_grad_impl(x, w, cbar, p, bm, interpret)

@@ -32,3 +32,12 @@ def coded_grad(x: jax.Array, w: jax.Array, cbar: jax.Array,
     if use_pallas:
         return _cg.coded_grad(x, w, cbar, p)
     return _ref.coded_grad_ref(x, w, cbar, p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "use_pallas"))
+def coded_grad_mc(x: jax.Array, w: jax.Array, cbar: jax.Array,
+                  p: int = field.P, use_pallas: bool = True) -> jax.Array:
+    """Multi-head worker step: x (mk, d), w (d, c, r) -> (d, c) mod p."""
+    if use_pallas:
+        return _cg.coded_grad_mc(x, w, cbar, p)
+    return _ref.coded_grad_mc_ref(x, w, cbar, p)

@@ -1,0 +1,42 @@
+"""jax version compatibility for SPMD primitives.
+
+The repo targets the modern top-level APIs (jax.shard_map, jax.set_mesh,
+mesh axis_types); this shim keeps every call site working on jax 0.4.x
+(the pinned container toolchain), where those live under jax.experimental
+or do not exist.  Only jax is imported here — any layer may depend on it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map on new jax; jax.experimental.shard_map on 0.4.x.
+
+    ``check=False`` disables the replication/varying-manual-axes check
+    (check_vma on new jax) — needed when an all_gather makes the output
+    replicated in a way the static check cannot infer.  The 0.4.x
+    ``check_rep`` checker mis-types scan carries (its own error message
+    recommends disabling it), so the fallback always passes check_rep=False.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def ambient_mesh():
+    """The active mesh: jax.set_mesh (new) or ``with mesh:`` (0.4.x)."""
+    get_abs = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abs is not None:
+        mesh = get_abs()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    assert not mesh.empty, (
+        "no active mesh: wrap the call in `with mesh:` "
+        "(or jax.set_mesh on newer jax)")
+    return mesh

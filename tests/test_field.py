@@ -1,42 +1,42 @@
-"""Property tests for the F_p arithmetic layer (hypothesis)."""
+"""Deterministic tests for the F_p arithmetic layer.
+
+Property-based (randomized) coverage of the same laws lives in
+test_field_properties.py behind ``pytest.importorskip("hypothesis")`` —
+hypothesis is an OPTIONAL dev dependency (see DESIGN.md §7); everything here
+runs without it.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import field
 from conftest import exact_modmatmul
 
 PRIMES = [field.P, field.P30]
-elem = lambda p: st.integers(min_value=0, max_value=p - 1)
 
 
 @pytest.mark.parametrize("p", PRIMES)
-@settings(max_examples=50, deadline=None)
-@given(data=st.data())
-def test_ring_laws(p, data):
-    a = data.draw(elem(p))
-    b = data.draw(elem(p))
-    c = data.draw(elem(p))
-    A, B, C = (jnp.int32(x) for x in (a, b, c))
-    assert int(field.addmod(A, B, p)) == (a + b) % p
-    assert int(field.submod(A, B, p)) == (a - b) % p
-    assert int(field.mulmod(A, B, p)) == (a * b) % p
-    # distributivity
-    lhs = field.mulmod(A, field.addmod(B, C, p), p)
-    rhs = field.addmod(field.mulmod(A, B, p), field.mulmod(A, C, p), p)
-    assert int(lhs) == int(rhs)
+def test_ring_laws_deterministic(p):
+    """addmod/submod/mulmod + distributivity on a fixed worst-case triple."""
+    cases = [(0, 0, 0), (1, p - 1, 1), (p - 1, p - 1, p - 1),
+             (p // 2, p // 2 + 1, 3), (12345, 67890, p - 2)]
+    for a, b, c in cases:
+        A, B, C = (jnp.int32(x) for x in (a, b, c))
+        assert int(field.addmod(A, B, p)) == (a + b) % p
+        assert int(field.submod(A, B, p)) == (a - b) % p
+        assert int(field.mulmod(A, B, p)) == (a * b) % p
+        lhs = field.mulmod(A, field.addmod(B, C, p), p)
+        rhs = field.addmod(field.mulmod(A, B, p), field.mulmod(A, C, p), p)
+        assert int(lhs) == int(rhs)
 
 
 @pytest.mark.parametrize("p", PRIMES)
-@settings(max_examples=20, deadline=None)
-@given(data=st.data())
-def test_inverse_and_pow(p, data):
-    a = data.draw(st.integers(min_value=1, max_value=p - 1))
-    A = jnp.int32(a)
-    assert int(field.mulmod(field.invmod(A, p), A, p)) == 1
-    e = data.draw(st.integers(min_value=0, max_value=50))
-    assert int(field.powmod(A, e, p)) == pow(a, e, p)
+def test_inverse_and_pow_deterministic(p):
+    for a in (1, 2, p - 1, p // 3):
+        A = jnp.int32(a)
+        assert int(field.mulmod(field.invmod(A, p), A, p)) == 1
+        for e in (0, 1, 2, 17, 50):
+            assert int(field.powmod(A, e, p)) == pow(a, e, p)
 
 
 @pytest.mark.parametrize("p", PRIMES)

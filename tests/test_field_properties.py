@@ -1,0 +1,45 @@
+"""Property tests for the F_p arithmetic layer (hypothesis).
+
+hypothesis is an optional dev dependency (DESIGN.md §7): this module skips
+cleanly when it is absent; the deterministic fallback cases for the same
+laws live in test_field.py and always run.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field
+
+PRIMES = [field.P, field.P30]
+elem = lambda p: st.integers(min_value=0, max_value=p - 1)
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_ring_laws(p, data):
+    a = data.draw(elem(p))
+    b = data.draw(elem(p))
+    c = data.draw(elem(p))
+    A, B, C = (jnp.int32(x) for x in (a, b, c))
+    assert int(field.addmod(A, B, p)) == (a + b) % p
+    assert int(field.submod(A, B, p)) == (a - b) % p
+    assert int(field.mulmod(A, B, p)) == (a * b) % p
+    # distributivity
+    lhs = field.mulmod(A, field.addmod(B, C, p), p)
+    rhs = field.addmod(field.mulmod(A, B, p), field.mulmod(A, C, p), p)
+    assert int(lhs) == int(rhs)
+
+
+@pytest.mark.parametrize("p", PRIMES)
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_inverse_and_pow(p, data):
+    a = data.draw(st.integers(min_value=1, max_value=p - 1))
+    A = jnp.int32(a)
+    assert int(field.mulmod(field.invmod(A, p), A, p)) == 1
+    e = data.draw(st.integers(min_value=0, max_value=50))
+    assert int(field.powmod(A, e, p)) == pow(a, e, p)

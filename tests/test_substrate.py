@@ -104,8 +104,8 @@ def test_checkpoint_async(tmp_path):
 def test_elastic_restore_with_sharding(tmp_path):
     """Restore places leaves with provided shardings (1-device 'mesh')."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((1,), ("data",))
     mgr = CheckpointManager(str(tmp_path), async_write=False)
     mgr.save(2, {"params": {"w": jnp.ones((4, 4))}})
     sh = {"params": {"w": NamedSharding(mesh, P("data", None))}}

@@ -68,6 +68,22 @@ def test_paper_accuracy_reproduction():
     assert abs(acc_coded - float(acc_ref)) < 0.03
 
 
+def test_cpml_train_driver(tmp_path):
+    """The coded-workload CLI end to end: multi-class + mini-batch + a
+    straggler every round, json metrics out."""
+    from repro.launch import cpml_train
+    out = tmp_path / "cpml.json"
+    rc = cpml_train.main(["--classes", "3", "--m", "300", "--d", "24",
+                          "--iters", "4", "--eval-every", "2",
+                          "--batch-rows", "32", "--drop-workers", "1",
+                          "--json-out", str(out)])
+    assert rc == 0
+    import json
+    rep = json.loads(out.read_text())
+    assert rep["config"]["c"] == 3 and len(rep["history"]) == 2
+    assert 0.0 <= rep["acc_coded"] <= 1.0
+
+
 @pytest.mark.slow
 def test_shard_map_backend_multidevice():
     """CPML 'shard' backend on an 8-device forced-CPU mesh == vmap backend."""
@@ -79,17 +95,28 @@ from repro.core import protocol
 from repro.data import synthetic
 
 x, y = synthetic.mnist_like(jax.random.PRNGKey(42), m=400, d=30)
-mesh = jax.make_mesh((8,), ("workers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("workers",))
 cfgv = protocol.CPMLConfig(N=8, K=2, T=1, r=1, backend="vmap")
 sv = protocol.setup(cfgv, jax.random.PRNGKey(0), x, y)
 wv = protocol.step(cfgv, jax.random.PRNGKey(1), sv, 0.5).w
 cfgs = protocol.CPMLConfig(N=8, K=2, T=1, r=1, backend="shard")
 ss = protocol.setup(cfgs, jax.random.PRNGKey(0), x, y)
-with jax.set_mesh(mesh):
+with mesh:
     ws = protocol.step(cfgs, jax.random.PRNGKey(1), ss, 0.5).w
 assert np.allclose(np.asarray(wv), np.asarray(ws), atol=1e-6), \
     float(jnp.abs(wv - ws).max())
+# scan engine == per-step reference loop, bit-identical, on the shard
+# backend — with and without the fused worker kernel (acceptance matrix).
+for kern in (False, True):
+    cfgk = protocol.CPMLConfig(N=8, K=2, T=1, r=1, c=3, backend="shard",
+                               use_kernel=kern)
+    xm, ym = synthetic.multiclass_mnist_like(jax.random.PRNGKey(2), m=240,
+                                             d=24, c=3)
+    with mesh:
+        w1, _ = protocol.train(cfgk, jax.random.PRNGKey(5), xm, ym, iters=10)
+        w2, _ = protocol.train_reference(cfgk, jax.random.PRNGKey(5), xm, ym,
+                                         iters=10)
+    assert (np.asarray(w1) == np.asarray(w2)).all(), kern
 print("SHARD_OK")
 """
     env = dict(os.environ, PYTHONPATH=SRC)
