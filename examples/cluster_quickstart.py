@@ -1,0 +1,41 @@
+"""Cluster-runtime quickstart: straggler-tolerant training, measured.
+
+Trains private logistic regression through the event-driven cluster
+simulation (repro.cluster) under a heavy-tailed latency profile, then
+replays the OBSERVED responder trace through the reference engine to show
+the cluster layer changed timing only — the weights are bit-identical.
+
+    PYTHONPATH=src python examples/cluster_quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.cluster import ClusterRunner, LognormalTailLatency
+from repro.core import protocol
+from repro.data import synthetic
+
+cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)
+x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=1000, d=64, margin=12.0)
+
+latency = LognormalTailLatency(seed=0, tail_prob=0.1, tail_scale=10.0)
+runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, latency)
+w = runner.run(iters=20)
+
+stats = runner.wait_stats()
+print(f"threshold: decode from the fastest {cfg.threshold} of N={cfg.N}")
+print(f"per-round wait: {stats['coded_T']['mean']:.2f}s (coded first-T) vs "
+      f"{stats['wait_all']['mean']:.2f}s (wait-for-all)")
+print(f"simulated run: {stats['coded_T']['total']:.1f}s vs "
+      f"{stats['wait_all']['total']:.1f}s — "
+      f"{stats['wait_all']['total'] / stats['coded_T']['total']:.2f}x faster")
+
+# the cluster layer is timing-only: replaying its responder trace through
+# the per-step reference engine reproduces the weights bit-for-bit.
+w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                    iters=20, survivor_fn=runner.survivor_fn())
+assert (np.asarray(w) == np.asarray(w_ref)).all()
+print("bit-identical to train_reference over the same responder trace ✓")
+
+_, xq = protocol.cleartext_baseline(cfg, x, y, 0)
+_, acc = protocol.loss_and_accuracy(w, xq, y)
+print(f"accuracy after 20 private iterations: {float(acc):.2%}")

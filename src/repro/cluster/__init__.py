@@ -1,0 +1,73 @@
+"""Coded cluster runtime: event-driven master/worker simulation (DESIGN.md §7).
+
+Simulates the paper's EC2 deployment end-to-end: a master dispatches each
+protocol round to N workers over a transport, collects results as they
+arrive in simulated time, and decodes the moment the fastest ``threshold``
+responders are in — the first-T-responders property that separates coded
+computing from MPC baselines (which must wait for everyone, every round).
+
+Modules:
+
+  messages.py   typed master<->worker messages (EncodeShare, WorkerResult,
+                Heartbeat) + endpoint naming
+  transport.py  transport abstraction; InProcessTransport delivers on a
+                simulated clock (heap of pending deliveries), interface
+                ready for a multi-process socket transport later
+  latency.py    seeded, replayable per-worker latency models
+                (deterministic / lognormal-tail / bursty-straggler / dead)
+  scheduler.py  the event loop: dispatch round -> advance clock to next
+                arrival -> decode at the threshold-th result; records
+                first-T vs wait-all completion times per round
+  runner.py     ClusterRunner: drives core/protocol rounds through the
+                scheduler, feeds observed responder traces into decode
+                matrix selection, integrates runtime/resilience
+                (HeartbeatMonitor exclusion + ResilientLoop checkpointing)
+
+Numerics stay in core/protocol: the runner calls ``engine.round_fn`` with
+its observed responder order, so cluster training is bit-identical to
+``engine.train_reference`` replaying the same trace (tests/test_cluster.py).
+"""
+from repro.cluster.latency import (
+    BurstyStragglerLatency,
+    DeadWorkerLatency,
+    DeterministicLatency,
+    LatencyModel,
+    LognormalTailLatency,
+    make_latency,
+)
+from repro.cluster.messages import (
+    MASTER,
+    EncodeShare,
+    Heartbeat,
+    WorkerResult,
+    worker_endpoint,
+)
+from repro.cluster.runner import ClusterRunner, RoundRecord, wait_summary
+from repro.cluster.scheduler import (
+    ClusterDecodeError,
+    EventScheduler,
+    RoundTrace,
+)
+from repro.cluster.transport import InProcessTransport, Transport
+
+__all__ = [
+    "MASTER",
+    "BurstyStragglerLatency",
+    "ClusterDecodeError",
+    "ClusterRunner",
+    "DeadWorkerLatency",
+    "DeterministicLatency",
+    "EncodeShare",
+    "EventScheduler",
+    "Heartbeat",
+    "InProcessTransport",
+    "LatencyModel",
+    "LognormalTailLatency",
+    "RoundRecord",
+    "RoundTrace",
+    "Transport",
+    "WorkerResult",
+    "make_latency",
+    "wait_summary",
+    "worker_endpoint",
+]

@@ -1,0 +1,46 @@
+"""Typed master<->worker messages + endpoint naming (DESIGN.md §7).
+
+Every in-flight unit of the cluster protocol is one of three frozen
+dataclasses.  Payloads are deliberately ``Any``: the in-process simulation
+carries lightweight references (the numeric work stays on-device in
+core/protocol — see runner.py), while a future multi-process transport
+would carry serialized arrays through the SAME message types.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+MASTER = "master"
+
+
+def worker_endpoint(worker: int) -> str:
+    return f"worker/{worker}"
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodeShare:
+    """Master -> worker: round t's coded weight share (+ optional batch)."""
+    round: int
+    worker: int
+    payload: Any = None          # weight-share ref / serialized W̃_i
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerResult:
+    """Worker -> master: the worker's polynomial evaluation f(X̃_i, W̃_i)."""
+    round: int
+    worker: int
+    compute_s: float             # simulated compute+network time this round
+    payload: Any = None          # result ref / serialized (d, c) field array
+
+
+@dataclasses.dataclass(frozen=True)
+class Heartbeat:
+    """Worker -> master liveness ack, sent on receipt of an EncodeShare.
+
+    Dead workers never ack; the HeartbeatMonitor's timeout turns silence
+    into exclusion from the next round's dispatch set.
+    """
+    worker: int
+    sent_at: float               # simulated send time

@@ -1,0 +1,238 @@
+"""ClusterRunner: coded training driven by the event-driven cluster sim.
+
+Division of labor (DESIGN.md §7): the scheduler moves messages and
+simulated time; ALL gradient numerics run through ``engine.round_fn`` — the
+exact per-round function train()/train_reference() use — with the decode
+matrix and responder order observed from the simulation.  Consequence: a
+ClusterRunner run is BIT-IDENTICAL to ``engine.train_reference`` replaying
+the same responder trace (tests/test_cluster.py), so the cluster layer can
+never silently change training semantics, only timing.
+
+Resilience integration (runtime/resilience.py):
+
+  * HeartbeatMonitor — results/acks feed it on the SIMULATED clock; workers
+    that stop heartbeating (dead) drop out of the dispatch set, and known
+    stragglers are speculatively excluded from dispatch while the fast set
+    STRICTLY exceeds the recovery threshold (exact coverage leaves no slack
+    for an undetected death).
+  * ResilientLoop + CheckpointManager — ``run_resilient(...)``
+    checkpoints every k rounds; a round that starves (fewer than
+    ``threshold`` responses inside the timeout) raises ClusterDecodeError,
+    the loop restores the last checkpoint, and the ``on_restore`` hook
+    reprovisions dead workers (latency.revive + monitor.revive) before
+    replay — mid-run worker death costs a rollback, not the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.latency import LatencyModel
+from repro.cluster.scheduler import ClusterDecodeError, EventScheduler, RoundTrace
+from repro.cluster.transport import Transport
+from repro.core.protocol import engine
+from repro.core.protocol.config import CPMLConfig
+from repro.runtime.resilience import HeartbeatMonitor, ResilientLoop
+
+
+def wait_summary(a) -> dict[str, float]:
+    """mean/p50/p95/total of a wait-time series (inf stats when empty).
+
+    The one aggregation both runner.wait_stats and bench_cluster.py report,
+    so BENCH_cluster.json and live stats can never disagree on keys."""
+    a = np.asarray(a, dtype=float)
+    if a.size == 0:
+        return {"mean": math.inf, "p50": math.inf, "p95": math.inf,
+                "total": math.inf}
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)), "total": float(a.sum())}
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Per-round outcome: who decoded, and what each wait policy cost."""
+    round: int
+    survivors: np.ndarray        # decode order used (first `threshold`)
+    n_responders: int            # responses in by the decode instant
+    dispatched: np.ndarray
+    coded_wait_s: float          # wait-for-fastest-T (the paper's policy)
+    all_wait_s: float            # wait-for-all counterfactual (inf = dead)
+    replayed: bool = False       # True when re-run after a restore
+
+
+class ClusterRunner:
+    """Drives ``iters`` protocol rounds through the event scheduler.
+
+    One runner = one training run (like engine.train); ``run()`` starts
+    from the initial weights every call.
+    """
+
+    def __init__(self, cfg: CPMLConfig, key, x, y,
+                 latency: LatencyModel, *, eta: float | None = None,
+                 transport: Transport | None = None,
+                 round_timeout_s: float = math.inf,
+                 heartbeat_timeout_s: float = math.inf,
+                 straggler_factor: float = 3.0,
+                 master_overhead_s: float = 0.0,
+                 exclude_stragglers: bool = True):
+        # heartbeat_timeout_s defaults to inf: in the simulation, true
+        # deaths surface as round starvation (-> mark_failed) and slowness
+        # as the EWMA straggler stat; a finite timeout models a gossip-style
+        # failure detector and must exceed the worst healthy round, or a
+        # single long round makes healthy-but-quiet workers look dead.
+        self.cfg = cfg
+        ksetup, self.kloop = jax.random.split(key)
+        self.state = engine.setup(cfg, ksetup, x, y)
+        self.eta = (engine.lipschitz_eta(self.state.xq_real)
+                    if eta is None else eta)
+        self._round = engine.round_fn(cfg, self.state, self.eta)
+        self.latency = latency
+        self.round_timeout_s = round_timeout_s
+        self.exclude_stragglers = exclude_stragglers
+        self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
+                                        straggler_factor=straggler_factor,
+                                        now=0.0)
+        self.scheduler = EventScheduler(cfg.N, latency, transport,
+                                        master_overhead_s=master_overhead_s)
+        self.w2 = engine._w_internal(cfg, self.state.w)
+        self.records: dict[int, RoundRecord] = {}
+        self.traces: dict[int, RoundTrace] = {}
+        self.restarts = 0
+
+    # ------------------------------------------------------------------
+    # Dispatch-set policy: monitor-alive workers, minus known stragglers
+    # while the fast set strictly exceeds the recovery threshold.
+    # ------------------------------------------------------------------
+
+    def _alive(self, now: float) -> np.ndarray:
+        return np.array(
+            [i for i, w in self.monitor.workers.items()
+             if w.alive and (now - w.last_heartbeat)
+             <= self.monitor.timeout_s],
+            dtype=np.int64)
+
+    def dispatch_set(self) -> np.ndarray:
+        now = self.scheduler.clock
+        alive = self._alive(now)
+        if self.exclude_stragglers:
+            fast = self.monitor.survivors(now=now)
+            # STRICTLY more than threshold: speculative exclusion must leave
+            # slack, because the fast set can still contain an undetected
+            # dead worker — dispatching exactly `threshold` workers means a
+            # single silent failure starves the round.
+            if len(fast) > self.cfg.threshold:
+                return fast
+        return alive
+
+    # ------------------------------------------------------------------
+    # One round
+    # ------------------------------------------------------------------
+
+    def step_round(self, t: int, iters: int, replayed: bool = False
+                   ) -> RoundTrace:
+        cfg = self.cfg
+        workers = self.dispatch_set()
+        if len(workers) < cfg.threshold:
+            raise ClusterDecodeError(
+                f"round {t}: only {len(workers)} dispatchable workers < "
+                f"recovery threshold {cfg.threshold}")
+        trace = self.scheduler.dispatch_round(
+            t, cfg.threshold, workers=workers, monitor=self.monitor,
+            timeout_s=self.round_timeout_s)
+        if not math.isfinite(trace.t_first_R):
+            # non-responders within the timeout are presumed dead
+            for w in workers:
+                if int(w) not in trace.arrivals:
+                    self.monitor.mark_failed(int(w))
+            raise ClusterDecodeError(
+                f"round {t}: {len(trace.responders)} responses < threshold "
+                f"{cfg.threshold} within {self.round_timeout_s}s")
+
+        dmat, order = engine.survivor_round(cfg, trace.responders)
+        bidx = (engine.draw_batch(cfg, self.kloop, iters, self.state.mk, t)
+                if cfg.batch_rows is not None else None)
+        self.w2 = self._round(engine.round_key(self.kloop, t), self.w2,
+                              jnp.asarray(dmat, jnp.int32),
+                              jnp.asarray(order, jnp.int32), bidx)
+        self.traces[t] = trace
+        self.records[t] = RoundRecord(
+            round=t, survivors=order.copy(),
+            n_responders=len(trace.responders),
+            dispatched=trace.dispatched.copy(),
+            coded_wait_s=trace.coded_wait_s, all_wait_s=trace.all_wait_s,
+            replayed=replayed)
+        return trace
+
+    # ------------------------------------------------------------------
+    # Training drivers
+    # ------------------------------------------------------------------
+
+    def run(self, iters: int):
+        """Plain run: any starved round raises ClusterDecodeError."""
+        self._reset()
+        for t in range(iters):
+            self.step_round(t, iters)
+        return engine._w_public(self.cfg, self.w2)
+
+    def run_resilient(self, iters: int, ckpt_manager,
+                      checkpoint_every: int = 5, max_retries: int = 3):
+        """Checkpointed run: a starved round restores the last checkpoint,
+        reprovisions dead workers, and replays."""
+        self._reset()
+        replaying = {"flag": False}
+
+        def step_fn(state, t):
+            self.w2 = jnp.asarray(state["train"]["w2"])
+            self.step_round(t, iters, replayed=replaying["flag"])
+            return {"train": {"w2": np.asarray(self.w2)}}
+
+        def on_restore(step):
+            replaying["flag"] = True
+            now = self.scheduler.clock
+            for i, ws in self.monitor.workers.items():
+                if not ws.alive:
+                    self.latency.revive(i, at_round=step)
+                    self.monitor.revive(i, now=now)
+
+        loop = ResilientLoop(ckpt_manager, checkpoint_every=checkpoint_every,
+                             max_retries=max_retries, on_restore=on_restore)
+        state0 = {"train": {"w2": np.asarray(self.w2)}}
+        ckpt_manager.save(0, state0)
+        ckpt_manager.wait()
+        loop.run(state0, step_fn, start_step=0, num_steps=iters)
+        self.restarts = loop.restarts
+        return engine._w_public(self.cfg, self.w2)
+
+    def _reset(self):
+        self.w2 = engine._w_internal(self.cfg, self.state.w)
+        self.records.clear()
+        self.traces.clear()
+
+    # ------------------------------------------------------------------
+    # Trace export + stats
+    # ------------------------------------------------------------------
+
+    def survivor_fn(self) -> Callable[[int], np.ndarray]:
+        """Responder trace -> survivor_fn for engine.train/train_reference.
+
+        Replaying it through the static-schedule drivers reproduces this
+        run's weights bit-for-bit (the decode order fed to round_fn is
+        identical).
+        """
+        trace = {t: rec.survivors for t, rec in self.records.items()}
+        return lambda t: trace[t]
+
+    def wait_stats(self) -> dict[str, dict[str, float]]:
+        """Per-round completion-time stats: coded first-T vs wait-for-all."""
+        recs = sorted(self.records.values(), key=lambda r: r.round)
+        coded = np.array([r.coded_wait_s for r in recs])
+        allw = np.array([r.all_wait_s for r in recs])
+        return {"coded_T": wait_summary(coded),
+                "wait_all": wait_summary(allw[np.isfinite(allw)]),
+                "rounds": {"n": float(len(recs)),
+                           "dead_rounds": float(np.sum(~np.isfinite(allw)))}}

@@ -1,0 +1,162 @@
+"""Event-loop scheduler: simulated-time round dispatch + first-T collect.
+
+The scheduler owns the simulated clock.  One round (DESIGN.md §7):
+
+  1. DISPATCH  at clock t0: send an EncodeShare to every worker in the
+     dispatch set; each alive worker acks with a Heartbeat after a small
+     network delay and sends its WorkerResult after its sampled latency
+     (latency.py).  Dead workers (latency = inf) send nothing.
+  2. COLLECT   pop master deliveries in time order, advancing the clock to
+     each arrival, until ``threshold`` results of THIS round are in (late
+     results of earlier rounds still update the heartbeat monitor — a late
+     reply proves the worker is alive, just slow).
+  3. DECODE    the moment the threshold-th result lands the master decodes;
+     the clock at that instant is the round's wait-for-fastest-T completion
+     time.  ``t_all`` (when the LAST dispatched response would have landed)
+     is what a wait-for-all master — or an MPC baseline that cannot treat
+     stragglers as erasures — would have paid for the same round.
+
+The scheduler moves messages and time only; the gradient numerics stay in
+core/protocol (see runner.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.cluster.latency import LatencyModel
+from repro.cluster.messages import (
+    MASTER,
+    EncodeShare,
+    Heartbeat,
+    WorkerResult,
+    worker_endpoint,
+)
+from repro.cluster.transport import InProcessTransport, Transport
+
+
+class ClusterDecodeError(RuntimeError):
+    """Fewer than ``threshold`` results arrived within the round timeout —
+    the coded decode is infeasible and recovery (checkpoint restore +
+    worker reprovision) must take over."""
+
+
+@dataclasses.dataclass
+class RoundTrace:
+    """Everything the master observed about one round's timing."""
+    round: int
+    t_start: float
+    dispatched: np.ndarray          # workers the share was sent to
+    responders: np.ndarray          # arrival order (may exceed threshold on
+                                    # ties at the decode instant)
+    arrivals: dict[int, float]      # worker -> absolute arrival time
+    latencies: dict[int, float]     # worker -> sampled latency (inf = dead)
+    t_first_R: float                # clock at the threshold-th arrival
+    t_all: float                    # when the slowest dispatched response
+                                    # lands (inf if any worker is dead)
+
+    @property
+    def coded_wait_s(self) -> float:
+        return self.t_first_R - self.t_start
+
+    @property
+    def all_wait_s(self) -> float:
+        return self.t_all - self.t_start
+
+
+class EventScheduler:
+    def __init__(self, n_workers: int, latency: LatencyModel,
+                 transport: Transport | None = None,
+                 heartbeat_delay_s: float = 1e-3,
+                 master_overhead_s: float = 0.0):
+        self.n = n_workers
+        self.latency = latency
+        self.transport = transport or InProcessTransport()
+        self.heartbeat_delay_s = heartbeat_delay_s
+        self.master_overhead_s = master_overhead_s
+        self.clock = 0.0
+
+    def _deliver_to_master(self, now: float, round: int, monitor,
+                           dispatched: set[int],
+                           arrivals: dict[int, float],
+                           latencies: dict[int, float],
+                           responders: list[int]) -> None:
+        for at, msg in self.transport.recv(MASTER, now):
+            if isinstance(msg, Heartbeat):
+                if monitor is not None:
+                    monitor.heartbeat(msg.worker, now=at)
+            elif isinstance(msg, WorkerResult):
+                if monitor is not None:
+                    # late results of past rounds still count as liveness +
+                    # latency evidence; only THIS round's feed the decode.
+                    monitor.heartbeat(msg.worker, latency_s=msg.compute_s,
+                                      now=at)
+                # decode accepts only workers dispatched THIS attempt: after
+                # a checkpoint restore, a stale result for the same round
+                # number from the aborted attempt (or from a worker the
+                # replay excluded) must not enter the responder trace.
+                if (msg.round == round and msg.worker in dispatched
+                        and msg.worker not in arrivals):
+                    arrivals[msg.worker] = at
+                    latencies[msg.worker] = msg.compute_s
+                    responders.append(msg.worker)
+
+    def dispatch_round(self, round: int, threshold: int,
+                       workers: np.ndarray | None = None,
+                       monitor=None,
+                       timeout_s: float = math.inf) -> RoundTrace:
+        """Run one round's event loop; returns the observed RoundTrace.
+
+        Does NOT raise when fewer than ``threshold`` results arrive — the
+        trace reports ``t_first_R = inf`` and the caller (runner.py) decides
+        between failing and recovering.
+        """
+        workers = np.arange(self.n) if workers is None else np.asarray(workers)
+        t0 = self.clock
+        sampled: dict[int, float] = {}
+        for w in workers:
+            w = int(w)
+            # the (simulated) worker consumes its previous share when the
+            # next one is dispatched — without this drain the per-worker
+            # inboxes grow one EncodeShare per round forever.  The CURRENT
+            # round's share stays queued and inspectable until then.
+            self.transport.recv(worker_endpoint(w), t0)
+            self.transport.send(worker_endpoint(w), EncodeShare(round, w),
+                                at=t0)
+            lat = self.latency.sample(round, w)
+            sampled[w] = lat
+            if math.isfinite(lat):
+                self.transport.send(MASTER, Heartbeat(w, t0), at=t0,
+                                    delay=self.heartbeat_delay_s)
+            # inf delay = the transport drops it: a dead worker's silence
+            self.transport.send(MASTER, WorkerResult(round, w, lat),
+                                at=t0, delay=lat)
+
+        arrivals: dict[int, float] = {}
+        latencies: dict[int, float] = {}
+        responders: list[int] = []
+        dispatched = {int(w) for w in workers}
+        deadline = t0 + timeout_s
+        while len(responders) < threshold:
+            nxt = self.transport.next_delivery(MASTER)
+            if nxt is None or nxt > deadline:
+                break                      # starved: not enough responses
+            self.clock = nxt
+            self._deliver_to_master(self.clock, round, monitor, dispatched,
+                                    arrivals, latencies, responders)
+
+        got_R = len(responders) >= threshold
+        t_first_R = self.clock if got_R else math.inf
+        t_all = t0 + max(sampled.values(), default=0.0)
+        if got_R:
+            self.clock += self.master_overhead_s
+        else:
+            self.clock = min(deadline, t_all) if math.isfinite(deadline) \
+                else self.clock
+        return RoundTrace(
+            round=round, t_start=t0, dispatched=workers,
+            responders=np.asarray(responders, dtype=np.int64),
+            arrivals=arrivals, latencies=latencies,
+            t_first_R=t_first_R, t_all=t_all)

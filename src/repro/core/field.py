@@ -121,6 +121,14 @@ def matmul(a: jax.Array, b: jax.Array, p: int = P,
     """
     assert a.ndim == 2 and b.ndim == 2 and b.shape[0] == a.shape[1], (
         a.shape, b.shape)
+    if b.shape[1] == 1:
+        # XLA strength-reduces width-1 dots into broadcast-multiply-reduce
+        # loop fusions whose fused producers are recomputed per output
+        # element — 5-20x slower when the limb products sit in a composed
+        # graph (the c=1 worker polynomial; DESIGN.md §4).  A duplicated
+        # second column keeps every limb product a real dot; the values are
+        # identical and the extra column is sliced away.
+        return matmul(a, jnp.concatenate([b, b], axis=1), p, chunk)[:, :1]
     K = a.shape[-1]
     chunk = min(chunk, 1 << 15)
     out = jnp.zeros((a.shape[0], b.shape[1]), jnp.int32)

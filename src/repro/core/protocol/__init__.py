@@ -32,14 +32,18 @@ from repro.core.protocol.engine import (
     CPMLState,
     Schedule,
     cleartext_baseline,
+    draw_batch,
     lipschitz_eta,
     loss_and_accuracy,
     make_schedule,
     multiclass_loss_and_accuracy,
     per_class_accuracy,
+    round_fn,
+    round_key,
     setup,
     sigmoid,
     step,
+    survivor_round,
     train,
     train_reference,
 )
@@ -52,6 +56,7 @@ __all__ = [
     "cleartext_baseline",
     "decode_gradient",
     "decode_parts",
+    "draw_batch",
     "encode_dataset",
     "encode_weights",
     "lipschitz_eta",
@@ -61,9 +66,12 @@ __all__ = [
     "multiclass_loss_and_accuracy",
     "pad_rows",
     "per_class_accuracy",
+    "round_fn",
+    "round_key",
     "setup",
     "sigmoid",
     "step",
+    "survivor_round",
     "train",
     "train_reference",
     "worker_fn",

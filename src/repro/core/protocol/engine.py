@@ -137,6 +137,27 @@ def _scale_args(cfg: CPMLConfig, eta: float, state: CPMLState):
     return (jnp.float32(eta), jnp.int32(state.m))
 
 
+def round_fn(cfg: CPMLConfig, state: CPMLState, eta: float
+             ) -> Callable[..., jax.Array]:
+    """Per-round hook: the EXACT round train()/train_reference() run.
+
+    Returns ``run(key, w2, dmat, order, batch_idx=None) -> w2`` closing over
+    the once-encoded dataset state.  External drivers (cluster/runner.py)
+    that discover survivor patterns online call this with their observed
+    decode matrix + responder order and stay bit-identical to the static
+    schedule drivers replaying the same trace.
+    """
+    scale = _scale_args(cfg, eta, state)
+    xty2 = _w_internal(cfg, state.xty)
+
+    def run(key: jax.Array, w2: jax.Array, dmat: jax.Array, order: jax.Array,
+            batch_idx: jax.Array | None = None) -> jax.Array:
+        return _round_jit(cfg, key, w2, state.x_shares, state.xq_parts,
+                          state.y_parts, xty2, dmat, order, batch_idx, *scale)
+
+    return run
+
+
 def step(cfg: CPMLConfig, key: jax.Array, state: CPMLState, eta: float,
          survivors: np.ndarray | None = None,
          batch_idx: jax.Array | None = None) -> CPMLState:
@@ -170,28 +191,57 @@ class Schedule:
     batch_idx: jax.Array | None   # (iters, b) int32 or None (full batch)
 
 
+def round_key(kloop: jax.Array, t: int) -> jax.Array:
+    """Round t's weight-encode key — one derivation shared by the static
+    schedule (make_schedule) and online drivers (cluster/runner.py)."""
+    return jax.random.fold_in(kloop, t)
+
+
+def draw_batch(cfg: CPMLConfig, kloop: jax.Array, iters: int, mk: int,
+               t: int) -> jax.Array:
+    """Round t's coded sub-batch indices (batch_rows,) int32.
+
+    Keyed at ``iters + t`` so batch draws never collide with round_key's
+    ``t`` stream.  Shared by make_schedule and online drivers so replaying
+    a responder trace reproduces the identical batches bit-for-bit.
+    """
+    assert cfg.batch_rows is not None
+    assert cfg.batch_rows <= mk, (
+        f"batch_rows={cfg.batch_rows} exceeds the {mk} rows per "
+        f"encoded part (padded m / K)")
+    bkey = jax.random.fold_in(kloop, iters + t)
+    return jax.random.choice(bkey, mk, (cfg.batch_rows,),
+                             replace=False).astype(jnp.int32)
+
+
+def survivor_round(cfg: CPMLConfig, surv: np.ndarray | None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Survivor indices -> (decode matrix (R, K), order (R,)) for one round."""
+    surv = np.arange(cfg.N) if surv is None else np.asarray(surv)
+    assert len(surv) >= cfg.threshold, (
+        f"{len(surv)} survivors < recovery threshold {cfg.threshold}")
+    surv = surv[: cfg.threshold]
+    return (np.asarray(decode.make_decode_matrix(cfg, surv)),
+            surv.astype(np.int32))
+
+
 def make_schedule(cfg: CPMLConfig, kloop: jax.Array, iters: int, mk: int,
                   survivor_fn: Callable[[int], np.ndarray] | None = None
                   ) -> Schedule:
-    keys = jax.vmap(lambda t: jax.random.fold_in(kloop, t))(jnp.arange(iters))
+    keys = jax.vmap(lambda t: round_key(kloop, t))(jnp.arange(iters))
     dmats, orders = [], []
     for t in range(iters):
         surv = survivor_fn(t) if survivor_fn is not None else None
-        surv = np.arange(cfg.N) if surv is None else np.asarray(surv)
-        assert len(surv) >= cfg.threshold, f"round {t}: too few survivors"
-        surv = surv[: cfg.threshold]
-        dmats.append(np.asarray(decode.make_decode_matrix(cfg, surv)))
-        orders.append(surv.astype(np.int32))
+        try:
+            dmat, order = survivor_round(cfg, surv)
+        except AssertionError as e:
+            raise AssertionError(f"round {t}: {e}") from None
+        dmats.append(dmat)
+        orders.append(order)
     batch_idx = None
     if cfg.batch_rows is not None:
-        assert cfg.batch_rows <= mk, (
-            f"batch_rows={cfg.batch_rows} exceeds the {mk} rows per "
-            f"encoded part (padded m / K)")
-        bkeys = jax.vmap(lambda t: jax.random.fold_in(kloop, iters + t))(
-            jnp.arange(iters))
-        batch_idx = jax.vmap(
-            lambda k: jax.random.choice(k, mk, (cfg.batch_rows,),
-                                        replace=False))(bkeys).astype(jnp.int32)
+        batch_idx = jnp.stack([draw_batch(cfg, kloop, iters, mk, t)
+                               for t in range(iters)])
     return Schedule(keys=keys,
                     decode_mats=jnp.asarray(np.stack(dmats), jnp.int32),
                     orders=jnp.asarray(np.stack(orders), jnp.int32),
@@ -267,16 +317,13 @@ def train_reference(cfg: CPMLConfig, key: jax.Array, x: jax.Array,
     if eta is None:
         eta = lipschitz_eta(state.xq_real)
     sched = make_schedule(cfg, kloop, iters, state.mk, survivor_fn)
-    scale_args = _scale_args(cfg, eta, state)
+    run = round_fn(cfg, state, eta)
     w2 = _w_internal(cfg, state.w)
     history: list[dict[str, float]] = []
     for t in range(iters):
         bidx = None if sched.batch_idx is None else sched.batch_idx[t]
-        w2 = _round_jit(cfg, sched.keys[t], w2, state.x_shares,
-                        state.xq_parts, state.y_parts,
-                        _w_internal(cfg, state.xty),
-                        sched.decode_mats[t], sched.orders[t], bidx,
-                        *scale_args)
+        w2 = run(sched.keys[t], w2, sched.decode_mats[t], sched.orders[t],
+                 bidx)
         if eval_every and (t + 1) % eval_every == 0:
             l, a = _eval_metrics(cfg, w2, state.xq_real[: state.m],
                                  state.y[: state.m])

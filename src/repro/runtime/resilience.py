@@ -33,27 +33,41 @@ class WorkerState:
 
 
 class HeartbeatMonitor:
-    """Tracks N workers; exposes survivor sets for coded-decode selection."""
+    """Tracks N workers; exposes survivor sets for coded-decode selection.
+
+    Clock-agnostic: pass ``now`` everywhere to run on a simulated clock
+    (cluster/scheduler.py drives one from simulated epoch 0); omit it for
+    wall-clock operation on a real deployment.
+    """
 
     def __init__(self, n_workers: int, timeout_s: float = 10.0,
-                 straggler_factor: float = 3.0):
-        now = time.time()
+                 straggler_factor: float = 3.0, now: float | None = None):
+        now = time.time() if now is None else now
         self.workers = {i: WorkerState(now) for i in range(n_workers)}
         self.timeout_s = timeout_s
         self.straggler_factor = straggler_factor
 
-    def heartbeat(self, worker: int, latency_s: float = 0.0):
+    def heartbeat(self, worker: int, latency_s: float | None = None,
+                  now: float | None = None):
+        """latency_s=None is a liveness-only ack (leaves the EWMA alone);
+        pass a measured latency to update the straggler statistic."""
         w = self.workers[worker]
-        w.last_heartbeat = time.time()
-        w.latency_ewma = 0.8 * w.latency_ewma + 0.2 * latency_s
+        w.last_heartbeat = time.time() if now is None else now
+        if latency_s is not None:
+            w.latency_ewma = 0.8 * w.latency_ewma + 0.2 * latency_s
         w.alive = True
 
     def mark_failed(self, worker: int):
         self.workers[worker].alive = False
 
+    def revive(self, worker: int, now: float | None = None):
+        """Node replacement: fresh worker on a clean latency slate."""
+        self.workers[worker] = WorkerState(time.time() if now is None else now)
+
     def survivors(self, now: float | None = None) -> np.ndarray:
         """Alive + non-straggling workers, fastest first."""
-        now = now or time.time()
+        # compare against None: simulated-clock callers legitimately pass 0.0
+        now = time.time() if now is None else now
         lat = [w.latency_ewma for w in self.workers.values() if w.alive]
         median = float(np.median(lat)) if lat else 0.0
         good = []
@@ -88,20 +102,34 @@ class FailureInjector:
 
 
 class ResilientLoop:
-    """Checkpoint-every-k + restore-and-replay on step failure."""
+    """Checkpoint-every-k + restore-and-replay on step failure.
+
+    ``max_retries`` bounds failures PER STEP, not over the whole run: a
+    long healthy run must not accumulate isolated transient failures until
+    restart 4 kills it, while a deterministic failure at one step (which a
+    run-wide-but-resetting budget would replay forever whenever a
+    checkpointed step succeeds in between) still trips after max_retries.
+    ``restarts`` counts every restart over the loop's lifetime for
+    observability.  ``on_restore(step)`` (optional) runs after each
+    checkpoint restore, before replay — the hook where a cluster driver
+    reprovisions dead workers (cluster/runner.py).
+    """
 
     def __init__(self, ckpt_manager, checkpoint_every: int = 100,
-                 max_retries: int = 3):
+                 max_retries: int = 3,
+                 on_restore: Callable[[int], None] | None = None):
         self.ckpt = ckpt_manager
         self.every = checkpoint_every
         self.max_retries = max_retries
         self.restarts = 0
+        self.on_restore = on_restore
 
     def run(self, state: dict[str, Any], step_fn: Callable[[dict, int], dict],
             start_step: int, num_steps: int,
             shardings: dict | None = None) -> dict[str, Any]:
         """step_fn(state, step) -> state; must raise on failure."""
         step = start_step
+        failures: dict[int, int] = {}
         while step < start_step + num_steps:
             try:
                 state = step_fn(state, step)
@@ -110,10 +138,13 @@ class ResilientLoop:
                     self.ckpt.save(step, state)
             except Exception:
                 self.restarts += 1
-                if self.restarts > self.max_retries:
+                failures[step] = failures.get(step, 0) + 1
+                if failures[step] > self.max_retries:
                     raise
                 restored = self.ckpt.restore(shardings=shardings)
                 step = restored.pop("step")
                 state = restored
+                if self.on_restore is not None:
+                    self.on_restore(step)
         self.ckpt.wait()
         return state

@@ -1,0 +1,300 @@
+"""Cluster runtime acceptance (DESIGN.md §7).
+
+The load-bearing test is bit-identity: ClusterRunner training — survivor
+patterns discovered ONLINE from the event simulation under heavy straggler
+injection — must produce exactly the same weights as engine.train_reference
+replaying the observed responder trace, for >= 20 rounds.  The cluster
+layer is allowed to change timing, never semantics.
+"""
+import math
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.cluster import (
+    MASTER,
+    BurstyStragglerLatency,
+    ClusterDecodeError,
+    ClusterRunner,
+    DeadWorkerLatency,
+    DeterministicLatency,
+    EncodeShare,
+    EventScheduler,
+    InProcessTransport,
+    LognormalTailLatency,
+    make_latency,
+    worker_endpoint,
+)
+from repro.core import protocol
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def binary_data():
+    return synthetic.mnist_like(jax.random.PRNGKey(42), m=300, d=24)
+
+
+@pytest.fixture(scope="module")
+def mc_data():
+    return synthetic.multiclass_mnist_like(jax.random.PRNGKey(42), m=300,
+                                           d=24, c=3)
+
+
+# ---------------------------------------------------------------------------
+# Transport
+# ---------------------------------------------------------------------------
+
+def test_transport_orders_by_delivery_time():
+    tr = InProcessTransport()
+    tr.send(MASTER, "slow", at=0.0, delay=5.0)
+    tr.send(MASTER, "fast", at=0.0, delay=1.0)
+    tr.send(MASTER, "never", at=0.0, delay=math.inf)   # dead worker: dropped
+    assert tr.next_delivery(MASTER) == 1.0
+    assert [m for _, m in tr.recv(MASTER, now=2.0)] == ["fast"]
+    assert [m for _, m in tr.recv(MASTER, now=10.0)] == ["slow"]
+    assert tr.next_delivery(MASTER) is None
+
+
+def test_transport_fifo_on_ties():
+    tr = InProcessTransport()
+    for i in range(5):
+        tr.send("w", i, at=1.0)
+    assert [m for _, m in tr.recv("w", now=1.0)] == [0, 1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# Latency models: seeded, replayable, order-independent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["lognormal", "bursty"])
+def test_latency_replayable_and_order_independent(name):
+    a = make_latency(name, seed=11)
+    b = make_latency(name, seed=11)
+    fwd = [a.sample(t, w) for t in range(6) for w in range(4)]
+    rev = [b.sample(t, w) for t in reversed(range(6))
+           for w in reversed(range(4))]
+    assert fwd == rev[::-1]
+    c = make_latency(name, seed=12)
+    assert fwd != [c.sample(t, w) for t in range(6) for w in range(4)]
+
+
+def test_bursty_latency_has_multi_round_bursts():
+    lat = BurstyStragglerLatency(seed=0, burst_prob=0.05, burst_len=4,
+                                 slow_factor=50.0)
+    slow = {(t, w) for t in range(200) for w in range(4)
+            if lat.sample(t, w) > 10.0}
+    assert slow, "no bursts in 800 draws at p=0.05"
+    # bursts persist: a burst start covers burst_len consecutive rounds
+    starts = {(t, w) for (t, w) in slow if (t - 1, w) not in slow}
+    for t, w in starts:
+        if t + 3 < 200:
+            assert all((t + i, w) in slow for i in range(4))
+
+
+def test_dead_worker_latency_and_revival():
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0), deaths={2: 5})
+    assert math.isfinite(lat.sample(4, 2))
+    assert math.isinf(lat.sample(5, 2))
+    assert math.isinf(lat.sample(9, 2))
+    lat.revive(2, at_round=8)
+    assert math.isinf(lat.sample(7, 2))      # pre-revival rounds stay dead
+    assert math.isfinite(lat.sample(8, 2))   # replacement node is up
+
+
+# ---------------------------------------------------------------------------
+# Scheduler event loop
+# ---------------------------------------------------------------------------
+
+def test_scheduler_decodes_at_threshold_th_arrival():
+    sched = EventScheduler(4, DeterministicLatency(base=1.0, skew=1.0))
+    # latencies: worker i takes 1 + i seconds -> arrival order 0,1,2,3
+    trace = sched.dispatch_round(0, threshold=2)
+    assert list(trace.responders[:2]) == [0, 1]
+    assert trace.t_first_R == pytest.approx(2.0)        # worker 1 at t=2
+    assert trace.t_all == pytest.approx(4.0)            # worker 3 at t=4
+    assert sched.clock == pytest.approx(2.0)            # master moved on
+
+
+def test_scheduler_messages_flow_through_transport():
+    tr = InProcessTransport()
+    sched = EventScheduler(3, DeterministicLatency(base=1.0),
+                           transport=tr)
+    sched.dispatch_round(0, threshold=3)
+    for w in range(3):
+        msgs = [m for _, m in tr.recv(worker_endpoint(w), now=math.inf)]
+        assert msgs and isinstance(msgs[0], EncodeShare)
+        assert msgs[0].worker == w
+
+
+def test_scheduler_worker_inboxes_stay_bounded():
+    """Undelivered EncodeShares must not accumulate across rounds: the
+    simulated worker consumes its previous share at the next dispatch."""
+    tr = InProcessTransport()
+    sched = EventScheduler(3, DeterministicLatency(base=1.0), transport=tr)
+    for t in range(50):
+        sched.dispatch_round(t, threshold=3)
+    for w in range(3):
+        pending = list(tr.pending(worker_endpoint(w)))
+        assert len(pending) == 1             # only the latest round's share
+        assert pending[0][1].round == 49
+
+
+def test_scheduler_rejects_results_from_undispatched_workers():
+    """A same-round result from a worker outside this attempt's dispatch
+    set (stale message from an aborted pre-restore attempt, or an excluded
+    straggler) must feed the monitor but never the responder trace."""
+    from repro.cluster.messages import MASTER, WorkerResult
+    tr = InProcessTransport()
+    sched = EventScheduler(4, DeterministicLatency(base=1.0), transport=tr)
+    tr.send(MASTER, WorkerResult(0, 3, 0.5), at=0.0, delay=0.5)  # stale: w3
+    trace = sched.dispatch_round(0, threshold=2,
+                                 workers=np.array([0, 1, 2]))
+    assert 3 not in set(trace.responders)
+    assert 3 not in trace.arrivals
+
+
+def test_scheduler_starved_round_reports_inf():
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0),
+                            deaths={0: 0, 1: 0})
+    sched = EventScheduler(3, lat)
+    trace = sched.dispatch_round(0, threshold=2, timeout_s=50.0)
+    assert math.isinf(trace.t_first_R)
+    assert list(trace.responders) == [2]
+    assert math.isinf(trace.t_all)
+
+
+def test_scheduler_feeds_monitor_on_simulated_clock():
+    from repro.runtime.resilience import HeartbeatMonitor
+    mon = HeartbeatMonitor(3, timeout_s=100.0, now=0.0)
+    sched = EventScheduler(3, DeterministicLatency(base=2.0, skew=0.5))
+    sched.dispatch_round(0, threshold=3, monitor=mon)
+    # monitor saw heartbeat acks + per-result latencies at simulated times
+    assert mon.workers[2].last_heartbeat == pytest.approx(4.0)  # 2*(1+1)
+    assert mon.workers[0].latency_ewma == pytest.approx(0.2 * 2.0)
+    assert list(mon.survivors(now=sched.clock)) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# ClusterRunner: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_cluster_bit_identical_to_reference_20_rounds(binary_data):
+    """>= 20 rounds with heavy straggler injection: exact weight equality
+    between the event-driven runner and train_reference over the trace."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)
+    lat = LognormalTailLatency(seed=3, tail_prob=0.3, tail_scale=25.0)
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, lat)
+    w_cluster = runner.run(20)
+
+    # stragglers actually shuffled the decode order at least once
+    orders = {tuple(r.survivors) for r in runner.records.values()}
+    assert len(orders) > 1, "latency model produced a constant decode order"
+
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=20,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w_cluster) == np.asarray(w_ref)).all()
+
+
+def test_cluster_bit_identical_minibatch_multiclass(mc_data):
+    """Mini-batch + multi-class: draw_batch/round_key derivations must match
+    make_schedule's exactly."""
+    x, y = mc_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1, c=3, batch_rows=16)
+    lat = BurstyStragglerLatency(seed=5, burst_prob=0.1, slow_factor=30.0)
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, lat)
+    w_cluster = runner.run(12)
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=12,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w_cluster) == np.asarray(w_ref)).all()
+
+
+def test_cluster_first_T_strictly_faster_under_tails(binary_data):
+    """The paper's Fig. 5 effect in simulation: decoding at the fastest
+    threshold beats waiting for all under heavy-tailed latency."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)
+    lat = LognormalTailLatency(seed=0, tail_prob=0.2, tail_scale=10.0)
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, lat)
+    runner.run(15)
+    stats = runner.wait_stats()
+    assert stats["coded_T"]["mean"] < stats["wait_all"]["mean"]
+
+
+def test_cluster_dead_worker_tolerated_within_threshold(binary_data):
+    """N - threshold workers can die outright; decode never needs them."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)     # threshold 7: 1 spare
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0, skew=0.1),
+                            deaths={5: 0})
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, lat)
+    w = runner.run(20)
+    assert all(5 not in set(r.survivors) for r in runner.records.values())
+    assert all(math.isinf(r.all_wait_s) for r in runner.records.values())
+    # and the result still matches the reference over the observed trace
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=20,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+
+
+def test_cluster_starved_round_raises(binary_data):
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)     # threshold 7
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0),
+                            deaths={0: 3, 1: 3})       # 6 alive < 7
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, lat,
+                           round_timeout_s=30.0)
+    with pytest.raises(ClusterDecodeError):
+        runner.run(10)
+
+
+def test_cluster_resilient_recovers_from_worker_death(binary_data):
+    """Mid-run death below the decode threshold: checkpoint restore +
+    worker reprovision replays and completes the run."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)
+    lat = DeadWorkerLatency(LognormalTailLatency(seed=5),
+                            deaths={0: 4, 1: 4})
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(9), x, y, lat,
+                           round_timeout_s=60.0)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_write=False)
+        w = runner.run_resilient(12, mgr, checkpoint_every=2)
+    assert runner.restarts == 1
+    assert len(runner.records) == 12
+    assert w.shape == (x.shape[1],)
+    # post-revival rounds decode with the replacement workers available
+    assert runner.records[11].n_responders >= cfg.threshold
+
+
+def test_cluster_straggler_excluded_from_dispatch(binary_data):
+    """A persistently slow worker gets speculatively excluded once the
+    monitor's EWMA flags it (fast set still covers the threshold).
+
+    Worker 7 takes 6s vs 1s for everyone else: its round-t result arrives
+    ~5 rounds late as a STALE message, which still feeds the latency EWMA
+    (a late reply is evidence of slowness, not death).  Once
+    ewma_7 > straggler_factor * median the dispatch set drops it."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=0, r=1)     # threshold 4: margin
+
+    class OneSlow(DeterministicLatency):
+        def sample(self, round, worker):
+            return 6.0 if worker == 7 else 1.0
+
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y, OneSlow(),
+                           straggler_factor=3.0)
+    w = runner.run(14)
+    assert 7 in set(runner.records[0].dispatched)      # starts included
+    assert 7 not in set(runner.records[13].dispatched)  # learned + excluded
+    assert all(7 not in set(r.survivors) for r in runner.records.values())
+    w_ref, _ = protocol.train_reference(
+        cfg, jax.random.PRNGKey(7), x, y, iters=14,
+        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()

@@ -2,7 +2,7 @@
 
 Property-based (randomized) coverage of the same laws lives in
 test_field_properties.py behind ``pytest.importorskip("hypothesis")`` —
-hypothesis is an OPTIONAL dev dependency (see DESIGN.md §7); everything here
+hypothesis is an OPTIONAL dev dependency (see DESIGN.md §8); everything here
 runs without it.
 """
 import jax.numpy as jnp

@@ -1,6 +1,6 @@
 """Property tests for the F_p arithmetic layer (hypothesis).
 
-hypothesis is an optional dev dependency (DESIGN.md §7): this module skips
+hypothesis is an optional dev dependency (DESIGN.md §8): this module skips
 cleanly when it is absent; the deterministic fallback cases for the same
 laws live in test_field.py and always run.
 """

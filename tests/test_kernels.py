@@ -2,7 +2,7 @@
 
 Randomized (hypothesis) coverage lives in test_kernels_properties.py behind
 ``pytest.importorskip`` — hypothesis is an optional dev dependency
-(DESIGN.md §7); this module is fully deterministic.
+(DESIGN.md §8); this module is fully deterministic.
 """
 import jax
 import jax.numpy as jnp

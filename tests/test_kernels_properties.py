@@ -1,6 +1,6 @@
 """Property tests for the Pallas field kernels (hypothesis).
 
-hypothesis is an optional dev dependency (DESIGN.md §7): this module skips
+hypothesis is an optional dev dependency (DESIGN.md §8): this module skips
 cleanly when it is absent; deterministic fallbacks live in test_kernels.py.
 """
 import pytest

@@ -1,0 +1,215 @@
+"""runtime/resilience.py coverage: heartbeat/straggler exclusion, survivor
+ordering, FailureInjector determinism, ResilientLoop retry budget."""
+import numpy as np
+import pytest
+
+from repro.runtime.resilience import (
+    FailureInjector,
+    HeartbeatMonitor,
+    ResilientLoop,
+)
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_survivors_fastest_first():
+    mon = HeartbeatMonitor(4, timeout_s=10.0, now=0.0)
+    for w, lat in ((0, 3.0), (1, 1.0), (2, 2.0), (3, 1.5)):
+        mon.heartbeat(w, latency_s=lat, now=1.0)
+    surv = mon.survivors(now=1.0)
+    assert list(surv) == [1, 3, 2, 0]       # ascending latency EWMA
+
+
+def test_straggler_excluded():
+    mon = HeartbeatMonitor(4, timeout_s=100.0, straggler_factor=3.0, now=0.0)
+    for _ in range(20):                      # converge the EWMA
+        for w in range(3):
+            mon.heartbeat(w, latency_s=1.0, now=1.0)
+        mon.heartbeat(3, latency_s=50.0, now=1.0)
+    surv = mon.survivors(now=1.0)
+    assert 3 not in surv and set(surv) == {0, 1, 2}
+
+
+def test_dead_worker_excluded_by_timeout_and_mark_failed():
+    mon = HeartbeatMonitor(3, timeout_s=5.0, now=0.0)
+    mon.heartbeat(0, latency_s=1.0, now=8.0)
+    mon.heartbeat(1, latency_s=1.0, now=8.0)
+    # worker 2 last heartbeated at t=0: stale at t=8
+    assert 2 not in mon.survivors(now=8.0)
+    mon.mark_failed(0)
+    assert list(mon.survivors(now=8.0)) == [1]
+
+
+def test_survivors_accepts_explicit_epoch_zero():
+    """Regression: ``now=0.0`` must mean simulated epoch 0, not wall clock.
+
+    With the old ``now = now or time.time()`` a simulated-clock caller at
+    t=0 got wall time instead, making every worker look timed out."""
+    mon = HeartbeatMonitor(3, timeout_s=10.0, now=0.0)
+    assert len(mon.survivors(now=0.0)) == 3
+
+
+def test_liveness_only_heartbeat_keeps_ewma():
+    mon = HeartbeatMonitor(1, now=0.0)
+    mon.heartbeat(0, latency_s=5.0, now=1.0)
+    ewma = mon.workers[0].latency_ewma
+    mon.heartbeat(0, now=2.0)                # liveness ack: no latency info
+    assert mon.workers[0].latency_ewma == ewma
+    assert mon.workers[0].last_heartbeat == 2.0
+
+
+def test_revive_resets_state():
+    mon = HeartbeatMonitor(2, now=0.0)
+    mon.heartbeat(0, latency_s=9.0, now=1.0)
+    mon.mark_failed(0)
+    mon.revive(0, now=5.0)
+    w = mon.workers[0]
+    assert w.alive and w.latency_ewma == 0.0 and w.last_heartbeat == 5.0
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+# ---------------------------------------------------------------------------
+
+def _injector_run(seed):
+    mon = HeartbeatMonitor(8, now=0.0)
+    inj = FailureInjector(seed=seed, fail_prob=0.1, straggle_prob=0.2)
+    dead, ewmas = [], []
+    for _ in range(30):
+        inj.step(mon)
+        dead.append(tuple(i for i, w in mon.workers.items() if not w.alive))
+        ewmas.append(tuple(round(w.latency_ewma, 9)
+                           for w in mon.workers.values()))
+    return dead, ewmas
+
+
+def test_failure_injector_deterministic_under_seed():
+    assert _injector_run(123) == _injector_run(123)
+
+
+def test_failure_injector_seed_changes_schedule():
+    assert _injector_run(1) != _injector_run(2)
+
+
+def test_failure_injector_kills_and_straggles():
+    dead, ewmas = _injector_run(0)
+    assert len(dead[-1]) > 0                 # somebody died over 30 steps
+    # a 10s straggle beat lifts a ~1s EWMA past 2.5 (0.8*1 + 0.2*10 = 2.8)
+    assert any(e > 2.5 for step in ewmas for e in step)
+
+
+# ---------------------------------------------------------------------------
+# ResilientLoop
+# ---------------------------------------------------------------------------
+
+class _MemCkpt:
+    """Minimal in-memory stand-in for CheckpointManager."""
+
+    def __init__(self):
+        self.saved = {}
+
+    def save(self, step, state, extra=None):
+        self.saved[step] = {k: dict(v) for k, v in state.items()}
+
+    def restore(self, step=None, shardings=None):
+        step = max(self.saved) if step is None else step
+        out = {"step": step}
+        out.update({k: dict(v) for k, v in self.saved[step].items()})
+        return out
+
+    def wait(self):
+        pass
+
+
+def test_resilient_loop_recovers_and_counts_restarts():
+    ckpt = _MemCkpt()
+    ckpt.save(0, {"train": {"x": 0}})
+    fail_at = {3}
+
+    def step_fn(state, step):
+        if step in fail_at:
+            fail_at.discard(step)            # fail once, then succeed
+            raise RuntimeError("boom")
+        return {"train": {"x": state["train"]["x"] + 1}}
+
+    loop = ResilientLoop(ckpt, checkpoint_every=2, max_retries=2)
+    out = loop.run({"train": {"x": 0}}, step_fn, 0, 6)
+    assert out["train"]["x"] == 6            # every step replayed to done
+    assert loop.restarts == 1
+
+
+def test_resilient_loop_retry_budget_resets_after_success():
+    """Regression: the retry budget must be per-incident, not per-run.
+
+    4 isolated failures, each recovered and followed by successful steps,
+    previously tripped ``max_retries=3`` because ``restarts`` accumulated
+    over the whole run."""
+    ckpt = _MemCkpt()
+    ckpt.save(0, {"train": {"x": 0}})
+    fail_at = {2, 4, 6, 8}                   # 4 isolated transient failures
+
+    def step_fn(state, step):
+        if step in fail_at:
+            fail_at.discard(step)
+            raise RuntimeError("transient")
+        return {"train": {"x": state["train"]["x"] + 1}}
+
+    loop = ResilientLoop(ckpt, checkpoint_every=1, max_retries=3)
+    out = loop.run({"train": {"x": 0}}, step_fn, 0, 10)
+    assert out["train"]["x"] == 10
+    assert loop.restarts == 4                # observability keeps the total
+
+
+def test_resilient_loop_deterministic_failure_past_checkpoint_terminates():
+    """Regression: a deterministic failure at a step PAST the last
+    checkpoint must still trip max_retries.  A run-wide budget that resets
+    on any successful step would replay checkpoint->fail forever (the
+    replayed checkpointed step succeeds each time, wiping the budget)."""
+    ckpt = _MemCkpt()
+    ckpt.save(0, {"train": {"x": 0}})
+    calls = {"n": 0}
+
+    def step_fn(state, step):
+        calls["n"] += 1
+        assert calls["n"] < 100, "livelock: retry budget never trips"
+        if step == 3:
+            raise RuntimeError("deterministic")
+        return {"train": {"x": state["train"]["x"] + 1}}
+
+    loop = ResilientLoop(ckpt, checkpoint_every=2, max_retries=2)
+    with pytest.raises(RuntimeError, match="deterministic"):
+        loop.run({"train": {"x": 0}}, step_fn, 0, 6)
+    assert loop.restarts == 3                # 2 retries + the fatal one
+
+
+def test_resilient_loop_gives_up_after_consecutive_failures():
+    ckpt = _MemCkpt()
+    ckpt.save(0, {"train": {"x": 0}})
+
+    def step_fn(state, step):
+        raise RuntimeError("permanent")
+
+    loop = ResilientLoop(ckpt, checkpoint_every=1, max_retries=2)
+    with pytest.raises(RuntimeError, match="permanent"):
+        loop.run({"train": {"x": 0}}, step_fn, 0, 5)
+    assert loop.restarts == 3                # 2 retries + the fatal one
+
+
+def test_resilient_loop_on_restore_hook():
+    ckpt = _MemCkpt()
+    ckpt.save(0, {"train": {"x": 0}})
+    seen = []
+    fail_at = {1}
+
+    def step_fn(state, step):
+        if step in fail_at:
+            fail_at.discard(step)
+            raise RuntimeError("boom")
+        return {"train": {"x": state["train"]["x"] + 1}}
+
+    loop = ResilientLoop(ckpt, checkpoint_every=1, max_retries=1,
+                         on_restore=seen.append)
+    loop.run({"train": {"x": 0}}, step_fn, 0, 3)
+    assert seen == [1]                       # restored to the step-1 ckpt
