@@ -1,0 +1,166 @@
+"""Socket-cluster benchmark: real multi-process rounds vs the simulation.
+
+Two questions about the live backend (DESIGN.md §7):
+
+  1. PER-ROUND OVERHEAD — what does a real round cost end-to-end (encode ->
+     serialize -> TCP -> worker compute -> TCP -> decode) compared to the
+     same round computed in-process on the master?  The in-process figure
+     is measured WALL-clock (the simulated clock is free; the master still
+     pays the on-device round), so the difference is the transport tax:
+     framing + sockets + process scheduling.
+  2. FIRST-T vs WAIT-ALL — with a worker that REALLY sleeps before every
+     reply (an injected straggler process), how much does decoding at the
+     fastest ``threshold`` responders save over waiting for everyone?
+     ``collect_all`` keeps each round open so both completion times are
+     observed on the same wall clock — the paper's Fig. 5 effect with real
+     network and real stragglers, not sampled latencies.
+
+    PYTHONPATH=src python benchmarks/bench_socket.py [--smoke] [--out PATH]
+
+Writes BENCH_socket.json; CI's slow job runs --smoke and uploads the
+artifact alongside BENCH_cluster.json.  Round 0 is excluded from per-round
+stats (worker-side jit warmup).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from common import emit
+
+from repro.cluster import ClusterRunner, DeterministicLatency, wait_summary
+from repro.core import protocol
+from repro.data import synthetic
+from repro.launch.cpml_cluster import local_socket_cluster
+
+
+def steady_rounds(runner) -> list:
+    """Per-round records minus round 0 (jit warmup on master + workers)."""
+    return [r for t, r in sorted(runner.records.items()) if t >= 1]
+
+
+def bench_inprocess(cfg, x, y, iters: int) -> dict:
+    """Wall-clock cost of simulated rounds: on-device compute, no wire."""
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                           DeterministicLatency(base=1e-6, skew=0.0))
+    runner.step_round(0, iters)                  # warmup outside the clock
+    t0 = time.perf_counter()
+    for t in range(1, iters):
+        runner.step_round(t, iters)
+    wall = time.perf_counter() - t0
+    per_round = wall / (iters - 1)
+    emit("socket/inprocess_round", per_round * 1e6, "wall s/round, no wire")
+    return {"wall_s_per_round": per_round, "rounds": iters - 1}
+
+
+def bench_socket(cfg, x, y, iters: int, sleep_s: float | None) -> dict:
+    straggler = {cfg.N - 1: sleep_s} if sleep_s else None
+    with local_socket_cluster(cfg.N, sleep_s=straggler) as tr:
+        runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                               latency=None, transport=tr,
+                               round_timeout_s=300.0,
+                               collect_all=sleep_s is not None)
+        runner.provision()
+        t0 = time.perf_counter()
+        w = runner.run(iters)
+        wall = time.perf_counter() - t0
+        runner.shutdown_workers()
+        # bit-identity is part of the benchmark contract: a fast wrong
+        # backend is worthless
+        w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                            iters=iters,
+                                            survivor_fn=runner.survivor_fn())
+        identical = bool((np.asarray(w) == np.asarray(w_ref)).all())
+    recs = steady_rounds(runner)
+    coded = wait_summary([r.coded_wait_s for r in recs])
+    # full-round duration = dispatch-to-dispatch span: unlike coded_T (which
+    # stops at the threshold-th arrival) this includes the master-side
+    # encode/serialize before t0 and decode/update after collection — the
+    # like-for-like figure against the in-process step_round wall time.
+    starts = [runner.traces[t].t_start for t in sorted(runner.traces)]
+    full = np.diff(starts)[1:]               # drop the warmup round's span
+    entry = {
+        "wall_s_total": wall,
+        "coded_T": coded,
+        "full_round": wait_summary(full),
+        "bit_identical": identical,
+        "rounds": len(recs),
+    }
+    if sleep_s:
+        allw = [r.all_wait_s for r in recs if math.isfinite(r.all_wait_s)]
+        entry["wait_all"] = wait_summary(allw)
+        entry["straggler_sleep_s"] = sleep_s
+        emit("socket/straggler_round", coded["mean"] * 1e6,
+             f"vs wait_all {entry['wait_all']['mean']:.3f}s "
+             f"(sleep {sleep_s}s)")
+    else:
+        emit("socket/live_round", coded["mean"] * 1e6,
+             f"bit_identical={identical}")
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_socket.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + few rounds (CI)")
+    ap.add_argument("--sleep-s", type=float, default=0.25,
+                    help="injected straggler sleep per round (> 0)")
+    args = ap.parse_args(argv)
+    if args.sleep_s <= 0:
+        ap.error("--sleep-s must be > 0: the straggler comparison is the "
+                 "point of this benchmark")
+
+    if args.smoke:
+        n, k, m, d, iters = 5, 1, 128, 16, 5
+    else:
+        n, k, m, d, iters = 8, 2, 1024, 64, 12
+    cfg = protocol.CPMLConfig(N=n, K=k, T=1, r=1)
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=m, d=d)
+
+    inproc = bench_inprocess(cfg, x, y, iters)
+    live = bench_socket(cfg, x, y, iters, sleep_s=None)
+    straggled = bench_socket(cfg, x, y, iters, sleep_s=args.sleep_s)
+
+    # like-for-like: both sides cover encode -> compute -> decode per round
+    overhead = (live["full_round"]["mean"] - inproc["wall_s_per_round"])
+    report = {
+        "device": jax.default_backend(),
+        "shapes": {"m": m, "d": d, "N": n, "K": k,
+                   "threshold": cfg.threshold},
+        "iters": iters,
+        "smoke": args.smoke,
+        "in_process": inproc,
+        "socket": live,
+        "socket_straggler": straggled,
+        "transport_overhead_s_per_round": overhead,
+        "acceptance": {
+            # the paper's effect on a real wall clock: first-T strictly
+            # below wait-all when a straggler process really sleeps
+            "first_T_below_wait_all": bool(
+                straggled["coded_T"]["mean"]
+                < straggled["wait_all"]["mean"]),
+            "bit_identical": bool(live["bit_identical"]
+                                  and straggled["bit_identical"]),
+        },
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    ok = all(report["acceptance"].values())
+    print(f"wrote {out}  acceptance={report['acceptance']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,24 +8,33 @@ computing from MPC baselines (which must wait for everyone, every round).
 
 Modules:
 
-  messages.py   typed master<->worker messages (EncodeShare, WorkerResult,
-                Heartbeat) + endpoint naming
-  transport.py  transport abstraction; InProcessTransport delivers on a
-                simulated clock (heap of pending deliveries), interface
-                ready for a multi-process socket transport later
-  latency.py    seeded, replayable per-worker latency models
-                (deterministic / lognormal-tail / bursty-straggler / dead)
-  scheduler.py  the event loop: dispatch round -> advance clock to next
-                arrival -> decode at the threshold-th result; records
-                first-T vs wait-all completion times per round
-  runner.py     ClusterRunner: drives core/protocol rounds through the
-                scheduler, feeds observed responder traces into decode
-                matrix selection, integrates runtime/resilience
-                (HeartbeatMonitor exclusion + ResilientLoop checkpointing)
+  messages.py          typed master<->worker messages (EncodeShare,
+                       WorkerResult, Heartbeat) + endpoint naming
+  transport.py         transport abstraction; InProcessTransport delivers
+                       on a simulated clock (heap of pending deliveries)
+  wire.py              length-prefixed pickle-free framing for the messages
+                       (dtype/shape + raw bytes for field arrays, exact
+                       big-endian encoding for python ints)
+  socket_transport.py  the SAME Transport contract over real TCP: a
+                       selectors-based master endpoint, worker client
+                       connections, wall-clock arrival stamps
+  latency.py           seeded, replayable per-worker latency models
+                       (deterministic / lognormal-tail / bursty / dead)
+  scheduler.py         the event loop on either clock: dispatch round ->
+                       advance/await the next arrival -> decode at the
+                       threshold-th result; records first-T vs wait-all
+                       completion times per round
+  runner.py            ClusterRunner: drives core/protocol rounds through
+                       the scheduler — simulated workers via round_fn, or
+                       real worker processes (launch/cpml_worker.py) whose
+                       serialized results feed engine.update_fn —
+                       integrates runtime/resilience
 
-Numerics stay in core/protocol: the runner calls ``engine.round_fn`` with
-its observed responder order, so cluster training is bit-identical to
-``engine.train_reference`` replaying the same trace (tests/test_cluster.py).
+Numerics stay in core/protocol: the runner feeds its observed responder
+order into the exact round/update functions train()/train_reference() use,
+so cluster training — simulated OR over sockets — is bit-identical to
+``engine.train_reference`` replaying the same trace (tests/test_cluster.py,
+tests/test_socket_cluster.py).
 """
 from repro.cluster.latency import (
     BurstyStragglerLatency,
@@ -37,6 +46,8 @@ from repro.cluster.latency import (
 )
 from repro.cluster.messages import (
     MASTER,
+    PROVISION_ROUND,
+    SHUTDOWN_ROUND,
     EncodeShare,
     Heartbeat,
     WorkerResult,
@@ -44,15 +55,22 @@ from repro.cluster.messages import (
 )
 from repro.cluster.runner import ClusterRunner, RoundRecord, wait_summary
 from repro.cluster.scheduler import (
+    Clock,
     ClusterDecodeError,
     EventScheduler,
     RoundTrace,
+    SimClock,
+    WallClock,
 )
+from repro.cluster.socket_transport import SocketTransport
 from repro.cluster.transport import InProcessTransport, Transport
 
 __all__ = [
     "MASTER",
+    "PROVISION_ROUND",
+    "SHUTDOWN_ROUND",
     "BurstyStragglerLatency",
+    "Clock",
     "ClusterDecodeError",
     "ClusterRunner",
     "DeadWorkerLatency",
@@ -65,7 +83,10 @@ __all__ = [
     "LognormalTailLatency",
     "RoundRecord",
     "RoundTrace",
+    "SimClock",
+    "SocketTransport",
     "Transport",
+    "WallClock",
     "WorkerResult",
     "make_latency",
     "wait_summary",

@@ -3,8 +3,10 @@
 Every in-flight unit of the cluster protocol is one of three frozen
 dataclasses.  Payloads are deliberately ``Any``: the in-process simulation
 carries lightweight references (the numeric work stays on-device in
-core/protocol — see runner.py), while a future multi-process transport
-would carry serialized arrays through the SAME message types.
+core/protocol — see runner.py), while the multi-process socket transport
+carries serialized arrays (wire.py) through the SAME message types —
+EncodeShare ships the round's weight share W̃_i, WorkerResult ships the
+worker's (d, c) field evaluation.
 """
 from __future__ import annotations
 
@@ -12,6 +14,13 @@ import dataclasses
 from typing import Any
 
 MASTER = "master"
+
+# Control "rounds" for real worker processes (launch/cpml_worker.py): a
+# provisioning EncodeShare carries the worker's coded dataset share + static
+# round context before round 0; a shutdown EncodeShare ends the serve loop.
+# Real rounds are >= 0, so neither can collide with training traffic.
+PROVISION_ROUND = -1
+SHUTDOWN_ROUND = -2
 
 
 def worker_endpoint(worker: int) -> str:

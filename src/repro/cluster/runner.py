@@ -1,12 +1,17 @@
-"""ClusterRunner: coded training driven by the event-driven cluster sim.
+"""ClusterRunner: coded training driven by the cluster runtime.
 
-Division of labor (DESIGN.md §7): the scheduler moves messages and
-simulated time; ALL gradient numerics run through ``engine.round_fn`` — the
-exact per-round function train()/train_reference() use — with the decode
-matrix and responder order observed from the simulation.  Consequence: a
-ClusterRunner run is BIT-IDENTICAL to ``engine.train_reference`` replaying
-the same responder trace (tests/test_cluster.py), so the cluster layer can
-never silently change training semantics, only timing.
+Division of labor (DESIGN.md §7): the scheduler moves messages and time;
+ALL gradient numerics run through the exact round/update functions
+train()/train_reference() use, with the decode matrix and responder order
+observed from the runtime.  In the in-process simulation the whole round is
+``engine.round_fn`` on the master; over the socket transport real worker
+processes evaluate f(X̃_i, W̃_i) and their deserialized payloads feed
+``engine.update_fn`` — the same decode+step the simulated round composes.
+Consequence: a ClusterRunner run — simulated or live — is BIT-IDENTICAL to
+``engine.train_reference`` replaying the same responder trace
+(tests/test_cluster.py, tests/test_socket_cluster.py), so the cluster
+layer can never silently change training semantics, only timing and
+placement.
 
 Resilience integration (runtime/resilience.py):
 
@@ -33,6 +38,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.latency import LatencyModel
+from repro.cluster.messages import (
+    MASTER,
+    PROVISION_ROUND,
+    SHUTDOWN_ROUND,
+    EncodeShare,
+    Heartbeat,
+    worker_endpoint,
+)
 from repro.cluster.scheduler import ClusterDecodeError, EventScheduler, RoundTrace
 from repro.cluster.transport import Transport
 from repro.core.protocol import engine
@@ -70,16 +83,29 @@ class ClusterRunner:
 
     One runner = one training run (like engine.train); ``run()`` starts
     from the initial weights every call.
+
+    Two transports, one round loop (DESIGN.md §7):
+
+      * ``latency`` given — in-process simulation: the scheduler enacts the
+        workers and the runner computes the whole round on the master via
+        ``engine.round_fn`` with the observed responder order.
+      * ``latency=None`` + a real transport (socket_transport.py) — actual
+        worker processes evaluate f(X̃_i, W̃_i); the runner encodes + ships
+        the round's weight shares, decodes the first-``threshold`` received
+        payloads via ``engine.update_fn``, and the wall clock replaces the
+        simulated clock.  ``provision()`` must run once before rounds.
     """
 
     def __init__(self, cfg: CPMLConfig, key, x, y,
-                 latency: LatencyModel, *, eta: float | None = None,
+                 latency: LatencyModel | None = None, *,
+                 eta: float | None = None,
                  transport: Transport | None = None,
                  round_timeout_s: float = math.inf,
                  heartbeat_timeout_s: float = math.inf,
                  straggler_factor: float = 3.0,
                  master_overhead_s: float = 0.0,
-                 exclude_stragglers: bool = True):
+                 exclude_stragglers: bool = True,
+                 collect_all: bool = False):
         # heartbeat_timeout_s defaults to inf: in the simulation, true
         # deaths surface as round starvation (-> mark_failed) and slowness
         # as the EWMA straggler stat; a finite timeout models a gossip-style
@@ -91,18 +117,78 @@ class ClusterRunner:
         self.eta = (engine.lipschitz_eta(self.state.xq_real)
                     if eta is None else eta)
         self._round = engine.round_fn(cfg, self.state, self.eta)
+        self._update = engine.update_fn(cfg, self.state, self.eta)
         self.latency = latency
         self.round_timeout_s = round_timeout_s
         self.exclude_stragglers = exclude_stragglers
-        self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
-                                        straggler_factor=straggler_factor,
-                                        now=0.0)
+        self.collect_all = collect_all
         self.scheduler = EventScheduler(cfg.N, latency, transport,
                                         master_overhead_s=master_overhead_s)
+        if self.distributed and math.isinf(round_timeout_s):
+            # a real cluster must be able to give up on silence
+            self.round_timeout_s = 300.0
+        self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
+                                        straggler_factor=straggler_factor,
+                                        now=self.scheduler.clock)
         self.w2 = engine._w_internal(cfg, self.state.w)
         self.records: dict[int, RoundRecord] = {}
         self.traces: dict[int, RoundTrace] = {}
         self.restarts = 0
+
+    @property
+    def distributed(self) -> bool:
+        """True when real worker processes compute (socket transport)."""
+        return self.latency is None
+
+    # ------------------------------------------------------------------
+    # Distributed-mode provisioning: one-time worker state over the wire
+    # ------------------------------------------------------------------
+
+    def provision(self, timeout_s: float = 60.0) -> None:
+        """Ship each worker its coded dataset share + static round context.
+
+        Sent as an EncodeShare with ``round == PROVISION_ROUND``; the worker
+        acks with a Heartbeat once its share is loaded, and rounds only
+        start after every dispatched worker has acked (so round-0 timing
+        does not absorb worker warmup).
+        """
+        assert self.distributed, "provision() is for real transports only"
+        tr = self.scheduler.transport
+        x_shares = np.asarray(self.state.x_shares)
+        cbar = engine.poly_coeffs(self.cfg)
+        cfg_kw = {"N": self.cfg.N, "K": self.cfg.K, "T": self.cfg.T,
+                  "r": self.cfg.r, "c": self.cfg.c, "lx": self.cfg.lx,
+                  "lw": self.cfg.lw, "lc": self.cfg.lc, "p": self.cfg.p,
+                  "batch_rows": self.cfg.batch_rows}
+        now = self.scheduler.clock
+        for w in range(self.cfg.N):
+            tr.send(worker_endpoint(w),
+                    EncodeShare(PROVISION_ROUND, w,
+                                {"cfg": cfg_kw, "x_share": x_shares[w],
+                                 "cbar": cbar}),
+                    at=now)
+        deadline = now + timeout_s
+        acked: set[int] = set()
+        while len(acked) < self.cfg.N:
+            nxt = tr.next_delivery(MASTER)
+            if nxt is None:
+                if self.scheduler.clock >= deadline:
+                    raise TimeoutError(
+                        f"workers never acked provisioning: "
+                        f"{sorted(set(range(self.cfg.N)) - acked)}")
+                continue
+            for at, msg in tr.recv(MASTER, nxt):
+                if isinstance(msg, Heartbeat):
+                    self.monitor.heartbeat(msg.worker, now=at)
+                    acked.add(msg.worker)
+
+    def shutdown_workers(self) -> None:
+        """Ask every worker process to exit its serve loop."""
+        assert self.distributed
+        now = self.scheduler.clock
+        for w in range(self.cfg.N):
+            self.scheduler.transport.send(
+                worker_endpoint(w), EncodeShare(SHUTDOWN_ROUND, w), at=now)
 
     # ------------------------------------------------------------------
     # Dispatch-set policy: monitor-alive workers, minus known stragglers
@@ -141,9 +227,25 @@ class ClusterRunner:
             raise ClusterDecodeError(
                 f"round {t}: only {len(workers)} dispatchable workers < "
                 f"recovery threshold {cfg.threshold}")
+        key_t = engine.round_key(self.kloop, t)
+        bidx = (engine.draw_batch(cfg, self.kloop, iters, self.state.mk, t)
+                if cfg.batch_rows is not None else None)
+        payloads = None
+        if self.distributed:
+            # encode THIS round's weight shares and ship one to each worker;
+            # field elements are exact int32, so the share a worker process
+            # receives is bit-identical to the one the in-process round
+            # would have traced from the same key.
+            w_shares = np.asarray(engine.encode_round_shares(
+                cfg, key_t, self.w2))                    # (N, d, c, r)
+            batch_np = None if bidx is None else np.asarray(bidx)
+            payloads = {int(w): {"w_share": w_shares[int(w)],
+                                 "batch": batch_np}
+                        for w in workers}
         trace = self.scheduler.dispatch_round(
             t, cfg.threshold, workers=workers, monitor=self.monitor,
-            timeout_s=self.round_timeout_s)
+            timeout_s=self.round_timeout_s, payloads=payloads,
+            collect_all=self.collect_all)
         if not math.isfinite(trace.t_first_R):
             # non-responders within the timeout are presumed dead
             for w in workers:
@@ -154,11 +256,16 @@ class ClusterRunner:
                 f"{cfg.threshold} within {self.round_timeout_s}s")
 
         dmat, order = engine.survivor_round(cfg, trace.responders)
-        bidx = (engine.draw_batch(cfg, self.kloop, iters, self.state.mk, t)
-                if cfg.batch_rows is not None else None)
-        self.w2 = self._round(engine.round_key(self.kloop, t), self.w2,
-                              jnp.asarray(dmat, jnp.int32),
-                              jnp.asarray(order, jnp.int32), bidx)
+        if self.distributed:
+            # decode from the payloads the responders actually sent
+            fastest = np.stack([np.asarray(trace.payloads[int(w)],
+                                           dtype=np.int32) for w in order])
+            self.w2 = self._update(self.w2, jnp.asarray(fastest),
+                                   jnp.asarray(dmat, jnp.int32), bidx)
+        else:
+            self.w2 = self._round(key_t, self.w2,
+                                  jnp.asarray(dmat, jnp.int32),
+                                  jnp.asarray(order, jnp.int32), bidx)
         self.traces[t] = trace
         self.records[t] = RoundRecord(
             round=t, survivors=order.copy(),
@@ -196,7 +303,8 @@ class ClusterRunner:
             now = self.scheduler.clock
             for i, ws in self.monitor.workers.items():
                 if not ws.alive:
-                    self.latency.revive(i, at_round=step)
+                    if self.latency is not None:
+                        self.latency.revive(i, at_round=step)
                     self.monitor.revive(i, now=now)
 
         loop = ResilientLoop(ckpt_manager, checkpoint_every=checkpoint_every,

@@ -1,28 +1,40 @@
-"""Event-loop scheduler: simulated-time round dispatch + first-T collect.
+"""Event-loop scheduler: round dispatch + first-T collect on either clock.
 
-The scheduler owns the simulated clock.  One round (DESIGN.md §7):
+The scheduler owns the clock — simulated or wall, behind one ``Clock``
+abstraction.  One round (DESIGN.md §7):
 
   1. DISPATCH  at clock t0: send an EncodeShare to every worker in the
-     dispatch set; each alive worker acks with a Heartbeat after a small
-     network delay and sends its WorkerResult after its sampled latency
-     (latency.py).  Dead workers (latency = inf) send nothing.
+     dispatch set.  With a ``latency`` model the scheduler also ENACTS the
+     workers (the in-process simulation): each alive worker acks with a
+     Heartbeat after a small network delay and sends its WorkerResult after
+     its sampled latency (latency.py); dead workers (latency = inf) send
+     nothing.  With ``latency=None`` the transport is real
+     (socket_transport.py) and actual worker processes produce the replies.
   2. COLLECT   pop master deliveries in time order, advancing the clock to
      each arrival, until ``threshold`` results of THIS round are in (late
      results of earlier rounds still update the heartbeat monitor — a late
-     reply proves the worker is alive, just slow).
+     reply proves the worker is alive, just slow).  On a wall clock
+     "advancing" is a no-op: time already passed; the loop instead blocks
+     on the transport's bounded poll until the round deadline.
   3. DECODE    the moment the threshold-th result lands the master decodes;
      the clock at that instant is the round's wait-for-fastest-T completion
      time.  ``t_all`` (when the LAST dispatched response would have landed)
      is what a wait-for-all master — or an MPC baseline that cannot treat
-     stragglers as erasures — would have paid for the same round.
+     stragglers as erasures — would have paid for the same round.  On a
+     real transport that counterfactual is unobservable unless
+     ``collect_all=True`` keeps the loop open until every dispatched worker
+     responds (the straggler benchmark does exactly this).
 
 The scheduler moves messages and time only; the gradient numerics stay in
 core/protocol (see runner.py).
 """
 from __future__ import annotations
 
+import abc
 import dataclasses
 import math
+import time as _time
+from typing import Any
 
 import numpy as np
 
@@ -43,6 +55,48 @@ class ClusterDecodeError(RuntimeError):
     worker reprovision) must take over."""
 
 
+# ---------------------------------------------------------------------------
+# Clock abstraction: simulated time is SET, wall time only OBSERVED
+# ---------------------------------------------------------------------------
+
+class Clock(abc.ABC):
+    """``real`` mirrors Transport.real: a simulated clock is advanced by the
+    scheduler to the transport's next delivery; a wall clock cannot be
+    advanced at all — ``advance_to`` is a no-op and waiting happens inside
+    the transport's bounded poll."""
+
+    real: bool
+
+    @abc.abstractmethod
+    def now(self) -> float: ...
+
+    @abc.abstractmethod
+    def advance_to(self, t: float) -> None: ...
+
+
+class SimClock(Clock):
+    real = False
+
+    def __init__(self, start: float = 0.0):
+        self._now = start
+
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float) -> None:
+        self._now = max(self._now, t)
+
+
+class WallClock(Clock):
+    real = True
+
+    def now(self) -> float:
+        return _time.monotonic()
+
+    def advance_to(self, t: float) -> None:
+        pass                        # wall time advances itself
+
+
 @dataclasses.dataclass
 class RoundTrace:
     """Everything the master observed about one round's timing."""
@@ -52,10 +106,16 @@ class RoundTrace:
     responders: np.ndarray          # arrival order (may exceed threshold on
                                     # ties at the decode instant)
     arrivals: dict[int, float]      # worker -> absolute arrival time
-    latencies: dict[int, float]     # worker -> sampled latency (inf = dead)
+    latencies: dict[int, float]     # worker -> sampled/reported latency
+                                    # (inf = dead)
     t_first_R: float                # clock at the threshold-th arrival
     t_all: float                    # when the slowest dispatched response
-                                    # lands (inf if any worker is dead)
+                                    # lands (inf if any worker is dead, or
+                                    # unobservable on a real transport)
+    payloads: dict[int, Any] = dataclasses.field(default_factory=dict)
+                                    # worker -> WorkerResult payload (real
+                                    # transports carry serialized arrays;
+                                    # the simulation carries None)
 
     @property
     def coded_wait_s(self) -> float:
@@ -67,7 +127,7 @@ class RoundTrace:
 
 
 class EventScheduler:
-    def __init__(self, n_workers: int, latency: LatencyModel,
+    def __init__(self, n_workers: int, latency: LatencyModel | None = None,
                  transport: Transport | None = None,
                  heartbeat_delay_s: float = 1e-3,
                  master_overhead_s: float = 0.0):
@@ -76,13 +136,27 @@ class EventScheduler:
         self.transport = transport or InProcessTransport()
         self.heartbeat_delay_s = heartbeat_delay_s
         self.master_overhead_s = master_overhead_s
-        self.clock = 0.0
+        if self.transport.real:
+            assert latency is None, (
+                "a real transport's workers produce their own latencies; "
+                "injected latency models are simulation-only")
+            self.time: Clock = WallClock()
+        else:
+            assert latency is not None, (
+                "the in-process simulation needs a latency model to enact "
+                "its workers")
+            self.time = SimClock()
+
+    @property
+    def clock(self) -> float:
+        return self.time.now()
 
     def _deliver_to_master(self, now: float, round: int, monitor,
                            dispatched: set[int],
                            arrivals: dict[int, float],
                            latencies: dict[int, float],
-                           responders: list[int]) -> None:
+                           responders: list[int],
+                           payloads: dict[int, Any]) -> None:
         for at, msg in self.transport.recv(MASTER, now):
             if isinstance(msg, Heartbeat):
                 if monitor is not None:
@@ -102,29 +176,31 @@ class EventScheduler:
                     arrivals[msg.worker] = at
                     latencies[msg.worker] = msg.compute_s
                     responders.append(msg.worker)
+                    payloads[msg.worker] = msg.payload
 
-    def dispatch_round(self, round: int, threshold: int,
-                       workers: np.ndarray | None = None,
-                       monitor=None,
-                       timeout_s: float = math.inf) -> RoundTrace:
-        """Run one round's event loop; returns the observed RoundTrace.
+    def _send_round(self, round: int, workers: np.ndarray, t0: float,
+                    payloads: dict[int, Any] | None
+                    ) -> dict[int, float]:
+        """Dispatch the EncodeShares; in simulation also enact the workers.
 
-        Does NOT raise when fewer than ``threshold`` results arrive — the
-        trace reports ``t_first_R = inf`` and the caller (runner.py) decides
-        between failing and recovering.
-        """
-        workers = np.arange(self.n) if workers is None else np.asarray(workers)
-        t0 = self.clock
+        Returns the sampled latencies (empty on a real transport — there the
+        latencies are whatever the worker processes actually take)."""
         sampled: dict[int, float] = {}
         for w in workers:
             w = int(w)
+            payload = None if payloads is None else payloads.get(w)
+            if self.latency is None:
+                # real transport: the worker process acks + replies itself
+                self.transport.send(worker_endpoint(w),
+                                    EncodeShare(round, w, payload), at=t0)
+                continue
             # the (simulated) worker consumes its previous share when the
             # next one is dispatched — without this drain the per-worker
             # inboxes grow one EncodeShare per round forever.  The CURRENT
             # round's share stays queued and inspectable until then.
             self.transport.recv(worker_endpoint(w), t0)
-            self.transport.send(worker_endpoint(w), EncodeShare(round, w),
-                                at=t0)
+            self.transport.send(worker_endpoint(w),
+                                EncodeShare(round, w, payload), at=t0)
             lat = self.latency.sample(round, w)
             sampled[w] = lat
             if math.isfinite(lat):
@@ -133,30 +209,70 @@ class EventScheduler:
             # inf delay = the transport drops it: a dead worker's silence
             self.transport.send(MASTER, WorkerResult(round, w, lat),
                                 at=t0, delay=lat)
+        return sampled
+
+    def dispatch_round(self, round: int, threshold: int,
+                       workers: np.ndarray | None = None,
+                       monitor=None,
+                       timeout_s: float = math.inf,
+                       payloads: dict[int, Any] | None = None,
+                       collect_all: bool = False) -> RoundTrace:
+        """Run one round's event loop; returns the observed RoundTrace.
+
+        Does NOT raise when fewer than ``threshold`` results arrive — the
+        trace reports ``t_first_R = inf`` and the caller (runner.py) decides
+        between failing and recovering.  ``payloads[w]`` rides in worker w's
+        EncodeShare (real transports carry the serialized weight share).
+        ``collect_all`` keeps collecting past the decode instant until every
+        dispatched worker has responded (or the deadline passes) — the only
+        way a real transport can observe the wait-for-all counterfactual.
+        """
+        workers = np.arange(self.n) if workers is None else np.asarray(workers)
+        t0 = self.time.now()
+        sampled = self._send_round(round, workers, t0, payloads)
 
         arrivals: dict[int, float] = {}
         latencies: dict[int, float] = {}
         responders: list[int] = []
+        round_payloads: dict[int, Any] = {}
         dispatched = {int(w) for w in workers}
         deadline = t0 + timeout_s
-        while len(responders) < threshold:
+        real = self.transport.real
+        while (len(responders) < threshold
+               or (collect_all and len(arrivals) < len(dispatched))):
             nxt = self.transport.next_delivery(MASTER)
-            if nxt is None or nxt > deadline:
-                break                      # starved: not enough responses
-            self.clock = nxt
-            self._deliver_to_master(self.clock, round, monitor, dispatched,
-                                    arrivals, latencies, responders)
+            if nxt is None:
+                if not real:
+                    break              # sim queue drained: nothing will come
+                if self.time.now() >= deadline:
+                    break              # wall clock ran out: starved
+                continue               # nothing YET: poll again
+            if nxt > deadline:
+                break
+            self.time.advance_to(nxt)
+            self._deliver_to_master(self.time.now(), round, monitor,
+                                    dispatched, arrivals, latencies,
+                                    responders, round_payloads)
 
         got_R = len(responders) >= threshold
-        t_first_R = self.clock if got_R else math.inf
-        t_all = t0 + max(sampled.values(), default=0.0)
-        if got_R:
-            self.clock += self.master_overhead_s
+        # the decode instant is the threshold-th ARRIVAL, which (under
+        # collect_all) the clock may have moved past by loop exit.
+        t_first_R = arrivals[responders[threshold - 1]] if got_R else math.inf
+        if real:
+            t_all = (max(arrivals.values())
+                     if arrivals and len(arrivals) == len(dispatched)
+                     else math.inf)
         else:
-            self.clock = min(deadline, t_all) if math.isfinite(deadline) \
-                else self.clock
+            t_all = t0 + max(sampled.values(), default=0.0)
+        if got_R:
+            self.time.advance_to(self.time.now() + self.master_overhead_s)
+        elif not real:
+            # starved: park the simulated clock at the moment the master
+            # gave up waiting
+            if math.isfinite(deadline):
+                self.time.advance_to(min(deadline, t_all))
         return RoundTrace(
             round=round, t_start=t0, dispatched=workers,
             responders=np.asarray(responders, dtype=np.int64),
             arrivals=arrivals, latencies=latencies,
-            t_first_R=t_first_R, t_all=t_all)
+            t_first_R=t_first_R, t_all=t_all, payloads=round_payloads)

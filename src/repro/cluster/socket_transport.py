@@ -1,0 +1,272 @@
+"""SocketTransport: the Transport contract over real TCP (DESIGN.md §7).
+
+The multi-process backend transport.py promises: the SAME typed messages
+(messages.py) carried as length-prefixed wire frames (wire.py) between one
+master endpoint and N worker processes on real sockets, with the wall clock
+replacing the simulated clock.
+
+Topology is a star: the master listens; each worker connects and registers
+with a HELLO frame naming its endpoint ("worker/3").  Either side holds ONE
+``SocketTransport`` whose ``local`` endpoint is its own name:
+
+  * ``SocketTransport.master(...)``  — selectors-based server; ``send`` routes
+    by destination endpoint to the registered connection.
+  * ``SocketTransport.connect(...)`` — worker client; its only peer is the
+    master.
+
+Contract mapping (the backend-shared contract tests pin this):
+
+  * ``send(dst, msg, at, delay)`` — ``at`` is ignored (the wall clock is
+    always "now"); a finite positive ``delay`` holds the frame in a timer
+    thread before writing (real injected latency); ``delay == math.inf``
+    drops the message — same "lost in the void" semantics as the simulated
+    backend, which is also what a write to a dead peer degrades to.
+  * ``recv(dst, now)`` — pops locally-arrived messages stamped ``<= now``;
+    arrival stamps are ``time.monotonic()`` at the moment the frame was read
+    off the socket.
+  * ``next_delivery(dst)`` — polls the selector up to ``poll_interval_s``
+    and returns the earliest queued arrival stamp, or None if nothing has
+    arrived YET (callers on a real clock poll again until their deadline).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import select
+import selectors
+import socket
+import threading
+import time
+from typing import Any
+
+from repro.cluster.messages import MASTER
+from repro.cluster.transport import Transport
+from repro.cluster import wire
+
+_RECV_CHUNK = 1 << 16
+
+
+class SocketTransport(Transport):
+    real = True
+
+    def __init__(self, local: str, poll_interval_s: float = 0.05):
+        self.local = local
+        self.poll_interval_s = poll_interval_s
+        self._sel = selectors.DefaultSelector()
+        self._listener: socket.socket | None = None
+        self._conns: dict[str, socket.socket] = {}      # endpoint -> conn
+        self._readers: dict[socket.socket, wire.FrameReader] = {}
+        self._names: dict[socket.socket, str | None] = {}
+        self._inbox: list[tuple[float, int, Any]] = []  # (stamp, seq, msg)
+        self._seq = itertools.count()
+        self._wlock = threading.Lock()   # guards the endpoint/conn maps
+        self._conn_locks: dict[str, threading.Lock] = {}  # per-endpoint
+        # write serialization: a stalled peer must only block ITS frames
+        self._timers: list[threading.Timer] = []
+        self._closed = False
+        self.peer_closed = False         # a registered peer hung up
+        self.port: int | None = None
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def master(cls, host: str = "127.0.0.1", port: int = 0,
+               backlog: int = 64, **kw) -> "SocketTransport":
+        t = cls(MASTER, **kw)
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind((host, port))
+        srv.listen(backlog)
+        srv.setblocking(False)
+        t._listener = srv
+        t.port = srv.getsockname()[1]
+        t._sel.register(srv, selectors.EVENT_READ)
+        return t
+
+    @classmethod
+    def connect(cls, host: str, port: int, endpoint: str,
+                timeout_s: float = 10.0, **kw) -> "SocketTransport":
+        t = cls(endpoint, **kw)
+        conn = socket.create_connection((host, port), timeout=timeout_s)
+        t._register(conn, MASTER)
+        conn.sendall(wire.serialize(wire.Hello(endpoint)))
+        return t
+
+    def _register(self, conn: socket.socket, name: str | None) -> None:
+        conn.setblocking(False)
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._readers[conn] = wire.FrameReader()
+        self._names[conn] = name
+        if name is not None:
+            with self._wlock:
+                self._conns[name] = conn
+        self._sel.register(conn, selectors.EVENT_READ)
+
+    # ------------------------------------------------------------------
+    # Event pump (runs on the caller's thread; selectors-based)
+    # ------------------------------------------------------------------
+
+    def _poll(self, timeout: float) -> None:
+        if self._closed:
+            return
+        for key, _ in self._sel.select(timeout):
+            sock = key.fileobj
+            if sock is self._listener:
+                try:
+                    conn, _ = sock.accept()
+                except OSError:
+                    continue              # client aborted mid-handshake
+                self._register(conn, None)    # named once HELLO arrives
+                continue
+            try:
+                data = sock.recv(_RECV_CHUNK)
+            except (BlockingIOError, InterruptedError):
+                continue
+            except OSError:
+                data = b""
+            if not data:
+                self._drop(sock)
+                continue
+            for msg in self._readers[sock].feed(data):
+                if isinstance(msg, wire.Hello):
+                    self._names[sock] = msg.endpoint
+                    with self._wlock:
+                        self._conns[msg.endpoint] = sock
+                else:
+                    heapq.heappush(self._inbox,
+                                   (time.monotonic(), next(self._seq), msg))
+
+    def _drop(self, sock: socket.socket) -> None:
+        name = self._names.pop(sock, None)
+        self._readers.pop(sock, None)
+        with self._wlock:
+            if name is not None and self._conns.get(name) is sock:
+                del self._conns[name]
+                self._conn_locks.pop(name, None)
+        try:
+            self._sel.unregister(sock)
+        except (KeyError, ValueError):
+            pass
+        sock.close()
+        if name is not None:
+            self.peer_closed = True
+
+    # ------------------------------------------------------------------
+    # Transport contract
+    # ------------------------------------------------------------------
+
+    def send(self, dst: str, msg: Any, at: float = 0.0,
+             delay: float = 0.0) -> None:
+        if math.isinf(delay):
+            return                        # lost in the void, like the sim
+        data = wire.serialize(msg)
+        if delay > 0:
+            # prune fired timers so a long-lived transport with injected
+            # latency doesn't grow the list (and its frame bytes) unboundedly
+            self._timers = [t for t in self._timers if t.is_alive()]
+            timer = threading.Timer(delay, self._write, (dst, data))
+            timer.daemon = True
+            self._timers.append(timer)
+            timer.start()
+        else:
+            self._write(dst, data)
+
+    def _write(self, dst: str, data: bytes,
+               stall_timeout_s: float = 5.0) -> None:
+        # Sockets stay non-blocking for the selector loop; writes drain a
+        # memoryview by hand so a timer-thread send can never flip a socket
+        # to blocking under the reader.  Serialization is PER ENDPOINT: a
+        # peer whose receive buffer is full (wedged process) can only delay
+        # frames addressed to it, never sends to healthy workers.  A peer
+        # that stops draining for ``stall_timeout_s`` gets the frame
+        # dropped — a worker that isn't reading is a dead worker, and
+        # dropped frames are exactly what death looks like on this
+        # transport.
+        with self._wlock:
+            conn = self._conns.get(dst)
+            if conn is None or self._closed:
+                return                    # unknown or dead peer: dropped
+            lock = self._conn_locks.setdefault(dst, threading.Lock())
+        with lock:
+            view = memoryview(data)
+            deadline = time.monotonic() + stall_timeout_s
+            try:
+                while view:
+                    try:
+                        view = view[conn.send(view):]
+                    except (BlockingIOError, InterruptedError):
+                        if time.monotonic() > deadline:
+                            return
+                        select.select([], [conn], [], self.poll_interval_s)
+            except OSError:
+                pass                      # peer died mid-write: dropped
+                # (the read side will observe EOF and _drop the conn)
+
+    def recv(self, dst: str, now: float) -> list[tuple[float, Any]]:
+        if dst != self.local:
+            raise ValueError(f"recv for {dst!r} on endpoint {self.local!r}: "
+                             f"a socket transport only receives locally")
+        self._poll(0)
+        out = []
+        while self._inbox and self._inbox[0][0] <= now:
+            t, _, msg = heapq.heappop(self._inbox)
+            out.append((t, msg))
+        return out
+
+    def next_delivery(self, dst: str) -> float | None:
+        if dst != self.local:
+            raise ValueError(f"next_delivery for {dst!r} on endpoint "
+                             f"{self.local!r}")
+        if not self._inbox:
+            self._poll(self.poll_interval_s)
+        return self._inbox[0][0] if self._inbox else None
+
+    # ------------------------------------------------------------------
+    # Lifecycle / orchestration helpers
+    # ------------------------------------------------------------------
+
+    def endpoints(self) -> list[str]:
+        """Currently registered remote endpoints (master side: the workers)."""
+        return sorted(self._conns)
+
+    def wait_for_endpoints(self, names: list[str], timeout_s: float = 30.0
+                           ) -> None:
+        """Block until every named endpoint has connected + HELLOed."""
+        deadline = time.monotonic() + timeout_s
+        while not all(n in self._conns for n in names):
+            if time.monotonic() > deadline:
+                missing = [n for n in names if n not in self._conns]
+                raise TimeoutError(f"endpoints never connected: {missing}")
+            self._poll(self.poll_interval_s)
+
+    def close(self) -> None:
+        with self._wlock:
+            self._closed = True
+        for timer in self._timers:
+            timer.cancel()
+        for sock in list(self._readers):
+            try:
+                self._sel.unregister(sock)
+            except (KeyError, ValueError):
+                pass
+            sock.close()
+        self._readers.clear()
+        self._names.clear()
+        self._conns.clear()
+        if self._listener is not None:
+            try:
+                self._sel.unregister(self._listener)
+            except (KeyError, ValueError):
+                pass
+            self._listener.close()
+            self._listener = None
+        self._sel.close()
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -3,9 +3,11 @@
 A transport moves typed messages (messages.py) between named endpoints
 ("master", "worker/3").  The interface is PURE asynchronous message passing
 — send with a delay, receive what has arrived, peek at the next arrival
-time — so the same master/scheduler code can later run over a socket/grpc
-transport where "delay" is real network+compute time and ``next_delivery``
-is replaced by blocking receives.
+time — so the same master/scheduler code runs unchanged over the socket
+backend (socket_transport.py), where "delay" is real network+compute time
+and ``next_delivery`` is a bounded blocking poll.  The backend-shared
+contract suite (tests/test_transport_contract.py) pins both to the same
+semantics.
 
 ``InProcessTransport`` is the simulation backend: a per-endpoint heap of
 (deliver_at, seq, msg).  It owns no clock; the EventScheduler advances
@@ -22,7 +24,17 @@ from typing import Any, Iterable
 
 
 class Transport(abc.ABC):
-    """Typed-message channel between named endpoints."""
+    """Typed-message channel between named endpoints.
+
+    ``real`` distinguishes the two time regimes the contract supports:
+    simulated backends deliver on an externally-advanced clock (the
+    scheduler moves time TO ``next_delivery``), while real backends
+    (cluster/socket_transport.py) stamp arrivals with the wall clock and
+    ``next_delivery`` is a bounded blocking poll — None means "nothing yet",
+    not "nothing ever".
+    """
+
+    real: bool = False
 
     @abc.abstractmethod
     def send(self, dst: str, msg: Any, at: float, delay: float = 0.0

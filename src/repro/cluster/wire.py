@@ -1,0 +1,351 @@
+"""Wire format for the socket transport: length-prefixed, pickle-free frames.
+
+Every frame is ``u32 body length (big-endian) || body``; the body is a
+one-byte frame tag followed by a self-describing, recursively tagged value
+encoding.  Three design constraints (DESIGN.md §7):
+
+  * NO PICKLE — the master deserializes bytes from worker processes; the
+    decoder only ever constructs ints/floats/strs/arrays/containers and the
+    three message dataclasses, never arbitrary objects.
+  * EXACT — field arrays travel as dtype/shape header + raw little-endian
+    bytes (bit-faithful int32 in [0, p), both the 24-bit P and 30-bit P30);
+    python-int payloads (e.g. exact decode-matrix entries from the host
+    Lagrange solve) are encoded as sign + big-endian magnitude at arbitrary
+    precision, so nothing is silently truncated to 64 bits.
+  * FAIL LOUD — malformed or truncated input raises ``WireError`` with a
+    description of what broke; it never hangs and never returns garbage.
+
+``serialize``/``deserialize`` round-trip the three message dataclasses
+(messages.py) plus two socket-layer frames: HELLO (endpoint registration on
+connect) and RAW (an arbitrary encodable value — used by the backend-shared
+transport contract tests, which ship plain strings/ints).
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Any
+
+import numpy as np
+
+from repro.cluster.messages import EncodeShare, Heartbeat, WorkerResult
+
+MAX_FRAME_BYTES = 1 << 30        # reject absurd length prefixes outright
+
+# frame tags (first body byte)
+_FRAME_ENCODE_SHARE = 0x10
+_FRAME_WORKER_RESULT = 0x11
+_FRAME_HEARTBEAT = 0x12
+_FRAME_HELLO = 0x13
+_FRAME_RAW = 0x14
+
+# value tags
+_T_NONE = 0x00
+_T_FALSE = 0x01
+_T_TRUE = 0x02
+_T_INT = 0x03
+_T_FLOAT = 0x04
+_T_STR = 0x05
+_T_BYTES = 0x06
+_T_NDARRAY = 0x07
+_T_INTARRAY = 0x08               # object-dtype array of exact python ints
+_T_LIST = 0x09
+_T_TUPLE = 0x0A
+_T_DICT = 0x0B
+
+
+class WireError(ValueError):
+    """Malformed, truncated, or unencodable wire data."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Hello:
+    """Connection registration: the first frame a client sends names its
+    endpoint ("worker/3") so the master can route by destination."""
+    endpoint: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Raw:
+    """An arbitrary encodable value as a message (transport contract tests
+    exercise the backends with plain strings/ints, not protocol messages)."""
+    value: Any
+
+
+# ---------------------------------------------------------------------------
+# Value encoding
+# ---------------------------------------------------------------------------
+
+def _enc_u32(n: int) -> bytes:
+    return struct.pack(">I", n)
+
+
+def _enc_value(v: Any, out: list[bytes]) -> None:
+    if v is None:
+        out.append(bytes([_T_NONE]))
+    elif isinstance(v, bool):
+        out.append(bytes([_T_TRUE if v else _T_FALSE]))
+    elif isinstance(v, (int, np.integer)):
+        v = int(v)
+        mag = abs(v)
+        body = mag.to_bytes((mag.bit_length() + 7) // 8, "big")
+        out.append(bytes([_T_INT, 1 if v < 0 else 0]) + _enc_u32(len(body))
+                   + body)
+    elif isinstance(v, (float, np.floating)):
+        out.append(bytes([_T_FLOAT]) + struct.pack(">d", float(v)))
+    elif isinstance(v, str):
+        b = v.encode("utf-8")
+        out.append(bytes([_T_STR]) + _enc_u32(len(b)) + b)
+    elif isinstance(v, bytes):
+        out.append(bytes([_T_BYTES]) + _enc_u32(len(v)) + v)
+    elif isinstance(v, np.ndarray) and v.dtype == object:
+        # exact python-int matrices (host Lagrange solves): element-wise
+        # arbitrary-precision ints, never truncated to a machine word.
+        out.append(bytes([_T_INTARRAY, v.ndim]))
+        for dim in v.shape:
+            out.append(_enc_u32(dim))
+        for e in v.reshape(-1):
+            if not isinstance(e, (int, np.integer)):
+                raise WireError(
+                    f"object arrays may only hold ints, got {type(e).__name__}")
+            _enc_value(int(e), out)
+    elif isinstance(v, np.ndarray):
+        dt = v.dtype.newbyteorder("<")
+        ds = dt.str.encode("ascii")
+        out.append(bytes([_T_NDARRAY, len(ds)]) + ds + bytes([v.ndim]))
+        for dim in v.shape:
+            out.append(_enc_u32(dim))
+        out.append(np.ascontiguousarray(v, dtype=dt).tobytes())
+    elif isinstance(v, list):
+        out.append(bytes([_T_LIST]) + _enc_u32(len(v)))
+        for e in v:
+            _enc_value(e, out)
+    elif isinstance(v, tuple):
+        out.append(bytes([_T_TUPLE]) + _enc_u32(len(v)))
+        for e in v:
+            _enc_value(e, out)
+    elif isinstance(v, dict):
+        out.append(bytes([_T_DICT]) + _enc_u32(len(v)))
+        for k, e in v.items():
+            if not isinstance(k, str):
+                raise WireError(f"dict keys must be str, got {type(k).__name__}")
+            _enc_value(k, out)
+            _enc_value(e, out)
+    else:
+        # device arrays (jax) quack like arrays; anything else is a bug.
+        arr = np.asarray(v)
+        if arr.dtype == object:
+            raise WireError(f"cannot encode {type(v).__name__}")
+        _enc_value(arr, out)
+
+
+class _Reader:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if n < 0 or self.pos + n > len(self.data):
+            raise WireError(
+                f"truncated frame: wanted {n} bytes at offset {self.pos}, "
+                f"frame has {len(self.data)}")
+        b = self.data[self.pos: self.pos + n]
+        self.pos += n
+        return b
+
+    def u8(self) -> int:
+        return self.take(1)[0]
+
+    def u32(self) -> int:
+        return struct.unpack(">I", self.take(4))[0]
+
+
+def _dec_value(r: _Reader) -> Any:
+    tag = r.u8()
+    if tag == _T_NONE:
+        return None
+    if tag == _T_FALSE:
+        return False
+    if tag == _T_TRUE:
+        return True
+    if tag == _T_INT:
+        neg = r.u8()
+        mag = int.from_bytes(r.take(r.u32()), "big")
+        return -mag if neg else mag
+    if tag == _T_FLOAT:
+        return struct.unpack(">d", r.take(8))[0]
+    if tag == _T_STR:
+        return r.take(r.u32()).decode("utf-8")
+    if tag == _T_BYTES:
+        return r.take(r.u32())
+    if tag == _T_NDARRAY:
+        # the fail-loud contract covers garbage INSIDE fields too: a bogus
+        # dtype string or impossible shape must surface as WireError, not
+        # as whatever numpy happens to raise
+        try:
+            dt = np.dtype(r.take(r.u8()).decode("ascii"))
+        except Exception as e:
+            raise WireError(f"malformed ndarray dtype: {e}") from None
+        shape = tuple(r.u32() for _ in range(r.u8()))
+        n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        try:
+            arr = np.frombuffer(r.take(n), dtype=dt).reshape(shape)
+        except WireError:
+            raise
+        except Exception as e:
+            raise WireError(f"malformed ndarray body: {e}") from None
+        return arr.copy()             # writable, detached from the buffer
+    if tag == _T_INTARRAY:
+        shape = tuple(r.u32() for _ in range(r.u8()))
+        n = int(np.prod(shape, dtype=np.int64))
+        arr = np.empty(n, dtype=object)
+        for i in range(n):
+            arr[i] = _dec_value(r)
+        return arr.reshape(shape)
+    if tag == _T_LIST:
+        return [_dec_value(r) for _ in range(r.u32())]
+    if tag == _T_TUPLE:
+        return tuple(_dec_value(r) for _ in range(r.u32()))
+    if tag == _T_DICT:
+        return {_dec_value(r): _dec_value(r) for _ in range(r.u32())}
+    raise WireError(f"unknown value tag 0x{tag:02x}")
+
+
+# ---------------------------------------------------------------------------
+# Message frames
+# ---------------------------------------------------------------------------
+
+def serialize(msg: Any) -> bytes:
+    """Message -> one length-prefixed frame (ready for ``sendall``)."""
+    out: list[bytes] = []
+    if isinstance(msg, EncodeShare):
+        out.append(bytes([_FRAME_ENCODE_SHARE]))
+        _enc_value(msg.round, out)
+        _enc_value(msg.worker, out)
+        _enc_value(msg.payload, out)
+    elif isinstance(msg, WorkerResult):
+        out.append(bytes([_FRAME_WORKER_RESULT]))
+        _enc_value(msg.round, out)
+        _enc_value(msg.worker, out)
+        _enc_value(msg.compute_s, out)
+        _enc_value(msg.payload, out)
+    elif isinstance(msg, Heartbeat):
+        out.append(bytes([_FRAME_HEARTBEAT]))
+        _enc_value(msg.worker, out)
+        _enc_value(msg.sent_at, out)
+    elif isinstance(msg, Hello):
+        out.append(bytes([_FRAME_HELLO]))
+        _enc_value(msg.endpoint, out)
+    else:
+        out.append(bytes([_FRAME_RAW]))
+        _enc_value(msg, out)
+    body = b"".join(out)
+    if len(body) > MAX_FRAME_BYTES:
+        raise WireError(f"frame body of {len(body)} bytes exceeds "
+                        f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    return _enc_u32(len(body)) + body
+
+
+def _decode_body(body: bytes) -> Any:
+    r = _Reader(body)
+    tag = r.u8()
+    if tag == _FRAME_ENCODE_SHARE:
+        msg = EncodeShare(round=_dec_value(r), worker=_dec_value(r),
+                          payload=_dec_value(r))
+    elif tag == _FRAME_WORKER_RESULT:
+        msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
+                           compute_s=_dec_value(r), payload=_dec_value(r))
+    elif tag == _FRAME_HEARTBEAT:
+        msg = Heartbeat(worker=_dec_value(r), sent_at=_dec_value(r))
+    elif tag == _FRAME_HELLO:
+        msg = Hello(endpoint=_dec_value(r))
+    elif tag == _FRAME_RAW:
+        msg = Raw(value=_dec_value(r)).value
+    else:
+        raise WireError(f"unknown frame tag 0x{tag:02x}")
+    if r.pos != len(body):
+        raise WireError(f"{len(body) - r.pos} trailing bytes after frame")
+    return msg
+
+
+def deserialize(frame: bytes) -> Any:
+    """One complete length-prefixed frame -> message.
+
+    Raises WireError on a short, overlong, or malformed frame — a corrupt
+    peer must produce a clear error on the spot, never a hang downstream.
+    """
+    if len(frame) < 4:
+        raise WireError(f"frame shorter than its 4-byte length prefix "
+                        f"({len(frame)} bytes)")
+    (n,) = struct.unpack(">I", frame[:4])
+    if n > MAX_FRAME_BYTES:
+        raise WireError(f"length prefix {n} exceeds "
+                        f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    if len(frame) != 4 + n:
+        raise WireError(f"frame length mismatch: prefix says {n} body bytes, "
+                        f"got {len(frame) - 4}")
+    return _decode_body(frame[4:])
+
+
+class FrameReader:
+    """Incremental frame decoder over a byte stream (one per connection).
+
+    ``feed(chunk)`` returns every message completed by the chunk; partial
+    frames are buffered until the rest arrives.  A bad length prefix raises
+    immediately (a desynchronized stream cannot be resynchronized).
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, chunk: bytes) -> list[Any]:
+        self._buf.extend(chunk)
+        msgs = []
+        while len(self._buf) >= 4:
+            (n,) = struct.unpack(">I", self._buf[:4])
+            if n > MAX_FRAME_BYTES:
+                raise WireError(f"length prefix {n} exceeds "
+                                f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+            if len(self._buf) < 4 + n:
+                break
+            msgs.append(_decode_body(bytes(self._buf[4: 4 + n])))
+            del self._buf[: 4 + n]
+        return msgs
+
+
+# ---------------------------------------------------------------------------
+# Structural equality (dataclass == breaks on ndarray payloads)
+# ---------------------------------------------------------------------------
+
+def values_equal(a: Any, b: Any) -> bool:
+    """Deep equality over the encodable value universe (arrays compared
+    elementwise with dtype+shape, NaN == NaN so round-trips are reflexive)."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype != b.dtype or a.shape != b.shape:
+            return False
+        if a.dtype == object:
+            return all(values_equal(x, y)
+                       for x, y in zip(a.reshape(-1), b.reshape(-1)))
+        return bool(np.array_equal(a, b, equal_nan=a.dtype.kind == "f"))
+    if isinstance(a, bool) or isinstance(b, bool):
+        return type(a) is type(b) and a == b
+    if isinstance(a, float) and isinstance(b, float):
+        return (a != a and b != b) or a == b
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(values_equal(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return (a.keys() == b.keys()
+                and all(values_equal(v, b[k]) for k, v in a.items()))
+    return type(a) is type(b) and a == b
+
+
+def messages_equal(a: Any, b: Any) -> bool:
+    """Field-wise message equality with deep payload comparison."""
+    if dataclasses.is_dataclass(a) and dataclasses.is_dataclass(b):
+        if type(a) is not type(b):
+            return False
+        return all(values_equal(getattr(a, f.name), getattr(b, f.name))
+                   for f in dataclasses.fields(a))
+    return values_equal(a, b)

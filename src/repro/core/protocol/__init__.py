@@ -33,11 +33,13 @@ from repro.core.protocol.engine import (
     Schedule,
     cleartext_baseline,
     draw_batch,
+    encode_round_shares,
     lipschitz_eta,
     loss_and_accuracy,
     make_schedule,
     multiclass_loss_and_accuracy,
     per_class_accuracy,
+    poly_coeffs,
     round_fn,
     round_key,
     setup,
@@ -46,6 +48,7 @@ from repro.core.protocol.engine import (
     survivor_round,
     train,
     train_reference,
+    update_fn,
 )
 
 __all__ = [
@@ -58,6 +61,7 @@ __all__ = [
     "decode_parts",
     "draw_batch",
     "encode_dataset",
+    "encode_round_shares",
     "encode_weights",
     "lipschitz_eta",
     "loss_and_accuracy",
@@ -66,6 +70,7 @@ __all__ = [
     "multiclass_loss_and_accuracy",
     "pad_rows",
     "per_class_accuracy",
+    "poly_coeffs",
     "round_fn",
     "round_key",
     "setup",
@@ -74,5 +79,6 @@ __all__ = [
     "survivor_round",
     "train",
     "train_reference",
+    "update_fn",
     "worker_fn",
 ]

@@ -94,28 +94,28 @@ def _w_public(cfg: CPMLConfig, w2: jax.Array) -> jax.Array:
 # scan body — this sharing is what makes scan-vs-loop bit-identity hold)
 # ---------------------------------------------------------------------------
 
-def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
-           x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
-           xty_full: jax.Array, dmat: jax.Array, order: jax.Array,
-           batch_idx: jax.Array | None, eta: jax.Array, m_int: jax.Array
-           ) -> jax.Array:
-    """w2 (d, c) -> updated (d, c).  One full encode->compute->decode round.
+def _round_update(cfg: CPMLConfig, w2: jax.Array, fastest: jax.Array,
+                  xq_parts: jax.Array, y_parts: jax.Array,
+                  xty_full: jax.Array, dmat: jax.Array,
+                  batch_idx: jax.Array | None, eta: jax.Array,
+                  m_int: jax.Array) -> jax.Array:
+    """Decode the survivors' results and apply the gradient step.
+
+    fastest: (R, d, c) field evaluations in responder order — either sliced
+    out of a master-side all_worker_results (the simulated paths, _round) or
+    received over the wire from real worker processes (runner socket mode).
+    Both paths flow through THIS function, so where the worker compute ran
+    cannot change what the update computes.
 
     Batch index i selects global sample k*mk + i from every part k; rows
     with k*mk + i >= m are all-zero padding, so the 1/batch normalization
     counts only the real rows — otherwise rounds touching the padded tail
     would take a systematically smaller step.
     """
-    cbar = jnp.asarray(
-        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
-        jnp.int32)
-    w_shares = encode.encode_weights(cfg, key, w2)       # (N, d, c, r)
     if batch_idx is None:
-        xb, xty = x_shares, xty_full
+        xty = xty_full
         scale = eta / m_int.astype(jnp.float32)
     else:
-        # coded sub-batch: the SAME row subset of every share / part.
-        xb = jnp.take(x_shares, batch_idx, axis=1)       # (N, b, d)
         xqb = jnp.take(xq_parts, batch_idx, axis=1)      # (K, b, d)
         yb = jnp.take(y_parts, batch_idx, axis=1)        # (K, b, c)
         xty = jnp.einsum("kbd,kbc->dc", xqb, yb)
@@ -123,13 +123,31 @@ def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
         part0 = jnp.arange(cfg.K, dtype=jnp.int32) * mk  # global row offsets
         real = jnp.sum((batch_idx[None, :] + part0[:, None]) < m_int)
         scale = eta / real.astype(jnp.float32)
-    results = compute.all_worker_results(cfg, cbar, xb, w_shares)  # (N, d, c)
-    fastest = jnp.take(results, order, axis=0)                     # (R, d, c)
     xg = decode.decode_gradient(cfg, fastest, dmat)                # (d, c)
     return w2 - scale * (xg - xty)
 
 
+def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
+           x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
+           xty_full: jax.Array, dmat: jax.Array, order: jax.Array,
+           batch_idx: jax.Array | None, eta: jax.Array, m_int: jax.Array
+           ) -> jax.Array:
+    """w2 (d, c) -> updated (d, c).  One full encode->compute->decode round
+    with the N workers enacted on-device (vmap/shard, DESIGN.md §4)."""
+    cbar = jnp.asarray(poly_coeffs(cfg), jnp.int32)
+    w_shares = encode.encode_weights(cfg, key, w2)       # (N, d, c, r)
+    xb = (x_shares if batch_idx is None
+          else jnp.take(x_shares, batch_idx, axis=1))    # (N, b, d): the
+    # coded sub-batch is the SAME row subset of every share / part.
+    results = compute.all_worker_results(cfg, cbar, xb, w_shares)  # (N, d, c)
+    fastest = jnp.take(results, order, axis=0)                     # (R, d, c)
+    return _round_update(cfg, w2, fastest, xq_parts, y_parts, xty_full,
+                         dmat, batch_idx, eta, m_int)
+
+
 _round_jit = jax.jit(_round, static_argnums=(0,))
+_round_update_jit = jax.jit(_round_update, static_argnums=(0,))
+_encode_weights_jit = jax.jit(encode.encode_weights, static_argnums=(0,))
 
 
 def _scale_args(cfg: CPMLConfig, eta: float, state: CPMLState):
@@ -156,6 +174,47 @@ def round_fn(cfg: CPMLConfig, state: CPMLState, eta: float
                           state.y_parts, xty2, dmat, order, batch_idx, *scale)
 
     return run
+
+
+def update_fn(cfg: CPMLConfig, state: CPMLState, eta: float
+              ) -> Callable[..., jax.Array]:
+    """Decode-and-update hook for drivers whose worker compute ran ELSEWHERE.
+
+    Returns ``run(w2, fastest, dmat, batch_idx=None) -> w2`` where
+    ``fastest`` is the (R, d, c) field results of the first ``threshold``
+    responders in arrival order — e.g. deserialized from real worker
+    processes over a socket transport.  It is the same ``_round_update``
+    the in-process round composes, so a distributed round that feeds back
+    bit-faithful worker results produces bit-identical weights.
+    """
+    scale = _scale_args(cfg, eta, state)
+    xty2 = _w_internal(cfg, state.xty)
+
+    def run(w2: jax.Array, fastest: jax.Array, dmat: jax.Array,
+            batch_idx: jax.Array | None = None) -> jax.Array:
+        return _round_update_jit(cfg, w2, fastest, state.xq_parts,
+                                 state.y_parts, xty2, dmat, batch_idx, *scale)
+
+    return run
+
+
+def encode_round_shares(cfg: CPMLConfig, key: jax.Array, w2: jax.Array
+                        ) -> jax.Array:
+    """Round-t weight shares (N, d, c, r) for external dispatch.
+
+    Same ``encode.encode_weights`` call ``_round`` traces with the same key
+    — field elements are exact int32, so shares shipped to worker processes
+    are bit-identical to the ones the in-process round would have used.
+    """
+    return _encode_weights_jit(cfg, key, w2)
+
+
+def poly_coeffs(cfg: CPMLConfig) -> np.ndarray:
+    """The quantized sigmoid-surrogate coefficients c̄ workers evaluate
+    (one host-side derivation, shared by _round and worker provisioning)."""
+    return np.asarray(
+        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
+        dtype=np.int32)
 
 
 def step(cfg: CPMLConfig, key: jax.Array, state: CPMLState, eta: float,

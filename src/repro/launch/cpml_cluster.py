@@ -1,27 +1,43 @@
-"""Coded cluster simulation driver (the runtime analogue of cpml_train).
+"""Coded cluster driver: simulated OR real multi-process deployment.
 
     python -m repro.launch.cpml_cluster --latency lognormal --iters 25
     python -m repro.launch.cpml_cluster --latency dead --resilient
+    python -m repro.launch.cpml_cluster --transport socket --iters 10
+    python -m repro.launch.cpml_cluster --transport socket --kill-worker 5 \\
+        --kill-at-round 4
 
-Runs CodedPrivateML training through the event-driven cluster runtime
-(repro.cluster): per-round dispatch to N simulated workers under a chosen
-latency profile, decode at the fastest-`threshold` responders, and a report
-of what the wait-for-fastest-T policy saved over wait-for-all — the paper's
-headline systems effect, measured per round.  ``--resilient`` adds
-checkpoint/restore recovery for mid-run worker death (pair with
-``--latency dead``).
+Runs CodedPrivateML training through the cluster runtime (repro.cluster):
+per-round dispatch to N workers, decode at the fastest-`threshold`
+responders, and a report of what the wait-for-fastest-T policy saved over
+wait-for-all — the paper's headline systems effect, measured per round.
+
+``--transport inprocess`` (default) is the event-driven simulation under a
+chosen ``--latency`` profile; ``--resilient`` adds checkpoint/restore
+recovery for mid-run worker death (pair with ``--latency dead``).
+
+``--transport socket`` spawns N REAL worker processes on localhost, ships
+coded shares as wire frames over TCP, and decodes from the bytes the
+fastest responders actually sent — then verifies the weights are
+bit-identical to ``train_reference`` replaying the observed responder trace
+(DESIGN.md §7: the runtime layer changes when and where rounds execute,
+never what they compute).  ``--kill-worker`` crashes one worker mid-run to
+demo first-T decode riding through a real death.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import math
+import os
+import subprocess
 import sys
 import tempfile
+import time
 
 
 def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser(description="CodedPrivateML cluster sim")
+    ap = argparse.ArgumentParser(description="CodedPrivateML cluster driver")
     ap.add_argument("--workers", "-N", type=int, default=8)
     ap.add_argument("--parallel", "-K", type=int, default=2)
     ap.add_argument("--privacy", "-T", type=int, default=1)
@@ -31,19 +47,142 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--d", type=int, default=128, help="features")
     ap.add_argument("--iters", type=int, default=25)
     ap.add_argument("--batch-rows", type=int, default=None)
+    ap.add_argument("--transport", choices=("inprocess", "socket"),
+                    default="inprocess",
+                    help="inprocess = event-driven simulation; socket = "
+                         "spawn N real worker processes on localhost")
     ap.add_argument("--latency", choices=("deterministic", "lognormal",
                                           "bursty", "dead"),
-                    default="lognormal", help="per-worker latency profile")
+                    default="lognormal",
+                    help="per-worker latency profile (inprocess only)")
     ap.add_argument("--latency-seed", type=int, default=0)
     ap.add_argument("--round-timeout", type=float, default=math.inf,
-                    help="simulated seconds before a round is declared "
-                         "starved (required for --latency dead)")
+                    help="seconds before a round is declared starved "
+                         "(required for --latency dead; defaults to 120 "
+                         "wall seconds for --transport socket)")
     ap.add_argument("--resilient", action="store_true",
                     help="checkpoint/restore recovery on starved rounds")
     ap.add_argument("--checkpoint-every", type=int, default=5)
+    # socket-transport options
+    ap.add_argument("--port", type=int, default=0,
+                    help="master TCP port (0 = ephemeral)")
+    ap.add_argument("--kill-worker", type=int, default=None,
+                    help="crash this worker index mid-run (socket only)")
+    ap.add_argument("--kill-at-round", type=int, default=4,
+                    help="round at which --kill-worker crashes")
+    ap.add_argument("--straggle-worker", type=int, default=None,
+                    help="make this worker sleep before every reply "
+                         "(socket only)")
+    ap.add_argument("--straggle-sleep", type=float, default=0.25)
+    ap.add_argument("--collect-all", action="store_true",
+                    help="keep each round open until every dispatched "
+                         "worker responds, so the wait-for-all "
+                         "counterfactual is measured on the real clock "
+                         "(socket only; do not combine with --kill-worker)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=math.inf,
+                    help="wall seconds of heartbeat silence before a worker "
+                         "drops from the dispatch set (socket only)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the bit-identity check vs train_reference "
+                         "(socket only)")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--json-out", type=str, default=None)
     return ap
+
+
+@contextlib.contextmanager
+def local_socket_cluster(n_workers: int, *, port: int = 0,
+                         die_at_round: dict[int, int] | None = None,
+                         sleep_s: dict[int, float] | None = None,
+                         connect_timeout_s: float = 60.0,
+                         poll_interval_s: float = 0.02):
+    """Spawn N cpml_worker processes against a fresh master transport.
+
+    Yields the master ``SocketTransport`` once every worker has connected
+    and HELLOed.  On exit the worker processes are terminated and the
+    transport closed.  Reused by benchmarks/bench_socket.py and the slow
+    socket tests, so every consumer launches workers the same way.
+    """
+    from repro.cluster.socket_transport import SocketTransport
+    from repro.cluster.messages import worker_endpoint
+
+    src_root = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    tr = SocketTransport.master(port=port, poll_interval_s=poll_interval_s)
+    procs: list[subprocess.Popen] = []
+    try:
+        for w in range(n_workers):
+            cmd = [sys.executable, "-m", "repro.launch.cpml_worker",
+                   "--host", "127.0.0.1", "--port", str(tr.port),
+                   "--worker", str(w)]
+            if die_at_round and w in die_at_round:
+                cmd += ["--die-at-round", str(die_at_round[w])]
+            if sleep_s and w in sleep_s:
+                cmd += ["--sleep-s", str(sleep_s[w])]
+            procs.append(subprocess.Popen(cmd, env=env))
+        tr.wait_for_endpoints([worker_endpoint(w) for w in range(n_workers)],
+                              timeout_s=connect_timeout_s)
+        yield tr
+    finally:
+        tr.close()
+        deadline = time.monotonic() + 10.0
+        for p in procs:
+            # closing the transport hangs up on every worker, which exits
+            # its serve loop; escalate only if one wedges.
+            try:
+                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
+
+
+def _run_socket(args, cfg, key, x, y) -> tuple:
+    """--transport socket: N real worker processes, wire frames, wall clock."""
+    import numpy as np
+
+    from repro.cluster import ClusterRunner
+    from repro.core import protocol
+
+    die = ({args.kill_worker: args.kill_at_round}
+           if args.kill_worker is not None else None)
+    sleep = ({args.straggle_worker: args.straggle_sleep}
+             if args.straggle_worker is not None else None)
+    timeout = args.round_timeout
+    if math.isinf(timeout):
+        timeout = 120.0         # real silence must be detectable
+    with local_socket_cluster(cfg.N, port=args.port, die_at_round=die,
+                              sleep_s=sleep) as tr:
+        runner = ClusterRunner(cfg, key, x, y, latency=None, transport=tr,
+                               round_timeout_s=timeout,
+                               heartbeat_timeout_s=args.heartbeat_timeout,
+                               collect_all=args.collect_all)
+        runner.provision()
+        t0 = time.monotonic()
+        w = runner.run(args.iters)
+        wall_s = time.monotonic() - t0
+        runner.shutdown_workers()
+    print(f"socket run: {args.iters} rounds over TCP in {wall_s:.1f}s "
+          f"({wall_s / args.iters * 1e3:.0f} ms/round)")
+    if die:
+        dead = set(die)
+        late = [t for t, rec in runner.records.items()
+                if dead & set(map(int, rec.survivors))]
+        print(f"killed worker(s) {sorted(dead)} at round "
+              f"{args.kill_at_round}: last decoded in round "
+              f"{max(late) if late else '-'}; first-T decode rode through")
+    if not args.no_verify:
+        w_ref, _ = protocol.train_reference(cfg, key, x, y, iters=args.iters,
+                                            survivor_fn=runner.survivor_fn())
+        same = bool((np.asarray(w) == np.asarray(w_ref)).all())
+        print(f"bit-identical to train_reference over the observed "
+              f"responder trace: {same}")
+        if not same:
+            return runner, w, 1
+    return runner, w, 0
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -58,8 +197,10 @@ def main(argv: list[str] | None = None) -> int:
     cfg = protocol.CPMLConfig(N=args.workers, K=args.parallel,
                               T=args.privacy, r=args.degree, c=args.classes,
                               batch_rows=args.batch_rows)
+    mode = (args.latency if args.transport == "inprocess"
+            else f"socket x{cfg.N} procs")
     print(f"CPML cluster: N={cfg.N} K={cfg.K} T={cfg.T} r={cfg.r} c={cfg.c} "
-          f"threshold={cfg.threshold} latency={args.latency}")
+          f"threshold={cfg.threshold} [{mode}]")
 
     key = jax.random.PRNGKey(args.seed)
     if cfg.c == 1:
@@ -69,42 +210,55 @@ def main(argv: list[str] | None = None) -> int:
         x, y = synthetic.multiclass_mnist_like(jax.random.PRNGKey(1),
                                                m=args.m, d=args.d, c=cfg.c)
 
-    kw = {}
-    if args.latency == "dead" and args.resilient:
-        # kill one worker more than coding tolerates, so the run exercises
-        # checkpoint restore + reprovision (a single death at N=8 is
-        # absorbed by the first-T decode with no restart at all)
-        spare = cfg.N - cfg.threshold
-        kw["deaths"] = {w: 3 for w in range(spare + 1)}
-    latency = make_latency(args.latency, seed=args.latency_seed, **kw)
-    timeout = args.round_timeout
-    if args.latency == "dead" and math.isinf(timeout):
-        timeout = 60.0          # a dead worker must be detectable
-    runner = ClusterRunner(cfg, key, x, y, latency,
-                           round_timeout_s=timeout)
-    if args.resilient:
-        from repro.checkpoint.manager import CheckpointManager
-        with tempfile.TemporaryDirectory() as ckdir:
-            mgr = CheckpointManager(ckdir, async_write=False)
-            w = runner.run_resilient(args.iters, mgr,
-                                     checkpoint_every=args.checkpoint_every)
-        print(f"resilient run: {runner.restarts} restart(s)")
+    rc = 0
+    if args.transport == "socket":
+        if args.resilient:
+            print("--resilient is inprocess-only for now", file=sys.stderr)
+            return 2
+        runner, w, rc = _run_socket(args, cfg, key, x, y)
     else:
-        w = runner.run(args.iters)
+        kw = {}
+        if args.latency == "dead" and args.resilient:
+            # kill one worker more than coding tolerates, so the run
+            # exercises checkpoint restore + reprovision (a single death at
+            # N=8 is absorbed by the first-T decode with no restart at all)
+            spare = cfg.N - cfg.threshold
+            kw["deaths"] = {w: 3 for w in range(spare + 1)}
+        latency = make_latency(args.latency, seed=args.latency_seed, **kw)
+        timeout = args.round_timeout
+        if args.latency == "dead" and math.isinf(timeout):
+            timeout = 60.0          # a dead worker must be detectable
+        runner = ClusterRunner(cfg, key, x, y, latency,
+                               round_timeout_s=timeout)
+        if args.resilient:
+            from repro.checkpoint.manager import CheckpointManager
+            with tempfile.TemporaryDirectory() as ckdir:
+                mgr = CheckpointManager(ckdir, async_write=False)
+                w = runner.run_resilient(
+                    args.iters, mgr, checkpoint_every=args.checkpoint_every)
+            print(f"resilient run: {runner.restarts} restart(s)")
+        else:
+            w = runner.run(args.iters)
 
     stats = runner.wait_stats()
     coded, allw = stats["coded_T"], stats["wait_all"]
     print(f"per-round wait  coded-T: mean {coded['mean']:.2f}s  "
           f"p50 {coded['p50']:.2f}s  p95 {coded['p95']:.2f}s")
-    print(f"per-round wait wait-all: mean {allw['mean']:.2f}s  "
-          f"p50 {allw['p50']:.2f}s  p95 {allw['p95']:.2f}s")
-    dead_rounds = int(stats["rounds"]["dead_rounds"])
-    if dead_rounds:
-        print(f"({dead_rounds} round(s) had a dead worker: wait-for-all "
+    unobserved = int(stats["rounds"]["dead_rounds"])
+    if math.isfinite(allw["mean"]):
+        print(f"per-round wait wait-all: mean {allw['mean']:.2f}s  "
+              f"p50 {allw['p50']:.2f}s  p95 {allw['p95']:.2f}s")
+    if unobserved and args.transport == "socket" and not args.collect_all:
+        print(f"(wait-for-all unobserved in first-T mode: the master moved "
+              f"on at the threshold-th arrival every round; rerun with "
+              f"--collect-all to measure it)")
+    elif unobserved:
+        print(f"({unobserved} round(s) had a dead worker: wait-for-all "
               f"would NEVER complete; wait-all stats cover the "
-              f"{int(stats['rounds']['n']) - dead_rounds} finite rounds)")
-    if dead_rounds == 0 and allw["total"] > 0 and math.isfinite(allw["total"]):
-        print(f"simulated training time: {coded['total']:.1f}s coded-T vs "
+              f"{int(stats['rounds']['n']) - unobserved} finite rounds)")
+    if unobserved == 0 and allw["total"] > 0 and math.isfinite(allw["total"]):
+        word = "wall" if args.transport == "socket" else "simulated"
+        print(f"{word} training time: {coded['total']:.1f}s coded-T vs "
               f"{allw['total']:.1f}s wait-all "
               f"({allw['total'] / coded['total']:.2f}x speedup)")
 
@@ -119,15 +273,31 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump({"config": {"N": cfg.N, "K": cfg.K, "T": cfg.T,
+            json.dump(_json_finite({"config": {"N": cfg.N, "K": cfg.K, "T": cfg.T,
                                   "r": cfg.r, "c": cfg.c,
-                                  "latency": args.latency,
+                                  "transport": args.transport,
+                                  "latency": (args.latency
+                                              if args.transport == "inprocess"
+                                              else None),
                                   "iters": args.iters},
                        "wait_stats": stats,
                        "restarts": getattr(runner, "restarts", 0),
                        "acc_coded": float(acc),
-                       "acc_cleartext": float(acc_ref)}, f, indent=2)
-    return 0
+                       "acc_cleartext": float(acc_ref)}), f, indent=2)
+    return rc
+
+
+def _json_finite(obj):
+    """inf/nan -> null recursively: json.dump would emit bare ``Infinity``
+    tokens (rejected by strict RFC-8259 parsers), and unobserved wait-all
+    stats are legitimately inf on a first-T socket run."""
+    if isinstance(obj, dict):
+        return {k: _json_finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_finite(v) for v in obj]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    return obj
 
 
 if __name__ == "__main__":

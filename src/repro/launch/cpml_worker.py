@@ -1,0 +1,123 @@
+"""CodedPrivateML worker process: serve coded rounds over a socket.
+
+    python -m repro.launch.cpml_worker --host 127.0.0.1 --port 9000 --worker 3
+
+One process = one of the paper's N workers.  It connects to the master's
+SocketTransport, registers its endpoint ("worker/3"), and serves the
+message protocol (DESIGN.md §7):
+
+  1. PROVISION — an EncodeShare with ``round == PROVISION_ROUND`` carrying
+     {cfg kwargs, the worker's coded dataset share X̃_i, sigmoid-surrogate
+     coefficients c̄}.  The worker acks with a Heartbeat once loaded.
+  2. ROUNDS    — each EncodeShare(t, i, {"w_share", "batch"}) is acked with
+     an immediate Heartbeat (liveness), then answered with
+     WorkerResult(t, i, compute_s, payload=f(X̃_i, W̃_i)) — the (d, c) field
+     evaluation of the paper's Eq. 20 polynomial, exact int32 mod p, so the
+     master's decode is bit-identical to computing the round locally.
+  3. SHUTDOWN  — ``round == SHUTDOWN_ROUND`` (or the master hanging up)
+     ends the serve loop.
+
+Fault-injection flags make the failure paths deterministic for tests and
+benchmarks: ``--die-at-round R`` simulates a crash (exit without replying
+when round R's share arrives); ``--sleep-s S`` makes this worker a real
+straggler (sleeps S seconds before every reply).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+import time
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description="CodedPrivateML socket worker")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--worker", type=int, required=True,
+                    help="this worker's index i in [0, N)")
+    ap.add_argument("--connect-timeout", type=float, default=30.0)
+    ap.add_argument("--die-at-round", type=int, default=None,
+                    help="crash (exit silently) when this round's share "
+                         "arrives — deterministic kill-a-worker injection")
+    ap.add_argument("--sleep-s", type=float, default=0.0,
+                    help="sleep this long before every reply — a real "
+                         "injected straggler")
+    return ap
+
+
+def serve(args) -> int:
+    # imports deferred so --help/arg errors don't pay jax startup
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.cluster.messages import (
+        MASTER, PROVISION_ROUND, SHUTDOWN_ROUND, EncodeShare, Heartbeat,
+        WorkerResult, worker_endpoint)
+    from repro.cluster.socket_transport import SocketTransport
+    from repro.core.protocol import compute
+    from repro.core.protocol.config import CPMLConfig
+
+    me = worker_endpoint(args.worker)
+    tr = SocketTransport.connect(args.host, args.port, me,
+                                 timeout_s=args.connect_timeout)
+    f = None
+    x_share = None
+    try:
+        while not tr.peer_closed:
+            if tr.next_delivery(me) is None:
+                continue
+            for _, msg in tr.recv(me, math.inf):
+                if not isinstance(msg, EncodeShare):
+                    continue
+                if msg.round == SHUTDOWN_ROUND:
+                    return 0
+                if msg.round == PROVISION_ROUND:
+                    p = msg.payload
+                    # worker compute never needs the sharded backend or the
+                    # Pallas kernel: the jnp reference path is the exact
+                    # field-arithmetic spec (DESIGN.md §4), identical mod p.
+                    cfg = CPMLConfig(**p["cfg"])
+                    f = compute.worker_fn(cfg, jnp.asarray(p["cbar"],
+                                                           jnp.int32))
+                    x_share = jnp.asarray(p["x_share"], jnp.int32)
+                    tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
+                    continue
+                if args.die_at_round is not None \
+                        and msg.round >= args.die_at_round:
+                    return 0            # crash: no heartbeat, no result
+                tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
+                if f is None:
+                    raise RuntimeError(
+                        f"{me}: round {msg.round} share arrived before "
+                        f"provisioning")
+                t0 = time.monotonic()
+                if args.sleep_s > 0:
+                    time.sleep(args.sleep_s)
+                w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)
+                batch = msg.payload.get("batch")
+                xb = (x_share if batch is None
+                      else jnp.take(x_share, jnp.asarray(batch, jnp.int32),
+                                    axis=0))
+                result = np.asarray(f(xb, w_share), dtype=np.int32)
+                tr.send(MASTER,
+                        WorkerResult(msg.round, args.worker,
+                                     compute_s=time.monotonic() - t0,
+                                     payload=result))
+        return 0
+    finally:
+        tr.close()
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return serve(args)
+    except OSError as e:
+        print(f"cpml_worker {args.worker}: cannot reach master at "
+              f"{args.host}:{args.port}: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

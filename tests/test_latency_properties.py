@@ -1,0 +1,50 @@
+"""Latency-model order-independence property (DESIGN.md §7).
+
+The checkpoint-replay invariant the cluster runtime leans on: sampling
+``(round, worker)`` pairs in ANY permutation — with any interleaving
+history — yields identical values for all four models, because each draw
+derives a private RNG stream from ``(seed, round, worker)``.  DESIGN.md §7
+asserts this; tests/test_cluster.py pins one fixed forward/reverse pair for
+two models; this module pins the full property for all four, under
+arbitrary hypothesis-chosen permutations.  Skips cleanly when hypothesis is
+absent (DESIGN.md §8).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.cluster.latency import LATENCY_MODELS, make_latency  # noqa: E402
+
+pairs = st.lists(
+    st.tuples(st.integers(0, 40), st.integers(0, 7)),
+    min_size=1, max_size=40, unique=True,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(pairs=pairs, perm=st.randoms(use_true_random=False),
+       seed=st.integers(0, 2 ** 16))
+@pytest.mark.parametrize("name", LATENCY_MODELS)
+def test_sampling_is_order_independent(name, pairs, perm, seed):
+    a = make_latency(name, seed=seed)
+    b = make_latency(name, seed=seed)
+    forward = {pw: a.sample(*pw) for pw in pairs}
+    shuffled = list(pairs)
+    perm.shuffle(shuffled)
+    assert {pw: b.sample(*pw) for pw in shuffled} == forward
+    # and re-sampling the SAME instance again (replay after arbitrary
+    # history) still agrees — no hidden stream state
+    assert {pw: a.sample(*pw) for pw in shuffled} == forward
+
+
+@settings(max_examples=30, deadline=None)
+@given(pairs=pairs, seed=st.integers(0, 2 ** 16),
+       deaths=st.dictionaries(st.integers(0, 7), st.integers(0, 40),
+                              max_size=3))
+def test_dead_worker_wrapper_preserves_order_independence(pairs, seed, deaths):
+    a = make_latency("dead", seed=seed, deaths=deaths)
+    b = make_latency("dead", seed=seed, deaths=deaths)
+    forward = {pw: a.sample(*pw) for pw in pairs}
+    assert {pw: b.sample(*pw) for pw in reversed(pairs)} == forward

@@ -1,0 +1,97 @@
+"""Smoke coverage for the launch/ CLIs (previously untested).
+
+Fast cases call ``main(argv)`` in-process on tiny shapes: parser wiring,
+config plumbing, stats/JSON output.  Multi-process cases (the socket
+cluster CLI, which spawns N worker processes) are marked ``slow`` per
+DESIGN.md §8.  Deeper socket-runtime behavior (bit-identity, kill-a-worker)
+lives in tests/test_socket_cluster.py.
+"""
+import json
+import math
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import cpml_cluster, cpml_train, cpml_worker
+
+TINY = ["--m", "96", "--d", "12", "--iters", "3"]
+
+
+def test_cpml_train_smoke(tmp_path):
+    out = tmp_path / "train.json"
+    rc = cpml_train.main(TINY + ["--eval-every", "3",
+                                 "--json-out", str(out)])
+    assert rc == 0
+    blob = json.loads(out.read_text())
+    assert blob["config"]["N"] == 8
+    assert 0.0 <= blob["acc_coded"] <= 1.0
+    assert blob["history"] and blob["history"][-1]["iter"] == 3
+
+
+def test_cpml_train_multiclass_minibatch_smoke():
+    assert cpml_train.main(TINY + ["--classes", "3", "--batch-rows", "8",
+                                   "--eval-every", "0"]) == 0
+
+
+def test_cpml_cluster_inprocess_smoke(tmp_path):
+    out = tmp_path / "cluster.json"
+    rc = cpml_cluster.main(TINY + ["--latency", "lognormal",
+                                   "--json-out", str(out)])
+    assert rc == 0
+    blob = json.loads(out.read_text())
+    assert blob["config"]["transport"] == "inprocess"
+    assert blob["wait_stats"]["rounds"]["n"] == 3.0
+    assert math.isfinite(blob["wait_stats"]["coded_T"]["mean"])
+
+
+def test_cpml_cluster_dead_resilient_smoke():
+    # the README's recovery demo path: worker deaths below the decode
+    # threshold force a checkpoint restore + reprovision mid-run
+    rc = cpml_cluster.main(["--m", "96", "--d", "12", "--iters", "6",
+                            "--latency", "dead", "--resilient",
+                            "--checkpoint-every", "2"])
+    assert rc == 0
+
+
+def test_cpml_worker_parser_and_unreachable_master():
+    # parser contract
+    args = cpml_worker.build_parser().parse_args(
+        ["--port", "1", "--worker", "3", "--die-at-round", "5"])
+    assert args.worker == 3 and args.die_at_round == 5
+    with pytest.raises(SystemExit):        # --port/--worker are required
+        cpml_worker.build_parser().parse_args([])
+    # nothing listens on the port: a clean nonzero exit, not a hang
+    rc = cpml_worker.main(["--host", "127.0.0.1", "--port", "1",
+                           "--worker", "0", "--connect-timeout", "2"])
+    assert rc == 1
+
+
+@pytest.mark.slow
+def test_cpml_cluster_socket_cli_end_to_end(tmp_path):
+    """The full multi-process path through the CLI itself: spawn N real
+    workers, train over TCP, kill one mid-run, verify bit-identity."""
+    out = tmp_path / "socket.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cpml_cluster",
+         "--transport", "socket", "-N", "5", "-K", "1", "-T", "1",
+         "--m", "96", "--d", "12", "--iters", "4",
+         "--kill-worker", "4", "--kill-at-round", "2",
+         "--json-out", str(out)],
+        capture_output=True, text=True, timeout=600,
+        env=_env_with_src())
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "bit-identical to train_reference" in proc.stdout
+    assert "True" in proc.stdout
+    blob = json.loads(out.read_text())
+    assert blob["config"]["transport"] == "socket"
+    assert blob["wait_stats"]["rounds"]["n"] == 4.0
+
+
+def _env_with_src():
+    import os
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                       "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env

@@ -1,0 +1,144 @@
+"""Backend-shared Transport contract suite (DESIGN.md §7).
+
+One parameterized test class runs the SAME contract against both backends:
+``InProcessTransport`` on a simulated clock and ``SocketTransport`` over a
+real loopback TCP pair.  The contract is written in terms a wall clock can
+satisfy too — delivery ORDER by effective delay, FIFO tiebreak for
+simultaneous sends, ``math.inf`` = lost message, ``recv`` draining only
+messages due by ``now``, and ``next_delivery`` returning None on an empty
+queue — so the scheduler can be retargeted across backends without changing
+semantics.  Before this suite the contract was only pinned for the
+in-process backend (tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import pytest
+
+from repro.cluster.messages import MASTER
+from repro.cluster.socket_transport import SocketTransport
+from repro.cluster.transport import InProcessTransport
+
+# one "delay unit" per backend: abstract seconds for the simulation, real
+# (but short) seconds for loopback TCP
+SIM_UNIT = 1.0
+REAL_UNIT = 0.15
+WAIT_S = 10.0          # generous real-clock bound; sim never waits
+
+
+class Chan:
+    """A directed producer->consumer channel, the shape both backends share.
+
+    For the in-process backend producer and consumer are the same transport
+    object; for the socket backend the producer is a connected client and
+    the consumer the master endpoint — the pair IS the transport.
+    """
+
+    def __init__(self, backend: str):
+        self.backend = backend
+        if backend == "inprocess":
+            self.unit = SIM_UNIT
+            tr = InProcessTransport()
+            self.producer = self.consumer = tr
+            self.dst = MASTER
+            self._to_close = []
+        else:
+            self.unit = REAL_UNIT
+            master = SocketTransport.master(poll_interval_s=0.02)
+            client = SocketTransport.connect("127.0.0.1", master.port,
+                                             "worker/0",
+                                             poll_interval_s=0.02)
+            master.wait_for_endpoints(["worker/0"], timeout_s=WAIT_S)
+            self.producer, self.consumer = client, master
+            self.dst = MASTER
+            self._to_close = [client, master]
+
+    @property
+    def real(self) -> bool:
+        return self.consumer.real
+
+    def now(self) -> float:
+        return time.monotonic() if self.real else 0.0
+
+    def send(self, msg, delay: float = 0.0):
+        self.producer.send(self.dst, msg, at=self.now(), delay=delay)
+
+    def next_delivery(self, wait: bool = True) -> float | None:
+        """The contract call, plus the real-clock polling the scheduler does:
+        on a wall clock None means "nothing YET", so callers poll."""
+        nxt = self.consumer.next_delivery(self.dst)
+        if nxt is None and self.real and wait:
+            deadline = time.monotonic() + WAIT_S
+            while nxt is None and time.monotonic() < deadline:
+                nxt = self.consumer.next_delivery(self.dst)
+        return nxt
+
+    def recv(self, now: float):
+        return [m for _, m in self.consumer.recv(self.dst, now)]
+
+    def close(self):
+        for tr in self._to_close:
+            tr.close()
+
+
+@pytest.fixture(params=["inprocess", "socket"])
+def chan(request):
+    c = Chan(request.param)
+    yield c
+    c.close()
+
+
+class TestTransportContract:
+    def test_orders_by_delivery_time(self, chan):
+        chan.send("slow", delay=3 * chan.unit)
+        chan.send("fast", delay=1 * chan.unit)
+        t_fast = chan.next_delivery()
+        assert t_fast is not None
+        assert chan.recv(now=t_fast) == ["fast"]
+        t_slow = chan.next_delivery()
+        assert t_slow is not None and t_slow >= t_fast
+        assert chan.recv(now=t_slow) == ["slow"]
+
+    def test_fifo_tiebreak_at_equal_times(self, chan):
+        for i in range(6):
+            chan.send(i, delay=0.0)
+        got = []
+        deadline = time.monotonic() + WAIT_S
+        while len(got) < 6:
+            nxt = chan.next_delivery()
+            assert nxt is not None, f"only {got} arrived"
+            got += chan.recv(now=nxt)
+            assert time.monotonic() < deadline
+        # equal send instant (sim: identical deliver_at; socket: one stream)
+        # must preserve send order
+        assert got == [0, 1, 2, 3, 4, 5]
+
+    def test_inf_delay_is_lost(self, chan):
+        chan.send("never", delay=math.inf)
+        chan.send("real", delay=1 * chan.unit)
+        nxt = chan.next_delivery()
+        assert chan.recv(now=nxt) == ["real"]
+        # the lost message must never surface, even after its "delay" would
+        # have elapsed many times over
+        assert chan.next_delivery(wait=False) is None
+        assert chan.recv(now=math.inf) == []
+
+    def test_recv_drains_due_only(self, chan):
+        chan.send("m", delay=0.0)
+        stamp = chan.next_delivery()
+        assert stamp is not None
+        # not due strictly before its delivery stamp...
+        assert chan.recv(now=stamp - 1e-4) == []
+        # ...due exactly at it (and the queue then reports empty)
+        assert chan.recv(now=stamp) == ["m"]
+        assert chan.next_delivery(wait=False) is None
+
+    def test_next_delivery_empty_queue_is_none(self, chan):
+        assert chan.next_delivery(wait=False) is None
+        chan.send("x", delay=0.0)
+        nxt = chan.next_delivery()
+        assert nxt is not None
+        chan.recv(now=nxt)
+        assert chan.next_delivery(wait=False) is None

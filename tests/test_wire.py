@@ -1,0 +1,165 @@
+"""Wire-format round trips + malformed-input rejection (cluster/wire.py).
+
+Every message type the socket transport carries must survive
+serialize->deserialize bit-for-bit: field arrays in [0, p) for BOTH primes,
+multi-head (d, c) payloads, empty/None payloads, and exact python-int
+matrices (the host Lagrange solves produce arbitrary-precision ints that a
+64-bit truncation would silently corrupt).  Malformed or truncated frames
+must raise WireError immediately — a corrupt peer may never hang the
+master.  Property-based coverage lives in tests/test_wire_properties.py.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import wire
+from repro.cluster.messages import EncodeShare, Heartbeat, WorkerResult
+from repro.core import field
+
+
+def roundtrip(msg):
+    out = wire.deserialize(wire.serialize(msg))
+    assert wire.messages_equal(out, msg), f"{out!r} != {msg!r}"
+    return out
+
+
+@pytest.mark.parametrize("p", [field.P, field.P30])
+def test_worker_result_field_array_roundtrip(p):
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, p, size=(33, 1), dtype=np.int64).astype(np.int32)
+    out = roundtrip(WorkerResult(7, 3, 0.125, payload))
+    assert out.payload.dtype == np.int32
+    assert (out.payload == payload).all()
+    assert (0 <= out.payload).all() and (out.payload < p).all()
+
+
+def test_multi_head_payload_roundtrip():
+    rng = np.random.default_rng(1)
+    payload = rng.integers(0, field.P, size=(17, 5)).astype(np.int32)
+    out = roundtrip(WorkerResult(0, 0, 1.0, payload))
+    assert out.payload.shape == (17, 5)
+
+
+def test_encode_share_share_plus_batch_roundtrip():
+    rng = np.random.default_rng(2)
+    msg = EncodeShare(4, 2, {
+        "w_share": rng.integers(0, field.P, size=(8, 3, 2)).astype(np.int32),
+        "batch": np.arange(16, dtype=np.int32),
+    })
+    roundtrip(msg)
+
+
+def test_none_and_empty_payloads_roundtrip():
+    roundtrip(EncodeShare(0, 0, None))
+    roundtrip(WorkerResult(0, 0, 0.0, None))
+    out = roundtrip(WorkerResult(0, 0, 0.0, np.zeros((0, 4), np.int32)))
+    assert out.payload.shape == (0, 4)
+    roundtrip(EncodeShare(0, 0, {}))
+    roundtrip(EncodeShare(0, 0, []))
+
+
+def test_heartbeat_and_hello_roundtrip():
+    roundtrip(Heartbeat(5, 123.456))
+    roundtrip(wire.Hello("worker/5"))
+
+
+def test_exact_python_int_matrix_roundtrip():
+    # decode-matrix entries from the exact host solve exceed 64 bits before
+    # reduction; the wire must carry them at full precision
+    big = field.P ** 5
+    mat = np.array([[big, -big - 1], [0, 1]], dtype=object)
+    out = roundtrip(WorkerResult(0, 0, 0.0, mat))
+    assert out.payload.dtype == object
+    assert out.payload[0, 0] == big and out.payload[0, 1] == -big - 1
+    assert isinstance(out.payload[0, 0], int)
+
+
+def test_nested_value_tree_roundtrip():
+    roundtrip(EncodeShare(1, 1, {
+        "nested": [1, -2, 2.5, float("inf"), True, False, None, "s", b"b",
+                   (1.5, 7)],
+        "arr": np.linspace(0, 1, 7, dtype=np.float64),
+    }))
+
+
+def test_numpy_scalars_canonicalize_to_python():
+    # scalar TYPES are not part of the wire vocabulary, their values are
+    assert wire.deserialize(wire.serialize(np.int64(7))) == 7
+    assert isinstance(wire.deserialize(wire.serialize(np.int64(7))), int)
+    assert wire.deserialize(wire.serialize(np.float32(1.5))) == 1.5
+    assert isinstance(wire.deserialize(wire.serialize(np.float32(1.5))), float)
+
+
+def test_raw_values_roundtrip():
+    # the transport contract tests ship plain values, not protocol messages
+    for v in ["hello", 42, 3.5, None, [1, "two"], {"k": b"v"}]:
+        assert wire.values_equal(wire.deserialize(wire.serialize(v)), v)
+
+
+# ---------------------------------------------------------------------------
+# Malformed input: clear errors, never hangs, never garbage
+# ---------------------------------------------------------------------------
+
+def _frame():
+    return wire.serialize(WorkerResult(1, 2, 0.5,
+                                       np.arange(12, dtype=np.int32)))
+
+
+def test_truncated_frame_rejected():
+    data = _frame()
+    for cut in (1, 3, len(data) // 2, len(data) - 1):
+        with pytest.raises(wire.WireError):
+            wire.deserialize(data[:cut])
+
+
+def test_trailing_garbage_rejected():
+    with pytest.raises(wire.WireError):
+        wire.deserialize(_frame() + b"\x00")
+
+
+def test_corrupt_tag_rejected():
+    data = bytearray(_frame())
+    data[4] = 0xEE                          # unknown frame tag
+    with pytest.raises(wire.WireError, match="frame tag"):
+        wire.deserialize(bytes(data))
+
+
+def test_absurd_length_prefix_rejected():
+    with pytest.raises(wire.WireError, match="MAX_FRAME_BYTES"):
+        wire.deserialize(b"\xff\xff\xff\xff" + b"x")
+    r = wire.FrameReader()
+    with pytest.raises(wire.WireError, match="MAX_FRAME_BYTES"):
+        r.feed(b"\xff\xff\xff\xff")
+
+
+def test_corrupt_ndarray_dtype_rejected():
+    # corrupt the dtype string inside an ndarray value: still WireError,
+    # never a raw numpy TypeError/UnicodeDecodeError
+    frame = bytearray(wire.serialize(np.arange(4, dtype=np.int32)))
+    i = bytes(frame).index(b"<i4")
+    for bad in (b"zz9", b"\xff\xfe\xfd"):
+        frame[i: i + 3] = bad
+        with pytest.raises(wire.WireError, match="ndarray"):
+            wire.deserialize(bytes(frame))
+
+
+def test_unencodable_values_rejected():
+    with pytest.raises(wire.WireError):
+        wire.serialize({"bad": object()})
+    with pytest.raises(wire.WireError, match="keys must be str"):
+        wire.serialize({1: "x"})
+    with pytest.raises(wire.WireError, match="only hold ints"):
+        wire.serialize(np.array([object()], dtype=object))
+
+
+def test_frame_reader_reassembles_partial_feeds():
+    msgs = [EncodeShare(t, t % 3, {"w_share":
+                                   np.full((4, 1, 1), t, np.int32)})
+            for t in range(5)]
+    stream = b"".join(wire.serialize(m) for m in msgs)
+    reader = wire.FrameReader()
+    got = []
+    for i in range(0, len(stream), 7):      # drip-feed 7 bytes at a time
+        got += reader.feed(stream[i: i + 7])
+    assert len(got) == 5
+    for a, b in zip(got, msgs):
+        assert wire.messages_equal(a, b)

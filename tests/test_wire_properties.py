@@ -1,0 +1,86 @@
+"""Property-based wire-format law: deserialize(serialize(m)) == m.
+
+Follows the repo's optional-hypothesis pattern (DESIGN.md §8): this module
+skips cleanly when hypothesis is absent; the deterministic round-trip cases
+in tests/test_wire.py always run.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.cluster import wire  # noqa: E402
+from repro.cluster.messages import (  # noqa: E402
+    EncodeShare,
+    Heartbeat,
+    WorkerResult,
+)
+from repro.core import field  # noqa: E402
+
+
+def field_arrays(p):
+    return st.tuples(st.integers(0, 6), st.integers(0, 4)).flatmap(
+        lambda dims: st.lists(
+            st.integers(0, p - 1),
+            min_size=dims[0] * dims[1], max_size=dims[0] * dims[1],
+        ).map(lambda v: np.array(v, dtype=np.int64)
+              .astype(np.int32).reshape(dims)))
+
+
+scalars = st.one_of(
+    st.none(),
+    st.booleans(),
+    st.integers(-(10 ** 30), 10 ** 30),
+    st.floats(allow_nan=True),          # NaN: values_equal is reflexive
+    st.text(max_size=12),
+    st.binary(max_size=12),
+)
+
+values = st.recursive(
+    st.one_of(scalars, field_arrays(field.P), field_arrays(field.P30)),
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.lists(children, max_size=4).map(tuple),
+        st.dictionaries(st.text(max_size=6), children, max_size=4),
+    ),
+    max_leaves=8,
+)
+
+messages = st.one_of(
+    st.builds(EncodeShare, round=st.integers(-2, 10 ** 6),
+              worker=st.integers(0, 10 ** 4), payload=values),
+    st.builds(WorkerResult, round=st.integers(-2, 10 ** 6),
+              worker=st.integers(0, 10 ** 4),
+              compute_s=st.floats(allow_nan=False), payload=values),
+    st.builds(Heartbeat, worker=st.integers(0, 10 ** 4),
+              sent_at=st.floats(allow_nan=False)),
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(messages)
+def test_serialize_roundtrip_identity(msg):
+    assert wire.messages_equal(wire.deserialize(wire.serialize(msg)), msg)
+
+
+@settings(max_examples=100, deadline=None)
+@given(messages, st.integers(1, 64))
+def test_frame_reader_any_chunking(msg, chunk):
+    stream = wire.serialize(msg) * 2        # two frames back to back
+    reader = wire.FrameReader()
+    got = []
+    for i in range(0, len(stream), chunk):
+        got += reader.feed(stream[i: i + chunk])
+    assert len(got) == 2
+    assert all(wire.messages_equal(g, msg) for g in got)
+
+
+@settings(max_examples=100, deadline=None)
+@given(messages, st.data())
+def test_truncation_always_raises(msg, data):
+    frame = wire.serialize(msg)
+    cut = data.draw(st.integers(0, len(frame) - 1))
+    with pytest.raises(wire.WireError):
+        wire.deserialize(frame[:cut])
