@@ -9,6 +9,14 @@ reconstruction), each gated on the SLOWEST worker.  All three policies are
 driven by the same seeded latency models (repro.cluster.latency), so the
 comparison isolates protocol structure from noise.
 
+``speedup_vs_mpc`` is MEASURED: the BGW baseline actually runs through the
+cluster runtime (cluster/mpc_runner.py — multi-phase rounds, reshare
+barriers, reconstruction at the first 2T+1 arrivals, bit-identity to the
+single-host oracle enforced by tests) under the same latency models.  The
+pre-PR-4 analytic counterfactual (r+1 closed-form max-over-workers terms)
+is preserved under each model's ``modeled`` key so the bench trajectory is
+not silently redefined.
+
 Also times the on-device compute of one coded round vs one MPC step (same
 data, same quantization) for the device-side of the story.
 
@@ -28,7 +36,13 @@ import numpy as np
 
 from common import emit, time_fn
 
-from repro.cluster import ClusterRunner, make_latency, wait_summary
+from repro.cluster import (
+    ClusterRunner,
+    MPCClusterRunner,
+    make_latency,
+    mpc_phase_models,
+    wait_summary,
+)
 from repro.core import mpc_baseline, protocol
 from repro.data import synthetic
 
@@ -38,18 +52,15 @@ MODELS = ("deterministic", "lognormal", "bursty")
 
 def simulate_mpc_waits(name: str, seed: int, iters: int, r: int
                        ) -> np.ndarray:
-    """Per-iteration wait of the BGW path under the same latency profile.
+    """The RETAINED analytic BGW wait model (reported under ``modeled``).
 
     r + 1 sequential all-to-all rounds per iteration, each gated on the
-    slowest of ALL N workers (no erasure decoding in BGW: a straggler
-    stalls everyone).  Noise is PAIRED with the coded run: comm round 0 of
-    iteration t reuses the exact (t, worker) draws the coded round saw
-    (same model, same seed), and each extra comm round uses its own
-    disjointly-seeded stream sampled at the SAME round index t — so burst
-    durations keep their per-iteration semantics and speedup_vs_mpc
-    measures protocol structure, not unpaired noise."""
-    comm = [make_latency(name, seed=seed if j == 0 else seed + 7919 * j)
-            for j in range(r + 1)]
+    slowest of ALL N workers.  Noise pairing is BY CONSTRUCTION identical
+    to the measured run: the phase models come from the same
+    mpc_phase_models factory.  The measured number differs structurally in
+    one place: the analytic final term is max-over-all-N, while the real
+    master reconstructs at the (2T+1)-th arrival of the final shares."""
+    comm = mpc_phase_models(name, seed=seed, r=r)
     waits = np.empty(iters)
     for t in range(iters):
         waits[t] = sum(max(model.sample(t, w) for w in range(N_WORKERS))
@@ -57,25 +68,40 @@ def simulate_mpc_waits(name: str, seed: int, iters: int, r: int
     return waits
 
 
-def bench_model(name: str, cfg, x, y, iters: int, seed: int) -> dict:
+def bench_model(name: str, cfg, mpc_cfg, x, y, iters: int, seed: int
+                ) -> dict:
     runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
                            make_latency(name, seed=seed))
     runner.run(iters)
     stats = runner.wait_stats()              # inf-filters dead rounds
-    mpc = simulate_mpc_waits(name, seed, iters, cfg.r)
+    # MEASURED: the BGW protocol itself through the same runtime + models
+    bgw = MPCClusterRunner(mpc_cfg, jax.random.PRNGKey(7), x, y,
+                           mpc_phase_models(name, seed=seed, r=mpc_cfg.r))
+    bgw.run(iters)
+    measured = np.array([tr.mpc_wait_s
+                         for tr in sorted(bgw.traces.values(),
+                                          key=lambda t: t.round)])
+    modeled = simulate_mpc_waits(name, seed, iters, mpc_cfg.r)
+    coded_mean = stats["coded_T"]["mean"]
     entry = {
         "coded_T": stats["coded_T"],
         "wait_all": stats["wait_all"],
         "rounds": stats["rounds"],
-        "mpc": wait_summary(mpc),
+        "mpc": wait_summary(measured),
         "speedup_vs_wait_all": float(stats["wait_all"]["mean"]
-                                     / stats["coded_T"]["mean"]),
-        "speedup_vs_mpc": float(mpc.mean() / stats["coded_T"]["mean"]),
+                                     / coded_mean),
+        "speedup_vs_mpc": float(measured.mean() / coded_mean),
+        "modeled": {
+            "mpc": wait_summary(modeled),
+            "speedup_vs_mpc": float(modeled.mean() / coded_mean),
+        },
     }
-    emit(f"cluster_round/{name}/coded_T", stats["coded_T"]["mean"] * 1e6,
+    emit(f"cluster_round/{name}/coded_T", coded_mean * 1e6,
          f"vs wait_all {stats['wait_all']['mean']:.3f}s "
          f"({entry['speedup_vs_wait_all']:.2f}x), "
-         f"vs mpc {mpc.mean():.3f}s ({entry['speedup_vs_mpc']:.2f}x)")
+         f"vs mpc {measured.mean():.3f}s measured "
+         f"({entry['speedup_vs_mpc']:.2f}x; modeled "
+         f"{entry['modeled']['speedup_vs_mpc']:.2f}x)")
     return entry
 
 
@@ -113,7 +139,7 @@ def main(argv=None) -> int:
     mpc_cfg = mpc_baseline.MPCConfig(N=N_WORKERS, T=1, r=1)
     x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=m, d=d)
 
-    models = {name: bench_model(name, cfg, x, y, iters, args.seed)
+    models = {name: bench_model(name, cfg, mpc_cfg, x, y, iters, args.seed)
               for name in MODELS}
     report = {
         "device": jax.default_backend(),
@@ -124,12 +150,16 @@ def main(argv=None) -> int:
         "models": models,
         "compute_us": bench_compute(cfg, mpc_cfg, x, y),
         # the paper's Fig. 5 effect: under heavy-tailed latency the
-        # first-T policy must beat waiting for everyone, strictly.
+        # first-T policy must beat waiting for everyone, strictly — and
+        # the MEASURED BGW baseline must be strictly slower still.
         "acceptance": {
-            f"{name}_T_below_all":
-                bool(models[name]["coded_T"]["mean"]
-                     < models[name]["wait_all"]["mean"])
-            for name in ("lognormal", "bursty")
+            **{f"{name}_T_below_all":
+               bool(models[name]["coded_T"]["mean"]
+                    < models[name]["wait_all"]["mean"])
+               for name in ("lognormal", "bursty")},
+            **{f"{name}_measured_mpc_speedup_gt_1":
+               bool(models[name]["speedup_vs_mpc"] > 1.0)
+               for name in ("lognormal", "bursty")},
         },
     }
     out = os.path.abspath(args.out)

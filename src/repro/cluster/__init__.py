@@ -29,6 +29,12 @@ Modules:
                        real worker processes (launch/cpml_worker.py) whose
                        serialized results feed engine.update_fn —
                        integrates runtime/resilience
+  mpc_runner.py        MPCClusterRunner: the BGW MPC baseline as a real
+                       distributed protocol over the SAME runtime — r+1
+                       all-to-all reshare barriers per iteration (SubShare
+                       peer traffic), reconstruction at the first 2T+1
+                       CombineResults, bit-identical to the
+                       core/mpc_baseline single-host oracle
 
 Numerics stay in core/protocol: the runner feeds its observed responder
 order into the exact round/update functions train()/train_reference() use,
@@ -48,16 +54,20 @@ from repro.cluster.messages import (
     MASTER,
     PROVISION_ROUND,
     SHUTDOWN_ROUND,
+    CombineResult,
     EncodeShare,
     Heartbeat,
+    SubShare,
     WorkerResult,
     worker_endpoint,
 )
+from repro.cluster.mpc_runner import MPCClusterRunner, mpc_phase_models
 from repro.cluster.runner import ClusterRunner, RoundRecord, wait_summary
 from repro.cluster.scheduler import (
     Clock,
     ClusterDecodeError,
     EventScheduler,
+    MPCRoundTrace,
     RoundTrace,
     SimClock,
     WallClock,
@@ -73,6 +83,7 @@ __all__ = [
     "Clock",
     "ClusterDecodeError",
     "ClusterRunner",
+    "CombineResult",
     "DeadWorkerLatency",
     "DeterministicLatency",
     "EncodeShare",
@@ -81,14 +92,18 @@ __all__ = [
     "InProcessTransport",
     "LatencyModel",
     "LognormalTailLatency",
+    "MPCClusterRunner",
+    "MPCRoundTrace",
     "RoundRecord",
     "RoundTrace",
     "SimClock",
     "SocketTransport",
+    "SubShare",
     "Transport",
     "WallClock",
     "WorkerResult",
     "make_latency",
+    "mpc_phase_models",
     "wait_summary",
     "worker_endpoint",
 ]

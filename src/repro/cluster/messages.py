@@ -1,12 +1,19 @@
-"""Typed master<->worker messages + endpoint naming (DESIGN.md §7).
+"""Typed master<->worker(<->worker) messages + endpoint naming (DESIGN.md §7).
 
-Every in-flight unit of the cluster protocol is one of three frozen
+Every in-flight unit of the cluster protocol is one of these frozen
 dataclasses.  Payloads are deliberately ``Any``: the in-process simulation
 carries lightweight references (the numeric work stays on-device in
 core/protocol — see runner.py), while the multi-process socket transport
 carries serialized arrays (wire.py) through the SAME message types —
 EncodeShare ships the round's weight share W̃_i, WorkerResult ships the
 worker's (d, c) field evaluation.
+
+The MPC baseline (cluster/mpc_runner.py) adds worker<->worker traffic:
+SubShare is one worker's degree-T re-share of its product share addressed
+to one peer (the all-to-all round of BGW degree reduction), CombineResult
+is the worker's post-barrier final share back to the master.  Keeping them
+distinct from WorkerResult means the coded collect loop can never mistake
+MPC traffic for CPML results.
 """
 from __future__ import annotations
 
@@ -42,6 +49,33 @@ class WorkerResult:
     worker: int
     compute_s: float             # simulated compute+network time this round
     payload: Any = None          # result ref / serialized (d, c) field array
+
+
+@dataclasses.dataclass(frozen=True)
+class SubShare:
+    """Worker src -> worker dst: one degree-T re-share of src's degree-2T
+    product share, for BGW degree reduction ``phase`` of round ``round``.
+
+    The all-to-all exchange of these is the wait-for-all barrier MPC pays
+    per multiplication: every recipient needs ALL N sub-shares before it can
+    Lagrange-combine, so one straggler stalls everyone (DESIGN.md §7).
+    """
+    round: int
+    phase: int                   # which degree reduction of this round
+    src: int
+    dst: int
+    payload: Any = None          # sub-share ref / serialized field array
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineResult:
+    """Worker -> master: the worker's final degree-2T gradient share, sent
+    after the last reshare barrier of round ``round`` (the master
+    reconstructs from the first 2T+1 of these)."""
+    round: int
+    worker: int
+    compute_s: float             # worker-side compute time this round
+    payload: Any = None          # result ref / serialized (d,) field array
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,236 @@
+"""MPCClusterRunner: the BGW baseline run as a REAL distributed protocol.
+
+The measured half of the paper's headline comparison (§5, Figs. 5-7):
+PRs 2-3 made CodedPrivateML training run through the cluster runtime;
+before this module the MPC side of `speedup_vs_mpc` was a *modeled*
+counterfactual (an analytic max-over-workers per communication round).
+Here the BGW protocol itself crosses the same Transport/EventScheduler
+stack — same clocks, same latency models, same wire — so the speedup is a
+measurement of protocol structure, not a formula.
+
+Division of labor mirrors runner.ClusterRunner exactly:
+
+  * the scheduler moves messages and time (`EventScheduler.run_mpc_round`:
+    dispatch -> reshare barrier(s) -> collect the first 2T+1 final shares);
+  * ALL numerics run through the per-phase hooks of core/mpc_baseline —
+    the exact functions `_step_jit` composes — with reconstruction taken
+    at the OBSERVED first-2T+1 arrival subset (`reconstruct_at`: any 2T+1
+    correct shares of a degree-2T sharing interpolate to the same field
+    element, exactly).  Consequence: an MPC cluster run — simulated or
+    over sockets — is BIT-IDENTICAL to ``mpc_baseline.train`` with the
+    same key (tests/test_mpc_cluster.py), stragglers included.
+
+What the runtime CANNOT give BGW is erasure tolerance: every degree
+reduction needs sub-shares from ALL N workers before anyone can combine,
+so each of the r reshare phases is gated on the slowest worker (the
+wait-for-all the paper contrasts with first-T decoding), and a dead
+worker starves the round outright — there is no MPC analogue of riding
+through a crash.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.latency import LatencyModel, make_latency
+from repro.cluster.messages import (
+    PROVISION_ROUND,
+    SHUTDOWN_ROUND,
+    EncodeShare,
+    worker_endpoint,
+)
+from repro.cluster.runner import await_worker_acks, wait_summary
+from repro.cluster.scheduler import (
+    ClusterDecodeError,
+    EventScheduler,
+    MPCRoundTrace,
+)
+from repro.cluster.transport import Transport
+from repro.core import field
+from repro.core import mpc_baseline as mpc
+from repro.runtime.resilience import HeartbeatMonitor
+
+
+def mpc_phase_models(name: str, seed: int = 0, r: int = 1
+                     ) -> list[LatencyModel]:
+    """One latency model per BGW phase: r reshare rounds + the final send.
+
+    Phase 0 reuses the coded run's exact (seed, round, worker) stream and
+    each extra phase gets a disjointly-seeded stream sampled at the same
+    round index — the same pairing bench_cluster's analytic model has
+    always used, so measured and modeled MPC numbers share noise semantics.
+    """
+    return [make_latency(name, seed=seed if j == 0 else seed + 7919 * j)
+            for j in range(r + 1)]
+
+
+class MPCClusterRunner:
+    """Drives ``iters`` BGW iterations through the event scheduler.
+
+    Two transports, one round loop (DESIGN.md §7):
+
+      * ``phase_latency`` given (list of r+1 models) — in-process
+        simulation: the scheduler enacts the workers through every reshare
+        barrier; the runner computes all worker phases on the master via
+        the vectorized oracle hooks and reconstructs from the observed
+        first-2T+1 arrival order.
+      * ``phase_latency=None`` + a real transport — N worker processes
+        (launch/cpml_worker.py, MPC serve mode) run the phases themselves,
+        resharing through the master's relay; the runner encodes + ships
+        w-shares and reshare keys, and reconstructs from the first 2T+1
+        CombineResult payloads received.  ``provision()`` must run once
+        before rounds.
+    """
+
+    def __init__(self, cfg: mpc.MPCConfig, key, x, y,
+                 phase_latency: list[LatencyModel] | None = None, *,
+                 eta: float | None = None,
+                 transport: Transport | None = None,
+                 round_timeout_s: float = math.inf,
+                 heartbeat_timeout_s: float = math.inf,
+                 master_overhead_s: float = 0.0):
+        from repro.core import protocol as cpml
+        self.cfg = cfg
+        self.collect_threshold = 2 * cfg.T + 1
+        ksetup, self.kloop = jax.random.split(key)
+        self.state = mpc.setup(cfg, ksetup, x, y)
+        self.eta = (cpml.lipschitz_eta(self.state.xq_real)
+                    if eta is None else eta)
+        self.phase_latency = phase_latency
+        self.scheduler = EventScheduler(
+            cfg.N,
+            None if phase_latency is None else phase_latency[0],
+            transport, master_overhead_s=master_overhead_s)
+        self.round_timeout_s = round_timeout_s
+        if self.distributed and math.isinf(round_timeout_s):
+            self.round_timeout_s = 300.0   # real silence must be detectable
+        self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
+                                        now=self.scheduler.clock)
+        self.w = self.state.w
+        self.traces: dict[int, MPCRoundTrace] = {}
+        self._encode = jax.jit(
+            lambda k, w: mpc.encode_step(cfg, k, w)[0])
+        self._g_shares = jax.jit(
+            lambda k, w: _all_g_shares(cfg, k, w, self.state.x_shares))
+        self._finish = jax.jit(
+            lambda w, dec: mpc.finish_update(
+                cfg, w, dec, self.state.xty,
+                jnp.float32(self.eta / self.state.m)))
+
+    @property
+    def distributed(self) -> bool:
+        return self.phase_latency is None
+
+    # ------------------------------------------------------------------
+    # Distributed-mode lifecycle
+    # ------------------------------------------------------------------
+
+    def provision(self, timeout_s: float = 60.0) -> None:
+        """Ship each worker its FULL-dataset Shamir share + static context
+        (the encode-everything-everywhere cost the paper charges BGW)."""
+        assert self.distributed, "provision() is for real transports only"
+        tr = self.scheduler.transport
+        x_shares = np.asarray(self.state.x_shares)
+        cfg_kw = {"N": self.cfg.N, "T": self.cfg.T, "r": self.cfg.r,
+                  "lx": self.cfg.lx, "lw": self.cfg.lw, "lc": self.cfg.lc,
+                  "p": self.cfg.p}
+        now = self.scheduler.clock
+        for w in range(self.cfg.N):
+            tr.send(worker_endpoint(w),
+                    EncodeShare(PROVISION_ROUND, w,
+                                {"protocol": "mpc", "cfg": cfg_kw,
+                                 "x_share": x_shares[w],
+                                 "cbar": mpc.poly_coeffs(self.cfg)}),
+                    at=now)
+        await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
+                          self.monitor, timeout_s)
+
+    def shutdown_workers(self) -> None:
+        assert self.distributed
+        now = self.scheduler.clock
+        for w in range(self.cfg.N):
+            self.scheduler.transport.send(
+                worker_endpoint(w), EncodeShare(SHUTDOWN_ROUND, w), at=now)
+
+    # ------------------------------------------------------------------
+    # One iteration
+    # ------------------------------------------------------------------
+
+    def step_round(self, t: int) -> MPCRoundTrace:
+        cfg = self.cfg
+        key_t = mpc.iteration_key(self.kloop, t)
+        payloads = None
+        if self.distributed:
+            # encode this iteration's weight shares + reshare keys and ship
+            # one slice to each worker; field elements are exact int32 and
+            # PRNG keys replay exactly, so the phases a worker process runs
+            # are bit-identical to the oracle's vmap lanes.
+            _, _, kred = mpc.step_keys(cfg, key_t)
+            w_shares = np.asarray(self._encode(key_t, self.w))  # (N, d, r)
+            kred_np = np.stack([np.asarray(k) for k in kred])
+            payloads = {w: {"w_share": w_shares[w], "kred": kred_np}
+                        for w in range(cfg.N)}
+        trace = self.scheduler.run_mpc_round(
+            t, self.collect_threshold, phase_models=self.phase_latency,
+            monitor=self.monitor, timeout_s=self.round_timeout_s,
+            payloads=payloads)
+        if not math.isfinite(trace.t_done):
+            raise ClusterDecodeError(
+                f"MPC round {t}: {len(trace.responders)} final shares < "
+                f"2T+1 = {self.collect_threshold} within "
+                f"{self.round_timeout_s}s — BGW cannot ride through a "
+                f"dead or stalled worker")
+        order = np.asarray(trace.responders[: self.collect_threshold])
+        if self.distributed:
+            g = jnp.asarray(np.stack(
+                [np.asarray(trace.payloads[int(w)], dtype=np.int32)
+                 for w in order]))
+        else:
+            g = jnp.take(self._g_shares(key_t, self.w),
+                         jnp.asarray(order, jnp.int32), axis=0)
+        decoded = mpc.reconstruct_at(cfg, g, order)
+        self.w = self._finish(self.w, decoded)
+        self.traces[t] = trace
+        return trace
+
+    def run(self, iters: int):
+        """No resilient variant: a starved round is terminal for BGW."""
+        self.w = self.state.w
+        self.traces.clear()
+        for t in range(iters):
+            self.step_round(t)
+        return self.w
+
+    # ------------------------------------------------------------------
+    # Stats (same aggregation keys as runner.wait_stats)
+    # ------------------------------------------------------------------
+
+    def wait_stats(self) -> dict[str, dict[str, float]]:
+        trs = sorted(self.traces.values(), key=lambda r: r.round)
+        waits = np.array([r.mpc_wait_s for r in trs])
+        allw = np.array([r.all_wait_s for r in trs])
+        return {"mpc": wait_summary(waits),
+                "mpc_all": wait_summary(allw[np.isfinite(allw)]),
+                "rounds": {"n": float(len(trs))}}
+
+
+def _all_g_shares(cfg: mpc.MPCConfig, key, w, x_shares):
+    """All N workers' final degree-2T gradient shares for one iteration —
+    the oracle's `_step_jit` body up to (but excluding) reconstruction,
+    composed from the identical hooks."""
+    cbar = jnp.asarray(mpc.poly_coeffs(cfg), jnp.int32)
+    w_shares, kred = mpc.encode_step(cfg, key, w)
+    z = jax.vmap(lambda xs, ws: mpc.worker_mul(cfg, xs, ws))(
+        x_shares, w_shares)
+    z = mpc.degree_reduce(cfg, kred[0], z)
+    prod = z[..., 0]
+    s = mpc.s_init(cfg, cbar, prod)
+    for i in range(2, cfg.r + 1):
+        prod = field.mulmod(prod, z[..., i - 1], cfg.p)
+        prod = mpc.degree_reduce(cfg, kred[i - 1], prod)
+        s = mpc.s_accum(cfg, cbar[i], s, prod)
+    return jax.vmap(lambda xs, ss: mpc.worker_final(cfg, xs, ss))(
+        x_shares, s)

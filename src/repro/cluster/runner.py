@@ -66,6 +66,28 @@ def wait_summary(a) -> dict[str, float]:
             "p95": float(np.percentile(a, 95)), "total": float(a.sum())}
 
 
+def await_worker_acks(transport: Transport, clock_fn, n_workers: int,
+                      monitor, timeout_s: float) -> None:
+    """Block until every worker process has acked provisioning with a
+    Heartbeat (shared by ClusterRunner and MPCClusterRunner, so both
+    protocols start their wall clocks after worker warmup)."""
+    deadline = clock_fn() + timeout_s
+    acked: set[int] = set()
+    while len(acked) < n_workers:
+        nxt = transport.next_delivery(MASTER)
+        if nxt is None:
+            if clock_fn() >= deadline:
+                raise TimeoutError(
+                    f"workers never acked provisioning: "
+                    f"{sorted(set(range(n_workers)) - acked)}")
+            continue
+        for at, msg in transport.recv(MASTER, nxt):
+            if isinstance(msg, Heartbeat):
+                if monitor is not None:
+                    monitor.heartbeat(msg.worker, now=at)
+                acked.add(msg.worker)
+
+
 @dataclasses.dataclass
 class RoundRecord:
     """Per-round outcome: who decoded, and what each wait policy cost."""
@@ -167,20 +189,8 @@ class ClusterRunner:
                                 {"cfg": cfg_kw, "x_share": x_shares[w],
                                  "cbar": cbar}),
                     at=now)
-        deadline = now + timeout_s
-        acked: set[int] = set()
-        while len(acked) < self.cfg.N:
-            nxt = tr.next_delivery(MASTER)
-            if nxt is None:
-                if self.scheduler.clock >= deadline:
-                    raise TimeoutError(
-                        f"workers never acked provisioning: "
-                        f"{sorted(set(range(self.cfg.N)) - acked)}")
-                continue
-            for at, msg in tr.recv(MASTER, nxt):
-                if isinstance(msg, Heartbeat):
-                    self.monitor.heartbeat(msg.worker, now=at)
-                    acked.add(msg.worker)
+        await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
+                          self.monitor, timeout_s)
 
     def shutdown_workers(self) -> None:
         """Ask every worker process to exit its serve loop."""
@@ -197,9 +207,8 @@ class ClusterRunner:
 
     def _alive(self, now: float) -> np.ndarray:
         return np.array(
-            [i for i, w in self.monitor.workers.items()
-             if w.alive and (now - w.last_heartbeat)
-             <= self.monitor.timeout_s],
+            [i for i in self.monitor.workers
+             if not self.monitor.is_dead(i, now=now)],
             dtype=np.int64)
 
     def dispatch_set(self) -> np.ndarray:

@@ -27,6 +27,15 @@ abstraction.  One round (DESIGN.md §7):
 
 The scheduler moves messages and time only; the gradient numerics stay in
 core/protocol (see runner.py).
+
+``run_mpc_round`` generalizes the single dispatch/collect phase to the
+multi-phase rounds the BGW MPC baseline needs (DESIGN.md §7): dispatch ->
+local multiply -> all-to-all reshare BARRIER (repeated once per degree
+reduction) -> combine -> collect the first 2T+1 final shares.  The reshare
+barrier is the structural difference the paper's comparison hinges on: a
+recipient needs sub-shares from ALL N workers before it can combine, so
+every reshare phase is gated on the slowest worker — stragglers cannot be
+treated as erasures the way the coded decode treats them.
 """
 from __future__ import annotations
 
@@ -41,8 +50,10 @@ import numpy as np
 from repro.cluster.latency import LatencyModel
 from repro.cluster.messages import (
     MASTER,
+    CombineResult,
     EncodeShare,
     Heartbeat,
+    SubShare,
     WorkerResult,
     worker_endpoint,
 )
@@ -126,6 +137,34 @@ class RoundTrace:
         return self.t_all - self.t_start
 
 
+@dataclasses.dataclass
+class MPCRoundTrace:
+    """Everything the master observed about one multi-phase MPC round."""
+    round: int
+    t_start: float
+    dispatched: np.ndarray
+    responders: np.ndarray          # arrival order of final shares
+    arrivals: dict[int, float]      # worker -> final-share arrival time
+    latencies: dict[int, float]     # worker -> reported final-phase latency
+    t_done: float                   # clock at the (2T+1)-th final share
+                                    # (inf = starved round)
+    t_all: float                    # when the LAST final share lands
+                                    # (inf if any worker dead/stalled)
+    barriers: list[float] = dataclasses.field(default_factory=list)
+                                    # simulated reshare-barrier exit times
+                                    # (unobservable master-side on a real
+                                    # transport: empty)
+    payloads: dict[int, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def mpc_wait_s(self) -> float:
+        return self.t_done - self.t_start
+
+    @property
+    def all_wait_s(self) -> float:
+        return self.t_all - self.t_start
+
+
 class EventScheduler:
     def __init__(self, n_workers: int, latency: LatencyModel | None = None,
                  transport: Transport | None = None,
@@ -156,12 +195,13 @@ class EventScheduler:
                            arrivals: dict[int, float],
                            latencies: dict[int, float],
                            responders: list[int],
-                           payloads: dict[int, Any]) -> None:
+                           payloads: dict[int, Any],
+                           result_type: type = WorkerResult) -> None:
         for at, msg in self.transport.recv(MASTER, now):
             if isinstance(msg, Heartbeat):
                 if monitor is not None:
                     monitor.heartbeat(msg.worker, now=at)
-            elif isinstance(msg, WorkerResult):
+            elif isinstance(msg, (WorkerResult, CombineResult)):
                 if monitor is not None:
                     # late results of past rounds still count as liveness +
                     # latency evidence; only THIS round's feed the decode.
@@ -170,13 +210,83 @@ class EventScheduler:
                 # decode accepts only workers dispatched THIS attempt: after
                 # a checkpoint restore, a stale result for the same round
                 # number from the aborted attempt (or from a worker the
-                # replay excluded) must not enter the responder trace.
-                if (msg.round == round and msg.worker in dispatched
+                # replay excluded) must not enter the responder trace.  The
+                # result TYPE is part of the filter: a stale coded
+                # WorkerResult can never enter an MPC round's trace.
+                if (isinstance(msg, result_type) and msg.round == round
+                        and msg.worker in dispatched
                         and msg.worker not in arrivals):
                     arrivals[msg.worker] = at
                     latencies[msg.worker] = msg.compute_s
                     responders.append(msg.worker)
                     payloads[msg.worker] = msg.payload
+
+    def _presumed_dead(self, missing, monitor) -> bool:
+        """True when the failure detector has declared EVERY missing worker
+        dead (HeartbeatMonitor.is_dead: explicitly mark_failed, or
+        heartbeat-silent beyond the monitor's finite timeout).  The collect
+        loop's only legitimate way to stop waiting for absent workers on a
+        real transport."""
+        if monitor is None or not missing:
+            return False
+        now = self.time.now()
+        return all(monitor.is_dead(w, now=now) for w in missing)
+
+    def _collect(self, round: int, threshold: int, dispatched: set[int],
+                 monitor, deadline: float, collect_all: bool,
+                 result_type: type) -> tuple[dict[int, float],
+                                             dict[int, float], list[int],
+                                             dict[int, Any]]:
+        """The master's event loop: pop deliveries in time order until
+        ``threshold`` results of ``result_type`` for THIS round are in (and,
+        under ``collect_all``, every dispatched worker has responded), or
+        the deadline passes.  On a real transport the collect-ALL extension
+        additionally ends when the heartbeat monitor declares every
+        still-missing worker dead — a dead worker's silence would otherwise
+        spin a deadline-less collect-all forever.  The dead-exit fires only
+        AFTER the threshold is met: the decode wait itself is bounded by the
+        deadline alone, so a heartbeat timeout shorter than a slow-but-
+        healthy round (e.g. jit warmup) can never abandon a decodable round
+        early."""
+        arrivals: dict[int, float] = {}
+        latencies: dict[int, float] = {}
+        responders: list[int] = []
+        payloads: dict[int, Any] = {}
+        real = self.transport.real
+        while (len(responders) < threshold
+               or (collect_all and len(arrivals) < len(dispatched))):
+            nxt = self.transport.next_delivery(MASTER)
+            if nxt is None:
+                if not real:
+                    break              # sim queue drained: nothing will come
+                if self.time.now() >= deadline:
+                    break              # wall clock ran out: starved
+                if (len(responders) >= threshold
+                        and self._presumed_dead(
+                            dispatched - arrivals.keys(), monitor)):
+                    break              # decode done + all absentees dead:
+                                       # wait-for-all is unobservable
+                continue               # nothing YET: poll again
+            if nxt > deadline:
+                break
+            self.time.advance_to(nxt)
+            self._deliver_to_master(self.time.now(), round, monitor,
+                                    dispatched, arrivals, latencies,
+                                    responders, payloads, result_type)
+        return arrivals, latencies, responders, payloads
+
+    @staticmethod
+    def _check_exitable(real: bool, collect_all: bool, timeout_s: float,
+                        monitor) -> None:
+        """A real-transport collect-all with no deadline AND no failure
+        detector can never conclude a dead worker's response isn't coming —
+        refuse up front instead of spinning forever."""
+        if (real and collect_all and math.isinf(timeout_s)
+                and (monitor is None or math.isinf(monitor.timeout_s))):
+            raise ValueError(
+                "collect_all on a real transport with timeout_s=inf needs a "
+                "heartbeat monitor with a finite timeout: a dead worker's "
+                "silence would spin the collect loop forever")
 
     def _send_round(self, round: int, workers: np.ndarray, t0: float,
                     payloads: dict[int, Any] | None
@@ -228,31 +338,16 @@ class EventScheduler:
         way a real transport can observe the wait-for-all counterfactual.
         """
         workers = np.arange(self.n) if workers is None else np.asarray(workers)
+        real = self.transport.real
+        self._check_exitable(real, collect_all, timeout_s, monitor)
         t0 = self.time.now()
         sampled = self._send_round(round, workers, t0, payloads)
 
-        arrivals: dict[int, float] = {}
-        latencies: dict[int, float] = {}
-        responders: list[int] = []
-        round_payloads: dict[int, Any] = {}
         dispatched = {int(w) for w in workers}
         deadline = t0 + timeout_s
-        real = self.transport.real
-        while (len(responders) < threshold
-               or (collect_all and len(arrivals) < len(dispatched))):
-            nxt = self.transport.next_delivery(MASTER)
-            if nxt is None:
-                if not real:
-                    break              # sim queue drained: nothing will come
-                if self.time.now() >= deadline:
-                    break              # wall clock ran out: starved
-                continue               # nothing YET: poll again
-            if nxt > deadline:
-                break
-            self.time.advance_to(nxt)
-            self._deliver_to_master(self.time.now(), round, monitor,
-                                    dispatched, arrivals, latencies,
-                                    responders, round_payloads)
+        arrivals, latencies, responders, round_payloads = self._collect(
+            round, threshold, dispatched, monitor, deadline,
+            collect_all=collect_all, result_type=WorkerResult)
 
         got_R = len(responders) >= threshold
         # the decode instant is the threshold-th ARRIVAL, which (under
@@ -267,12 +362,149 @@ class EventScheduler:
         if got_R:
             self.time.advance_to(self.time.now() + self.master_overhead_s)
         elif not real:
-            # starved: park the simulated clock at the moment the master
-            # gave up waiting
-            if math.isfinite(deadline):
-                self.time.advance_to(min(deadline, t_all))
+            self._park_starved(t0, deadline, t_all, monitor)
         return RoundTrace(
             round=round, t_start=t0, dispatched=workers,
             responders=np.asarray(responders, dtype=np.int64),
             arrivals=arrivals, latencies=latencies,
             t_first_R=t_first_R, t_all=t_all, payloads=round_payloads)
+
+    # ------------------------------------------------------------------
+    # Multi-phase MPC rounds (DESIGN.md §7: "MPC on the cluster runtime")
+    # ------------------------------------------------------------------
+
+    def run_mpc_round(self, round: int, collect_threshold: int,
+                      phase_models: list[LatencyModel] | None = None,
+                      workers: np.ndarray | None = None,
+                      monitor=None,
+                      timeout_s: float = math.inf,
+                      payloads: dict[int, Any] | None = None
+                      ) -> MPCRoundTrace:
+        """One BGW iteration's message flow: dispatch -> (local multiply ->
+        all-to-all reshare barrier -> combine) x n_reductions -> collect the
+        first ``collect_threshold`` (= 2T+1) final shares.
+
+        In simulation ``phase_models`` (length n_reductions + 1: one per
+        reshare phase plus the final send) enacts the workers: phase j's
+        sample covers worker w's compute+network for that phase, its
+        SubShares reach every peer at ``start + lat``, and NO worker enters
+        phase j+1 before the slowest finishes phase j — sub-shares from all
+        N workers are needed to combine, so the barrier exit is
+        ``max_w(start_w + lat_w)``.  A dead worker (inf) makes the barrier
+        — and the whole round — never complete: BGW cannot treat stragglers
+        as erasures.  On a real transport (``latency=None``) the worker
+        processes run the phases themselves (launch/cpml_worker.py, MPC
+        serve mode) and the reshare traffic relays through the master's
+        transport; only dispatch + final collect are enacted here.
+        """
+        workers = np.arange(self.n) if workers is None else np.asarray(workers)
+        t0 = self.time.now()
+        dispatched = {int(w) for w in workers}
+        barriers: list[float] = []
+        if self.latency is None:                      # real worker processes
+            assert phase_models is None, (
+                "a real transport's workers pace their own phases")
+            for w in workers:
+                w = int(w)
+                payload = None if payloads is None else payloads.get(w)
+                self.transport.send(worker_endpoint(w),
+                                    EncodeShare(round, w, payload), at=t0)
+            sampled: dict[int, float] = {}
+        else:
+            assert phase_models, (
+                "the in-process simulation needs one latency model per "
+                "reshare phase plus the final send")
+            sampled = self._enact_mpc_phases(round, workers, t0,
+                                             phase_models, barriers,
+                                             payloads)
+
+        deadline = t0 + timeout_s
+        arrivals, latencies, responders, round_payloads = self._collect(
+            round, collect_threshold, dispatched, monitor, deadline,
+            collect_all=False, result_type=CombineResult)
+
+        got = len(responders) >= collect_threshold
+        t_done = (arrivals[responders[collect_threshold - 1]] if got
+                  else math.inf)
+        if self.transport.real:
+            t_all = (max(arrivals.values())
+                     if arrivals and len(arrivals) == len(dispatched)
+                     else math.inf)
+        else:
+            t_all = max(sampled.values(), default=math.inf)
+        if got:
+            self.time.advance_to(self.time.now() + self.master_overhead_s)
+        elif not self.transport.real:
+            self._park_starved(t0, deadline, t_all, monitor)
+        return MPCRoundTrace(
+            round=round, t_start=t0, dispatched=workers,
+            responders=np.asarray(responders, dtype=np.int64),
+            arrivals=arrivals, latencies=latencies,
+            t_done=t_done, t_all=t_all, barriers=barriers,
+            payloads=round_payloads)
+
+    def _enact_mpc_phases(self, round: int, workers: np.ndarray, t0: float,
+                          phase_models: list[LatencyModel],
+                          barriers: list[float],
+                          payloads: dict[int, Any] | None
+                          ) -> dict[int, float]:
+        """Simulate the workers through dispatch, every reshare barrier, and
+        the final send; returns each worker's final-share landing time."""
+        idx = [int(w) for w in workers]
+        for w in idx:
+            # drain the previous round's share (bounded inboxes), then
+            # dispatch; alive workers ack with a heartbeat.  sample() is
+            # order-independent, so re-reading phase 0's draw is free.
+            payload = None if payloads is None else payloads.get(w)
+            self.transport.recv(worker_endpoint(w), t0)
+            self.transport.send(worker_endpoint(w),
+                                EncodeShare(round, w, payload), at=t0)
+            if math.isfinite(phase_models[0].sample(round, w)):
+                self.transport.send(MASTER, Heartbeat(w, t0), at=t0,
+                                    delay=self.heartbeat_delay_s)
+        start = {w: t0 for w in idx}
+        for j, model in enumerate(phase_models[:-1]):
+            done = {}
+            for w in idx:
+                lat = model.sample(round, w)
+                done[w] = start[w] + lat
+                for v in idx:       # all-to-all: sub-share to every peer
+                    self.transport.send(worker_endpoint(v),
+                                        SubShare(round, j, w, v),
+                                        at=start[w], delay=lat)
+            barrier = max(done.values())
+            barriers.append(barrier)
+            for v in idx:           # sub-shares are consumed at the barrier
+                self.transport.recv(
+                    worker_endpoint(v),
+                    barrier if math.isfinite(barrier) else math.inf)
+            start = {w: barrier for w in idx}
+        sampled = {}
+        final = phase_models[-1]
+        for w in idx:
+            lat = final.sample(round, w)
+            sampled[w] = start[w] + lat
+            self.transport.send(MASTER, CombineResult(round, w, lat),
+                                at=start[w], delay=lat)
+        return sampled
+
+    def _park_starved(self, t0: float, deadline: float, t_all: float,
+                      monitor) -> None:
+        """Starved round in simulation: park the clock at the moment the
+        master gave up waiting, so downstream heartbeat-timeout/recovery
+        logic sees the time the wait actually consumed.
+
+        With a finite deadline that is min(deadline, t_all).  With an
+        infinite deadline the master's patience is unbounded and only a
+        failure detector can end the wait: park at the instant the
+        monitor's (finite) heartbeat timeout declares this round's silent
+        workers dead.  With neither bound the wait is unsimulatable — the
+        clock stays at the last delivery (pinned in tests; callers that
+        want recovery semantics must supply a finite timeout or monitor).
+        """
+        give_up = min(deadline, t_all)
+        if (not math.isfinite(give_up) and monitor is not None
+                and math.isfinite(monitor.timeout_s)):
+            give_up = t0 + monitor.timeout_s
+        if math.isfinite(give_up):
+            self.time.advance_to(give_up)

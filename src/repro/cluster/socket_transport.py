@@ -6,8 +6,12 @@ master endpoint and N worker processes on real sockets, with the wall clock
 replacing the simulated clock.
 
 Topology is a star: the master listens; each worker connects and registers
-with a HELLO frame naming its endpoint ("worker/3").  Either side holds ONE
-``SocketTransport`` whose ``local`` endpoint is its own name:
+with a HELLO frame naming its endpoint ("worker/3").  Worker<->worker
+delivery (the MPC reshare round) still works through the star: a worker's
+``send`` to a peer endpoint wraps the frame in a Forward envelope addressed
+via the master, which relays the inner bytes verbatim to the destination
+connection.  Either side holds ONE ``SocketTransport`` whose ``local``
+endpoint is its own name:
 
   * ``SocketTransport.master(...)``  — selectors-based server; ``send`` routes
     by destination endpoint to the registered connection.
@@ -30,10 +34,10 @@ Contract mapping (the backend-shared contract tests pin this):
 """
 from __future__ import annotations
 
+import collections
 import heapq
 import itertools
 import math
-import select
 import selectors
 import socket
 import threading
@@ -45,6 +49,7 @@ from repro.cluster.transport import Transport
 from repro.cluster import wire
 
 _RECV_CHUNK = 1 << 16
+_OUTBOX_MAX = 1 << 28            # per-destination cap on buffered send bytes
 
 
 class SocketTransport(Transport):
@@ -62,7 +67,9 @@ class SocketTransport(Transport):
         self._seq = itertools.count()
         self._wlock = threading.Lock()   # guards the endpoint/conn maps
         self._conn_locks: dict[str, threading.Lock] = {}  # per-endpoint
-        # write serialization: a stalled peer must only block ITS frames
+        self._outbox: dict[str, collections.deque[bytes]] = {}
+        self._outbox_bytes: dict[str, int] = {}
+        # write serialization: a slow peer must only delay ITS frames
         self._timers: list[threading.Timer] = []
         self._closed = False
         self.peer_closed = False         # a registered peer hung up
@@ -135,14 +142,31 @@ class SocketTransport(Transport):
                     self._names[sock] = msg.endpoint
                     with self._wlock:
                         self._conns[msg.endpoint] = sock
+                elif isinstance(msg, wire.Forward):
+                    # star-topology relay (DESIGN.md §7): worker->worker
+                    # frames ride to the master inside a Forward; pass the
+                    # inner frame bytes on verbatim.  An unknown/dead
+                    # destination drops the frame — the same lost-in-the-
+                    # void semantics every send to a dead peer has.
+                    if msg.dst == self.local:
+                        for inner in wire.FrameReader().feed(msg.frame):
+                            heapq.heappush(
+                                self._inbox,
+                                (time.monotonic(), next(self._seq), inner))
+                    else:
+                        self._write(msg.dst, msg.frame)
                 else:
                     heapq.heappush(self._inbox,
                                    (time.monotonic(), next(self._seq), msg))
+        self._flush_outboxes()
 
     def _drop(self, sock: socket.socket) -> None:
         name = self._names.pop(sock, None)
         self._readers.pop(sock, None)
         with self._wlock:
+            if name is not None:
+                self._outbox.pop(name, None)
+                self._outbox_bytes.pop(name, None)
             if name is not None and self._conns.get(name) is sock:
                 del self._conns[name]
                 self._conn_locks.pop(name, None)
@@ -163,6 +187,11 @@ class SocketTransport(Transport):
         if math.isinf(delay):
             return                        # lost in the void, like the sim
         data = wire.serialize(msg)
+        if self.local != MASTER and dst != MASTER:
+            # a worker's only wire is to the master: peer traffic (SubShare
+            # reshares) is enveloped and relayed — see _poll's Forward arm.
+            data = wire.serialize(wire.Forward(dst, data))
+            dst = MASTER
         if delay > 0:
             # prune fired timers so a long-lived transport with injected
             # latency doesn't grow the list (and its frame bytes) unboundedly
@@ -174,36 +203,76 @@ class SocketTransport(Transport):
         else:
             self._write(dst, data)
 
-    def _write(self, dst: str, data: bytes,
-               stall_timeout_s: float = 5.0) -> None:
-        # Sockets stay non-blocking for the selector loop; writes drain a
-        # memoryview by hand so a timer-thread send can never flip a socket
-        # to blocking under the reader.  Serialization is PER ENDPOINT: a
-        # peer whose receive buffer is full (wedged process) can only delay
-        # frames addressed to it, never sends to healthy workers.  A peer
-        # that stops draining for ``stall_timeout_s`` gets the frame
-        # dropped — a worker that isn't reading is a dead worker, and
-        # dropped frames are exactly what death looks like on this
-        # transport.
+    def _write(self, dst: str, data: bytes) -> None:
+        """Enqueue one complete frame for ``dst`` and flush what the socket
+        accepts NOW; the rest drains on later polls.
+
+        All writes to an endpoint go through ONE per-destination outbox, so
+        frames can never interleave mid-frame (a partially flushed SubShare
+        followed by a direct EncodeShare send would desynchronize the
+        recipient's FrameReader permanently) and a slow reader — e.g. an
+        alive MPC straggler mid-sleep whose buffers fill with relayed
+        reshare traffic — only ever DELAYS its own frames, never loses or
+        corrupts them, and never blocks sends to healthy peers or the
+        caller's thread.  Loss happens exactly where death semantics want
+        it: unknown/closed endpoints, EOF (``_drop`` clears the outbox),
+        and an outbox past ``_OUTBOX_MAX`` (a peer that stopped reading for
+        good).  Sockets stay non-blocking for the selector loop; a
+        timer-thread send simply parks in the outbox like any other.
+        """
         with self._wlock:
             conn = self._conns.get(dst)
             if conn is None or self._closed:
                 return                    # unknown or dead peer: dropped
             lock = self._conn_locks.setdefault(dst, threading.Lock())
+            # dict MEMBERSHIP changes only under _wlock (timer threads call
+            # _write concurrently with the poll loop's outbox iteration);
+            # the queue's CONTENTS are guarded by the per-endpoint lock.
+            q = self._outbox.setdefault(dst, collections.deque())
         with lock:
-            view = memoryview(data)
-            deadline = time.monotonic() + stall_timeout_s
-            try:
+            if self._outbox_bytes.get(dst, 0) + len(data) > _OUTBOX_MAX:
+                return            # reader gone for good: lost in the void
+            q.append(data)
+            self._outbox_bytes[dst] = (self._outbox_bytes.get(dst, 0)
+                                       + len(data))
+            self._drain_outbox_locked(dst, conn)
+
+    def _drain_outbox_locked(self, dst: str, conn: socket.socket) -> None:
+        """Write as much outbox as ``dst``'s socket accepts (lock held).
+        A partially written frame's tail stays at the queue head, so the
+        byte stream always resumes exactly where it stopped; the byte
+        accounting is incremental (O(1) per send, not O(queue))."""
+        q = self._outbox.get(dst)
+        if not q:
+            return
+        try:
+            while q:
+                view = memoryview(q.popleft())
                 while view:
                     try:
-                        view = view[conn.send(view):]
+                        sent = conn.send(view)
                     except (BlockingIOError, InterruptedError):
-                        if time.monotonic() > deadline:
-                            return
-                        select.select([], [conn], [], self.poll_interval_s)
-            except OSError:
-                pass                      # peer died mid-write: dropped
-                # (the read side will observe EOF and _drop the conn)
+                        q.appendleft(bytes(view))
+                        return            # socket full: later polls resume
+                    self._outbox_bytes[dst] -= sent
+                    view = view[sent:]
+        except OSError:
+            q.clear()                     # peer died mid-write: the read
+            self._outbox_bytes[dst] = 0   # side will observe EOF and _drop
+
+    def _flush_outboxes(self) -> None:
+        with self._wlock:
+            dsts = [d for d, q in self._outbox.items() if q]
+        for dst in dsts:
+            with self._wlock:
+                conn = self._conns.get(dst)
+                if conn is None or self._closed:
+                    self._outbox.pop(dst, None)
+                    self._outbox_bytes.pop(dst, None)
+                    continue
+                lock = self._conn_locks.setdefault(dst, threading.Lock())
+            with lock:
+                self._drain_outbox_locked(dst, conn)
 
     def recv(self, dst: str, now: float) -> list[tuple[float, Any]]:
         if dst != self.local:

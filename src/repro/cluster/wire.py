@@ -28,7 +28,13 @@ from typing import Any
 
 import numpy as np
 
-from repro.cluster.messages import EncodeShare, Heartbeat, WorkerResult
+from repro.cluster.messages import (
+    CombineResult,
+    EncodeShare,
+    Heartbeat,
+    SubShare,
+    WorkerResult,
+)
 
 MAX_FRAME_BYTES = 1 << 30        # reject absurd length prefixes outright
 
@@ -38,6 +44,9 @@ _FRAME_WORKER_RESULT = 0x11
 _FRAME_HEARTBEAT = 0x12
 _FRAME_HELLO = 0x13
 _FRAME_RAW = 0x14
+_FRAME_FORWARD = 0x15
+_FRAME_SUB_SHARE = 0x16
+_FRAME_COMBINE_RESULT = 0x17
 
 # value tags
 _T_NONE = 0x00
@@ -70,6 +79,21 @@ class Raw:
     """An arbitrary encodable value as a message (transport contract tests
     exercise the backends with plain strings/ints, not protocol messages)."""
     value: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Forward:
+    """Socket-layer relay envelope: deliver ``frame`` (one complete
+    serialized frame) to endpoint ``dst``.
+
+    The socket topology is a star — workers hold one connection, to the
+    master — so worker->worker traffic (SubShare, DESIGN.md §7) rides to the
+    master wrapped in a Forward, and the master writes the inner frame bytes
+    to the destination connection VERBATIM (no re-serialization on the relay
+    hop).  Never surfaced to recv(): the transport consumes it.
+    """
+    dst: str
+    frame: bytes
 
 
 # ---------------------------------------------------------------------------
@@ -229,10 +253,27 @@ def serialize(msg: Any) -> bytes:
         _enc_value(msg.worker, out)
         _enc_value(msg.compute_s, out)
         _enc_value(msg.payload, out)
+    elif isinstance(msg, SubShare):
+        out.append(bytes([_FRAME_SUB_SHARE]))
+        _enc_value(msg.round, out)
+        _enc_value(msg.phase, out)
+        _enc_value(msg.src, out)
+        _enc_value(msg.dst, out)
+        _enc_value(msg.payload, out)
+    elif isinstance(msg, CombineResult):
+        out.append(bytes([_FRAME_COMBINE_RESULT]))
+        _enc_value(msg.round, out)
+        _enc_value(msg.worker, out)
+        _enc_value(msg.compute_s, out)
+        _enc_value(msg.payload, out)
     elif isinstance(msg, Heartbeat):
         out.append(bytes([_FRAME_HEARTBEAT]))
         _enc_value(msg.worker, out)
         _enc_value(msg.sent_at, out)
+    elif isinstance(msg, Forward):
+        out.append(bytes([_FRAME_FORWARD]))
+        _enc_value(msg.dst, out)
+        _enc_value(msg.frame, out)
     elif isinstance(msg, Hello):
         out.append(bytes([_FRAME_HELLO]))
         _enc_value(msg.endpoint, out)
@@ -255,8 +296,21 @@ def _decode_body(body: bytes) -> Any:
     elif tag == _FRAME_WORKER_RESULT:
         msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
                            compute_s=_dec_value(r), payload=_dec_value(r))
+    elif tag == _FRAME_SUB_SHARE:
+        msg = SubShare(round=_dec_value(r), phase=_dec_value(r),
+                       src=_dec_value(r), dst=_dec_value(r),
+                       payload=_dec_value(r))
+    elif tag == _FRAME_COMBINE_RESULT:
+        msg = CombineResult(round=_dec_value(r), worker=_dec_value(r),
+                            compute_s=_dec_value(r), payload=_dec_value(r))
     elif tag == _FRAME_HEARTBEAT:
         msg = Heartbeat(worker=_dec_value(r), sent_at=_dec_value(r))
+    elif tag == _FRAME_FORWARD:
+        dst = _dec_value(r)
+        frame = _dec_value(r)
+        if not isinstance(dst, str) or not isinstance(frame, bytes):
+            raise WireError("malformed Forward frame")
+        msg = Forward(dst=dst, frame=frame)
     elif tag == _FRAME_HELLO:
         msg = Hello(endpoint=_dec_value(r))
     elif tag == _FRAME_RAW:

@@ -100,26 +100,53 @@ def share(cfg: MPCConfig, key: jax.Array, value: jax.Array) -> jax.Array:
     return shares
 
 
+def reshare_keys(cfg: MPCConfig, key: jax.Array) -> jax.Array:
+    """Per-source-worker re-share keys for ONE degree reduction.
+
+    The one derivation both the vectorized oracle (`degree_reduce`) and the
+    distributed runtime (cluster/mpc_runner.py, launch/cpml_worker.py) use:
+    worker i re-shares under row i, so a worker process holding only the
+    phase key produces the exact sub-shares the oracle's vmap lane i does.
+    """
+    return jax.random.split(key, cfg.N)
+
+
+def make_subshares(cfg: MPCConfig, key: jax.Array, value: jax.Array
+                   ) -> jax.Array:
+    """Worker-side re-share: fresh degree-T shares of this worker's product
+    share, one per recipient -> (N, *value.shape).  Row j goes to peer j."""
+    return share(cfg, key, value)
+
+
+def combine_subshares(cfg: MPCConfig, gathered: jax.Array) -> jax.Array:
+    """Recipient-side combine: (N_from, *s) sub-shares (ordered by source
+    worker) -> this worker's new degree-T share, via Lagrange-at-0 weights.
+
+    Needs sub-shares from ALL N sources — the wait-for-all barrier of every
+    BGW multiplication (DESIGN.md §7)."""
+    lam = jnp.asarray(cfg.lambda0, jnp.int32)             # (N_from,)
+    out = jnp.zeros(gathered.shape[1:], jnp.int32)
+    for i in range(cfg.N):
+        out = field.addmod(out, field.mulmod(
+            jnp.broadcast_to(lam[i], gathered.shape[1:]),
+            gathered[i], cfg.p), cfg.p)
+    return out
+
+
 def degree_reduce(cfg: MPCConfig, key: jax.Array, shares: jax.Array
                   ) -> jax.Array:
     """BGW degree reduction: (N, *s) degree-2T shares -> degree-T shares.
 
-    Each worker re-shares its value (a fresh degree-T Shamir share per
-    recipient) and recipients combine with Lagrange-at-0 weights.  The
-    (N_from -> N_to) exchange is the all-to-all communication round.
+    The vectorized oracle for one all-to-all communication round, composed
+    from the SAME per-worker hooks the distributed runtime runs: every
+    source re-shares (`make_subshares` under its `reshare_keys` row), the
+    all-to-all exchange is a transpose, and every recipient combines
+    (`combine_subshares`).
     """
-    # re-share: for each source worker i, degree-T shares across recipients.
-    resh = jax.vmap(lambda k, v: share(cfg, k, v))(
-        jax.random.split(key, cfg.N), shares)             # (N_from, N_to, *s)
-    # all-to-all: recipient j gathers column j.
+    resh = jax.vmap(lambda k, v: make_subshares(cfg, k, v))(
+        reshare_keys(cfg, key), shares)                   # (N_from, N_to, *s)
     gathered = jnp.swapaxes(resh, 0, 1)                   # (N_to, N_from, *s)
-    lam = jnp.asarray(cfg.lambda0, jnp.int32)             # (N_from,)
-    out = jnp.zeros_like(shares)
-    for i in range(cfg.N):
-        out = field.addmod(out, field.mulmod(
-            jnp.broadcast_to(lam[i], gathered.shape[0:1] + shares.shape[1:]),
-            gathered[:, i], cfg.p), cfg.p)
-    return out
+    return jax.vmap(lambda g: combine_subshares(cfg, g))(gathered)
 
 
 def reconstruct(cfg: MPCConfig, shares: jax.Array, degree: int) -> jax.Array:
@@ -129,6 +156,27 @@ def reconstruct(cfg: MPCConfig, shares: jax.Array, degree: int) -> jax.Array:
     lam = jnp.asarray(cfg.lambda0_first(need), jnp.int32)
     out = jnp.zeros(shares.shape[1:], jnp.int32)
     for i in range(need):
+        out = field.addmod(out, field.mulmod(
+            jnp.broadcast_to(lam[i], shares.shape[1:]), shares[i], cfg.p),
+            cfg.p)
+    return out
+
+
+def reconstruct_at(cfg: MPCConfig, shares: jax.Array,
+                   workers: np.ndarray) -> jax.Array:
+    """Interpolate the secret from the shares of an ARBITRARY worker subset.
+
+    ``shares[i]`` is worker ``workers[i]``'s share.  Any 2T+1 correct shares
+    of a degree-2T sharing determine the same polynomial, so the value at 0
+    is the SAME field element ``reconstruct`` computes from the first 2T+1 —
+    exactly, mod p.  This is what lets the cluster master reconstruct from
+    the first 2T+1 ARRIVALS (whatever subset that is) while staying
+    bit-identical to the single-host oracle (cluster/mpc_runner.py).
+    """
+    idx = np.asarray(workers, dtype=np.int64)
+    lam = jnp.asarray(_lagrange_at_zero(cfg.alphas[idx], cfg.p), jnp.int32)
+    out = jnp.zeros(shares.shape[1:], jnp.int32)
+    for i in range(len(idx)):
         out = field.addmod(out, field.mulmod(
             jnp.broadcast_to(lam[i], shares.shape[1:]), shares[i], cfg.p),
             cfg.p)
@@ -160,38 +208,95 @@ def setup(cfg: MPCConfig, key: jax.Array, x: jax.Array, y: jax.Array,
                     xq_real=xq_real, y=y)
 
 
+# --- per-phase hooks: the pieces one worker (or the master) runs.  The
+# distributed runtime (cluster/mpc_runner.py + launch/cpml_worker.py MPC
+# serve mode) composes EXACTLY these, so a cluster MPC run is bit-identical
+# to the single-host oracle below.
+
+def poly_coeffs(cfg: MPCConfig) -> np.ndarray:
+    """The quantized sigmoid-surrogate coefficients c̄ (one host-side
+    derivation shared by `_step_jit` and worker provisioning)."""
+    return np.asarray(
+        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
+        dtype=np.int32)
+
+
+def step_keys(cfg: MPCConfig, key: jax.Array
+              ) -> tuple[jax.Array, jax.Array, list[jax.Array]]:
+    """(kw weight-share, kq stochastic-quantization, kred one per degree
+    reduction) — the exact split the oracle has always used."""
+    kw, kq, *kred = jax.random.split(key, 3 + cfg.r)
+    return kw, kq, kred
+
+
+def encode_step(cfg: MPCConfig, key: jax.Array, w: jax.Array
+                ) -> tuple[jax.Array, list[jax.Array]]:
+    """Master-side start of one iteration: quantize + Shamir-share the
+    weights (same W̄ structure as CPML) and derive the per-reduction reshare
+    keys shipped to the workers.  Returns (w_shares (N, d, r), kred)."""
+    kw, kq, kred = step_keys(cfg, key)
+    wbar = quantize.quantize_weights(kq, w, cfg.lw, cfg.r, cfg.p)   # (d, r)
+    return share(cfg, kw, wbar), kred
+
+
+def worker_mul(cfg: MPCConfig, x_share: jax.Array, w_share: jax.Array
+               ) -> jax.Array:
+    """Local multiply Z = [X̄] @ [w̄]: secret x secret -> degree-2T (m, r)."""
+    return field.matmul(x_share, w_share, cfg.p)
+
+
+def s_init(cfg: MPCConfig, cbar: jax.Array, prod: jax.Array) -> jax.Array:
+    """s = c̄_0 + c̄_1 z after the first degree reduction."""
+    return field.addmod(
+        jnp.broadcast_to(cbar[0], prod.shape),
+        field.mulmod(jnp.broadcast_to(cbar[1], prod.shape), prod, cfg.p),
+        cfg.p)
+
+
+def s_accum(cfg: MPCConfig, cbar_i: jax.Array, s: jax.Array,
+            prod: jax.Array) -> jax.Array:
+    """s += c̄_i z^i for the higher-degree surrogate terms."""
+    return field.addmod(s, field.mulmod(
+        jnp.broadcast_to(cbar_i, prod.shape), prod, cfg.p), cfg.p)
+
+
+def worker_final(cfg: MPCConfig, x_share: jax.Array, s: jax.Array
+                 ) -> jax.Array:
+    """Final local multiply G-share = [X̄]ᵀ s -> degree-2T (d,)."""
+    return field.matmul(x_share.T, s[:, None], cfg.p)[:, 0]
+
+
+def finish_update(cfg: MPCConfig, w: jax.Array, decoded: jax.Array,
+                  xty: jax.Array, eta_over_m: jax.Array) -> jax.Array:
+    """Master-side end of one iteration: dequantize + gradient step."""
+    xg = quantize.dequantize(decoded, cfg.grad_scale, cfg.p)
+    return w - eta_over_m * (xg - xty)
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def _step_jit(cfg: MPCConfig, key: jax.Array, w: jax.Array,
               x_shares: jax.Array, xty: jax.Array,
               eta_over_m: jax.Array) -> jax.Array:
-    kw, kq, *kred = jax.random.split(key, 3 + cfg.r)
-    cbar = jnp.asarray(
-        sigmoid_poly.quantized_coeffs(cfg.r, cfg.lx, cfg.lw, cfg.lc, cfg.p),
-        jnp.int32)
-    # master quantizes + shares the weights (same W̄ structure as CPML).
-    wbar = quantize.quantize_weights(kq, w, cfg.lw, cfg.r, cfg.p)   # (d, r)
-    w_shares = share(cfg, kw, wbar)                                 # (N, d, r)
+    """One BGW iteration, all N workers vectorized — the single-host oracle,
+    composed from the same hooks the distributed runtime runs per worker."""
+    cbar = jnp.asarray(poly_coeffs(cfg), jnp.int32)
+    w_shares, kred = encode_step(cfg, key, w)                       # (N, d, r)
     # round 1: Z_j = X̄ w̄ʲ — secret×secret -> degree 2T, then reduce.
-    z = jax.vmap(lambda xs, ws: field.matmul(xs, ws, cfg.p))(
+    z = jax.vmap(lambda xs, ws: worker_mul(cfg, xs, ws))(
         x_shares, w_shares)                                         # (N, m, r)
     z = degree_reduce(cfg, kred[0], z)
     # rounds 2..r: running products of z columns (elementwise muls).
     prod = z[..., 0]
-    s = field.addmod(
-        jnp.broadcast_to(cbar[0], prod.shape),
-        field.mulmod(jnp.broadcast_to(cbar[1], prod.shape), prod, cfg.p),
-        cfg.p)
+    s = s_init(cfg, cbar, prod)
     for i in range(2, cfg.r + 1):
         prod = field.mulmod(prod, z[..., i - 1], cfg.p)             # deg 2T
         prod = degree_reduce(cfg, kred[i - 1], prod)
-        s = field.addmod(s, field.mulmod(
-            jnp.broadcast_to(cbar[i], prod.shape), prod, cfg.p), cfg.p)
+        s = s_accum(cfg, cbar[i], s, prod)
     # final multiplication: G = X̄ᵀ s — degree 2T, reconstruct directly.
-    g_shares = jax.vmap(lambda xs, ss: field.matmul(xs.T, ss[:, None], cfg.p)
-                        [:, 0])(x_shares, s)                        # (N, d)
+    g_shares = jax.vmap(lambda xs, ss: worker_final(cfg, xs, ss))(
+        x_shares, s)                                                # (N, d)
     decoded = reconstruct(cfg, g_shares, 2 * cfg.T)
-    xg = quantize.dequantize(decoded, cfg.grad_scale, cfg.p)
-    return w - eta_over_m * (xg - xty)
+    return finish_update(cfg, w, decoded, xty, eta_over_m)
 
 
 def step(cfg: MPCConfig, key: jax.Array, state: MPCState, eta: float
@@ -199,6 +304,12 @@ def step(cfg: MPCConfig, key: jax.Array, state: MPCState, eta: float
     w = _step_jit(cfg, key, state.w, state.x_shares, state.xty,
                   jnp.float32(eta / state.m))
     return dataclasses.replace(state, w=w)
+
+
+def iteration_key(kloop: jax.Array, t: int) -> jax.Array:
+    """Iteration t's protocol key — one derivation shared by train() and
+    the cluster runtime (cluster/mpc_runner.py)."""
+    return jax.random.fold_in(kloop, t)
 
 
 def train(cfg: MPCConfig, key: jax.Array, x: jax.Array, y: jax.Array,
@@ -211,7 +322,7 @@ def train(cfg: MPCConfig, key: jax.Array, x: jax.Array, y: jax.Array,
         eta = cpml.lipschitz_eta(state.xq_real)
     history = []
     for t in range(iters):
-        state = step(cfg, jax.random.fold_in(kloop, t), state, eta)
+        state = step(cfg, iteration_key(kloop, t), state, eta)
         if eval_every and (t + 1) % eval_every == 0:
             l, a = cpml.loss_and_accuracy(state.w, state.xq_real, state.y)
             history.append({"iter": t + 1, "loss": float(l), "acc": float(a)})

@@ -18,13 +18,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 class LMBatchLoader:
+    """Use as a context manager (``with LMBatchLoader(...) as loader:``) or
+    call ``close()`` explicitly: the prefetch thread is joined on close, so
+    a finished run never leaks a producer blocked on a full queue."""
+
     def __init__(self, mesh: Mesh | None, batch: int, seq: int, vocab: int,
                  seed: int = 0, prefetch: int = 2):
         self.mesh, self.batch, self.seq, self.vocab = mesh, batch, seq, vocab
         self.seed = seed
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
-        self._step = 0
         self._thread = threading.Thread(target=self._produce, daemon=True)
         self._thread.start()
 
@@ -65,4 +68,22 @@ class LMBatchLoader:
         return {k: jax.device_put(v, sh) for k, v in host.items()}
 
     def close(self):
+        """Stop and JOIN the prefetch thread (idempotent).
+
+        The producer may be blocked in a bounded-queue put; its 1s put
+        timeout re-checks the stop flag, and draining the queue here
+        unblocks it immediately instead.
+        """
         self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "LMBatchLoader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

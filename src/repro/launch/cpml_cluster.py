@@ -5,6 +5,9 @@
     python -m repro.launch.cpml_cluster --transport socket --iters 10
     python -m repro.launch.cpml_cluster --transport socket --kill-worker 5 \\
         --kill-at-round 4
+    python -m repro.launch.cpml_cluster --protocol mpc --latency lognormal
+    python -m repro.launch.cpml_cluster --protocol mpc --transport socket \\
+        --workers 5 --privacy 2 --straggle-worker 4
 
 Runs CodedPrivateML training through the cluster runtime (repro.cluster):
 per-round dispatch to N workers, decode at the fastest-`threshold`
@@ -22,6 +25,14 @@ bit-identical to ``train_reference`` replaying the observed responder trace
 (DESIGN.md §7: the runtime layer changes when and where rounds execute,
 never what they compute).  ``--kill-worker`` crashes one worker mid-run to
 demo first-T decode riding through a real death.
+
+``--protocol mpc`` runs the BGW baseline head-to-head over the SAME
+runtime: r+1 all-to-all reshare barriers per iteration (workers exchange
+SubShares through the master's relay on the socket backend), reconstruction
+at the first 2T+1 final shares, and an end-of-run bit-identity check
+against the single-host ``mpc_baseline`` oracle.  A straggler stalls every
+round (no erasures in BGW) — compare its per-round waits with a coded run
+under the same latency profile to see the paper's Fig. 5 effect measured.
 """
 from __future__ import annotations
 
@@ -38,6 +49,11 @@ import time
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description="CodedPrivateML cluster driver")
+    ap.add_argument("--protocol", choices=("cpml", "mpc"), default="cpml",
+                    help="cpml = coded training (first-T decode); mpc = the "
+                         "BGW baseline run as a real distributed protocol "
+                         "over the same runtime (wait-for-all reshare "
+                         "barriers, reconstruct at the first 2T+1)")
     ap.add_argument("--workers", "-N", type=int, default=8)
     ap.add_argument("--parallel", "-K", type=int, default=2)
     ap.add_argument("--privacy", "-T", type=int, default=1)
@@ -185,8 +201,102 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
     return runner, w, 0
 
 
+def _run_mpc(args) -> int:
+    """--protocol mpc: the BGW baseline head-to-head on the same runtime."""
+    import jax
+    import numpy as np
+
+    from repro.cluster.mpc_runner import MPCClusterRunner, mpc_phase_models
+    from repro.core import mpc_baseline, protocol
+    from repro.data import synthetic
+
+    if args.resilient:
+        print("--resilient is meaningless for MPC: BGW has no erasure "
+              "tolerance — a starved round is terminal", file=sys.stderr)
+        return 2
+    if args.classes != 1:
+        print("--protocol mpc supports the paper's binary task only",
+              file=sys.stderr)
+        return 2
+    if args.kill_worker is not None:
+        print("--kill-worker is meaningless for MPC: a crashed worker "
+              "starves the reshare barrier and ends the run (that is the "
+              "paper's point) — use --straggle-worker to slow one instead",
+              file=sys.stderr)
+        return 2
+    cfg = mpc_baseline.MPCConfig(N=args.workers, T=args.privacy,
+                                 r=args.degree)
+    mode = (args.latency if args.transport == "inprocess"
+            else f"socket x{cfg.N} procs")
+    print(f"BGW MPC baseline: N={cfg.N} T={cfg.T} r={cfg.r} "
+          f"collect=2T+1={2 * cfg.T + 1} [{mode}] — every degree reduction "
+          f"is an all-to-all barrier")
+    key = jax.random.PRNGKey(args.seed)
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=args.m, d=args.d,
+                                margin=12.0)
+    rc = 0
+    if args.transport == "socket":
+        timeout = args.round_timeout
+        if math.isinf(timeout):
+            timeout = 120.0
+        sleep = ({args.straggle_worker: args.straggle_sleep}
+                 if args.straggle_worker is not None else None)
+        with local_socket_cluster(cfg.N, port=args.port, sleep_s=sleep) as tr:
+            runner = MPCClusterRunner(
+                cfg, key, x, y, None, transport=tr,
+                round_timeout_s=timeout,
+                heartbeat_timeout_s=args.heartbeat_timeout)
+            runner.provision()
+            t0 = time.monotonic()
+            w = runner.run(args.iters)
+            wall_s = time.monotonic() - t0
+            runner.shutdown_workers()
+        print(f"socket MPC run: {args.iters} rounds over TCP in "
+              f"{wall_s:.1f}s ({wall_s / args.iters * 1e3:.0f} ms/round, "
+              f"{args.degree} reshare barrier(s) each)")
+    else:
+        models = mpc_phase_models(args.latency, seed=args.latency_seed,
+                                  r=cfg.r)
+        timeout = args.round_timeout
+        if args.latency == "dead" and math.isinf(timeout):
+            timeout = 60.0
+        runner = MPCClusterRunner(cfg, key, x, y, models,
+                                  round_timeout_s=timeout)
+        w = runner.run(args.iters)
+    stats = runner.wait_stats()
+    word = "wall" if args.transport == "socket" else "simulated"
+    print(f"per-round MPC wait (dispatch -> 2T+1 reconstruct): "
+          f"mean {stats['mpc']['mean']:.2f}s  p50 {stats['mpc']['p50']:.2f}s "
+          f"p95 {stats['mpc']['p95']:.2f}s "
+          f"({word} total {stats['mpc']['total']:.1f}s)")
+    if not args.no_verify:
+        w_ref, _ = mpc_baseline.train(cfg, key, x, y, iters=args.iters)
+        same = bool((np.asarray(w) == np.asarray(w_ref)).all())
+        print(f"bit-identical to the single-host mpc_baseline oracle: {same}")
+        if not same:
+            rc = 1
+    _, acc = protocol.loss_and_accuracy(w, runner.state.xq_real, y)
+    print(f"accuracy: mpc {float(acc):.2%}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(_json_finite(
+                {"config": {"N": cfg.N, "T": cfg.T, "r": cfg.r,
+                            "protocol": "mpc",
+                            "transport": args.transport,
+                            "latency": (args.latency
+                                        if args.transport == "inprocess"
+                                        else None),
+                            "iters": args.iters},
+                 "wait_stats": stats,
+                 "acc_mpc": float(acc)}), f, indent=2)
+    return rc
+
+
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
+
+    if args.protocol == "mpc":
+        return _run_mpc(args)
 
     import jax
 

@@ -1,4 +1,4 @@
-"""CodedPrivateML worker process: serve coded rounds over a socket.
+"""CodedPrivateML worker process: serve coded OR MPC rounds over a socket.
 
     python -m repro.launch.cpml_worker --host 127.0.0.1 --port 9000 --worker 3
 
@@ -8,23 +8,33 @@ message protocol (DESIGN.md §7):
 
   1. PROVISION — an EncodeShare with ``round == PROVISION_ROUND`` carrying
      {cfg kwargs, the worker's coded dataset share X̃_i, sigmoid-surrogate
-     coefficients c̄}.  The worker acks with a Heartbeat once loaded.
-  2. ROUNDS    — each EncodeShare(t, i, {"w_share", "batch"}) is acked with
-     an immediate Heartbeat (liveness), then answered with
-     WorkerResult(t, i, compute_s, payload=f(X̃_i, W̃_i)) — the (d, c) field
-     evaluation of the paper's Eq. 20 polynomial, exact int32 mod p, so the
-     master's decode is bit-identical to computing the round locally.
+     coefficients c̄}.  A ``"protocol": "mpc"`` key selects the BGW serve
+     mode (the share is then a FULL-dataset Shamir share).  The worker acks
+     with a Heartbeat once loaded.
+  2. ROUNDS    — CPML: each EncodeShare(t, i, {"w_share", "batch"}) is
+     acked with an immediate Heartbeat (liveness), then answered with
+     WorkerResult(t, i, compute_s, payload=f(X̃_i, W̃_i)).  MPC: the share
+     carries {"w_share", "kred"}; the worker runs the BGW phases — local
+     multiply, then one all-to-all reshare BARRIER per degree reduction
+     (SubShares exchanged with every peer through the master's relay;
+     combining needs ALL N, so one slow peer stalls this worker too) —
+     and answers with CombineResult(t, i, compute_s, payload=g-share).
+     All field math is exact int32 mod p via the same core/mpc_baseline
+     hooks the single-host oracle composes, so the master's reconstruction
+     is bit-identical to computing the round locally.
   3. SHUTDOWN  — ``round == SHUTDOWN_ROUND`` (or the master hanging up)
      ends the serve loop.
 
 Fault-injection flags make the failure paths deterministic for tests and
 benchmarks: ``--die-at-round R`` simulates a crash (exit without replying
 when round R's share arrives); ``--sleep-s S`` makes this worker a real
-straggler (sleeps S seconds before every reply).
+straggler (sleeps S seconds before every reply — in MPC mode before every
+phase's sends, which stalls EVERY peer at the barrier).
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import math
 import sys
 import time
@@ -37,6 +47,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--worker", type=int, required=True,
                     help="this worker's index i in [0, N)")
     ap.add_argument("--connect-timeout", type=float, default=30.0)
+    ap.add_argument("--barrier-timeout", type=float, default=600.0,
+                    help="seconds to wait at an MPC reshare barrier before "
+                         "giving up (a missing peer means the round can "
+                         "never complete)")
     ap.add_argument("--die-at-round", type=int, default=None,
                     help="crash (exit silently) when this round's share "
                          "arrives — deterministic kill-a-worker injection")
@@ -52,58 +66,140 @@ def serve(args) -> int:
     import numpy as np
 
     from repro.cluster.messages import (
-        MASTER, PROVISION_ROUND, SHUTDOWN_ROUND, EncodeShare, Heartbeat,
-        WorkerResult, worker_endpoint)
+        MASTER, PROVISION_ROUND, SHUTDOWN_ROUND, CombineResult, EncodeShare,
+        Heartbeat, SubShare, WorkerResult, worker_endpoint)
     from repro.cluster.socket_transport import SocketTransport
+    from repro.core import field, mpc_baseline as mpc
     from repro.core.protocol import compute
     from repro.core.protocol.config import CPMLConfig
 
     me = worker_endpoint(args.worker)
     tr = SocketTransport.connect(args.host, args.port, me,
                                  timeout_s=args.connect_timeout)
-    f = None
-    x_share = None
+    pending: collections.deque = collections.deque()
+    subshares: dict[tuple[int, int], dict[int, object]] = {}
+    state: dict[str, object] = {"protocol": None}
+
+    def drain() -> None:
+        """Pull everything off the wire: SubShares into the reshare buffer,
+        EncodeShares into the pending work queue."""
+        for _, msg in tr.recv(me, math.inf):
+            if isinstance(msg, SubShare):
+                subshares.setdefault((msg.round, msg.phase),
+                                     {})[msg.src] = msg.payload
+            elif isinstance(msg, EncodeShare):
+                pending.append(msg)
+
+    def reshare_barrier(cfg, t: int, phase: int, kphase, value):
+        """One BGW degree reduction from this worker's seat: re-share,
+        send a sub-share to every peer, then BLOCK until all N sub-shares
+        for (t, phase) are in and combine."""
+        if args.sleep_s > 0:
+            time.sleep(args.sleep_s)
+        sub = np.asarray(mpc.make_subshares(
+            cfg, mpc.reshare_keys(cfg, kphase)[args.worker], value),
+            np.int32)                                   # (N, *value.shape)
+        for v in range(cfg.N):
+            if v != args.worker:
+                tr.send(worker_endpoint(v),
+                        SubShare(t, phase, args.worker, v, sub[v]))
+        got = {args.worker: sub[args.worker]}
+        deadline = time.monotonic() + args.barrier_timeout
+        while len(got) < cfg.N:
+            for src, payload in subshares.pop((t, phase), {}).items():
+                got[src] = np.asarray(payload, np.int32)
+            if len(got) == cfg.N:
+                break
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"{me}: reshare barrier (round {t}, phase {phase}) "
+                    f"starved: peers {sorted(set(range(cfg.N)) - set(got))} "
+                    f"never re-shared")
+            if tr.next_delivery(me) is not None:
+                drain()
+        gathered = jnp.asarray(np.stack([got[i] for i in range(cfg.N)]),
+                               jnp.int32)
+        return mpc.combine_subshares(cfg, gathered)
+
+    def mpc_round(msg) -> None:
+        cfg, x_share, cbar = state["cfg"], state["x_share"], state["cbar"]
+        t = msg.round
+        t0 = time.monotonic()
+        w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)  # (d, r)
+        kred = np.asarray(msg.payload["kred"])                    # (r+1, 2)
+        z = mpc.worker_mul(cfg, x_share, w_share)                 # (m, r)
+        z = reshare_barrier(cfg, t, 0, jnp.asarray(kred[0]), z)
+        prod = z[..., 0]
+        s = mpc.s_init(cfg, cbar, prod)
+        for i in range(2, cfg.r + 1):
+            prod = field.mulmod(prod, z[..., i - 1], cfg.p)
+            prod = reshare_barrier(cfg, t, i - 1, jnp.asarray(kred[i - 1]),
+                                   prod)
+            s = mpc.s_accum(cfg, cbar[i], s, prod)
+        if args.sleep_s > 0:
+            time.sleep(args.sleep_s)
+        g = np.asarray(mpc.worker_final(cfg, x_share, s), np.int32)
+        tr.send(MASTER, CombineResult(t, args.worker,
+                                      time.monotonic() - t0, g))
+        # reshare traffic for finished rounds can never be consumed again
+        for key in [k for k in subshares if k[0] <= t]:
+            del subshares[key]
+
+    def cpml_round(msg) -> None:
+        t0 = time.monotonic()
+        if args.sleep_s > 0:
+            time.sleep(args.sleep_s)
+        w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)
+        batch = msg.payload.get("batch")
+        x_share = state["x_share"]
+        xb = (x_share if batch is None
+              else jnp.take(x_share, jnp.asarray(batch, jnp.int32),
+                            axis=0))
+        result = np.asarray(state["f"](xb, w_share), dtype=np.int32)
+        tr.send(MASTER,
+                WorkerResult(msg.round, args.worker,
+                             compute_s=time.monotonic() - t0,
+                             payload=result))
+
     try:
         while not tr.peer_closed:
-            if tr.next_delivery(me) is None:
-                continue
-            for _, msg in tr.recv(me, math.inf):
-                if not isinstance(msg, EncodeShare):
+            if not pending:
+                if tr.next_delivery(me) is None:
                     continue
-                if msg.round == SHUTDOWN_ROUND:
-                    return 0
-                if msg.round == PROVISION_ROUND:
-                    p = msg.payload
+                drain()
+                continue
+            msg = pending.popleft()
+            if msg.round == SHUTDOWN_ROUND:
+                return 0
+            if msg.round == PROVISION_ROUND:
+                p = msg.payload
+                if p.get("protocol") == "mpc":
+                    state["protocol"] = "mpc"
+                    state["cfg"] = mpc.MPCConfig(**p["cfg"])
+                    state["cbar"] = jnp.asarray(p["cbar"], jnp.int32)
+                else:
                     # worker compute never needs the sharded backend or the
                     # Pallas kernel: the jnp reference path is the exact
                     # field-arithmetic spec (DESIGN.md §4), identical mod p.
+                    state["protocol"] = "cpml"
                     cfg = CPMLConfig(**p["cfg"])
-                    f = compute.worker_fn(cfg, jnp.asarray(p["cbar"],
-                                                           jnp.int32))
-                    x_share = jnp.asarray(p["x_share"], jnp.int32)
-                    tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
-                    continue
-                if args.die_at_round is not None \
-                        and msg.round >= args.die_at_round:
-                    return 0            # crash: no heartbeat, no result
+                    state["f"] = compute.worker_fn(
+                        cfg, jnp.asarray(p["cbar"], jnp.int32))
+                state["x_share"] = jnp.asarray(p["x_share"], jnp.int32)
                 tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
-                if f is None:
-                    raise RuntimeError(
-                        f"{me}: round {msg.round} share arrived before "
-                        f"provisioning")
-                t0 = time.monotonic()
-                if args.sleep_s > 0:
-                    time.sleep(args.sleep_s)
-                w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)
-                batch = msg.payload.get("batch")
-                xb = (x_share if batch is None
-                      else jnp.take(x_share, jnp.asarray(batch, jnp.int32),
-                                    axis=0))
-                result = np.asarray(f(xb, w_share), dtype=np.int32)
-                tr.send(MASTER,
-                        WorkerResult(msg.round, args.worker,
-                                     compute_s=time.monotonic() - t0,
-                                     payload=result))
+                continue
+            if args.die_at_round is not None \
+                    and msg.round >= args.die_at_round:
+                return 0                # crash: no heartbeat, no result
+            tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
+            if state["protocol"] is None:
+                raise RuntimeError(
+                    f"{me}: round {msg.round} share arrived before "
+                    f"provisioning")
+            if state["protocol"] == "mpc":
+                mpc_round(msg)
+            else:
+                cpml_round(msg)
         return 0
     finally:
         tr.close()

@@ -96,7 +96,6 @@ def main(argv=None, config_override=None):
     key = jax.random.PRNGKey(0)
     params, opt_state, pspecs, ospecs = build_sharded_state(
         cfg, rc, ocfg, mesh, key)
-    loader = LMBatchLoader(mesh, args.batch, args.seq, cfg.vocab_size)
     step_fn = jax.jit(train_step_fn(cfg, rc, ocfg), donate_argnums=(0, 1))
 
     ckpt = CheckpointManager(args.checkpoint_dir)
@@ -115,26 +114,28 @@ def main(argv=None, config_override=None):
 
     state = {"params": params, "opt_state": opt_state}
     loop = ResilientLoop(ckpt, checkpoint_every=args.checkpoint_every)
-    it = iter(loader)
     losses = []
 
-    def one_step(state, step):
-        batch = next(it)
-        t0 = time.time()
-        with rules.use_rules_mesh(mesh, rc.seq_parallel):
-            p, o, metrics = step_fn(state["params"], state["opt_state"],
-                                    batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        if step % args.log_every == 0:
-            print(f"step {step:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):8.3f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"dt {time.time()-t0:6.2f}s", flush=True)
-        return {"params": p, "opt_state": o}
+    # context manager: the prefetch thread is joined even when a step fails
+    with LMBatchLoader(mesh, args.batch, args.seq, cfg.vocab_size) as loader:
+        it = iter(loader)
 
-    state = loop.run(state, one_step, start, args.steps)
-    loader.close()
+        def one_step(state, step):
+            batch = next(it)
+            t0 = time.time()
+            with rules.use_rules_mesh(mesh, rc.seq_parallel):
+                p, o, metrics = step_fn(state["params"], state["opt_state"],
+                                        batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):8.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"dt {time.time()-t0:6.2f}s", flush=True)
+            return {"params": p, "opt_state": o}
+
+        state = loop.run(state, one_step, start, args.steps)
     if args.checkpoint_every:
         ckpt.save(start + args.steps, state)
         ckpt.wait()

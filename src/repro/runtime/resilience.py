@@ -60,6 +60,15 @@ class HeartbeatMonitor:
     def mark_failed(self, worker: int):
         self.workers[worker].alive = False
 
+    def is_dead(self, worker: int, now: float | None = None) -> bool:
+        """The ONE liveness predicate: explicitly failed, or heartbeat-
+        silent beyond the (finite) timeout.  Shared by survivors() and the
+        scheduler's collect-all dead-exit (cluster/scheduler.py), so the
+        failure detector can never drift between call sites."""
+        now = time.time() if now is None else now
+        w = self.workers[worker]
+        return not w.alive or (now - w.last_heartbeat) > self.timeout_s
+
     def revive(self, worker: int, now: float | None = None):
         """Node replacement: fresh worker on a clean latency slate."""
         self.workers[worker] = WorkerState(time.time() if now is None else now)
@@ -72,7 +81,7 @@ class HeartbeatMonitor:
         median = float(np.median(lat)) if lat else 0.0
         good = []
         for i, w in self.workers.items():
-            if not w.alive or (now - w.last_heartbeat) > self.timeout_s:
+            if self.is_dead(i, now=now):
                 continue
             if median > 0 and w.latency_ewma > self.straggler_factor * median:
                 continue           # straggler: exclude from the fast set

@@ -166,6 +166,107 @@ def test_scheduler_starved_round_reports_inf():
     assert math.isinf(trace.t_all)
 
 
+def test_starved_round_finite_deadline_parks_clock_at_deadline():
+    """The master hoped until the timeout: the simulated clock must show
+    the full wait, not just the last arrival it processed."""
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0),
+                            deaths={0: 0, 1: 0})
+    sched = EventScheduler(3, lat)
+    trace = sched.dispatch_round(0, threshold=2, timeout_s=50.0)
+    assert math.isinf(trace.t_first_R)
+    assert sched.clock == pytest.approx(50.0)
+
+
+def test_starved_round_inf_deadline_parks_clock_at_monitor_timeout():
+    """Regression: with timeout_s=inf the `isfinite(deadline)` guard used
+    to skip parking entirely, so downstream heartbeat/recovery logic saw
+    almost no elapsed time for a round the master waited out.  Pinned
+    semantics: an unbounded wait ends when the (finite) failure detector
+    declares the silent workers dead — park the clock there."""
+    from repro.runtime.resilience import HeartbeatMonitor
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0),
+                            deaths={0: 0, 1: 0})
+    sched = EventScheduler(3, lat)
+    mon = HeartbeatMonitor(3, timeout_s=30.0, now=0.0)
+    trace = sched.dispatch_round(0, threshold=2, monitor=mon)
+    assert math.isinf(trace.t_first_R)
+    assert sched.clock == pytest.approx(30.0)            # t0 + detector
+    # ...at which instant the silent workers' staleness has reached the
+    # detector's threshold (any later instant exceeds it)
+    silent = [w for w in (0, 1)
+              if sched.clock - mon.workers[w].last_heartbeat
+              >= mon.timeout_s]
+    assert silent == [0, 1]
+
+
+def test_starved_round_without_any_bound_leaves_clock_at_last_delivery():
+    """No deadline AND no finite failure detector: the wait is
+    unsimulatable; the pinned semantics are 'clock stays at the last
+    delivery' (callers wanting recovery must bound the wait)."""
+    lat = DeadWorkerLatency(DeterministicLatency(base=1.0),
+                            deaths={0: 0, 1: 0})
+    sched = EventScheduler(3, lat)
+    trace = sched.dispatch_round(0, threshold=2)
+    assert math.isinf(trace.t_first_R)
+    # worker 2's result at base * (1 + 0.05 * 2) was the last delivery
+    assert sched.clock == pytest.approx(1.1)
+
+
+# ---------------------------------------------------------------------------
+# Multi-phase MPC rounds (scheduler level; runner-level in test_mpc_cluster)
+# ---------------------------------------------------------------------------
+
+def test_mpc_round_reshare_barrier_is_wait_for_all():
+    """Phase 0 latencies 1..4s: NO final share moves before t=4 — the
+    all-to-all barrier gates everyone on the slowest worker."""
+    sched = EventScheduler(4, DeterministicLatency(base=1.0, skew=1.0))
+    models = [DeterministicLatency(base=1.0, skew=1.0),
+              DeterministicLatency(base=0.5, skew=0.0)]
+    trace = sched.run_mpc_round(0, collect_threshold=3, phase_models=models)
+    assert trace.barriers == [pytest.approx(4.0)]
+    assert trace.t_done == pytest.approx(4.5)
+    assert trace.t_all == pytest.approx(4.5)
+    assert sched.clock == pytest.approx(4.5)
+    assert sorted(map(int, trace.responders[:3])) == [0, 1, 2]
+
+
+def test_mpc_round_subshares_flow_through_transport():
+    """The sim enacts the reshare as real peer messages: every worker's
+    inbox sees a SubShare from every worker for each phase."""
+    from repro.cluster.messages import SubShare
+    tr = InProcessTransport()
+    sched = EventScheduler(3, DeterministicLatency(base=1.0), transport=tr)
+    seen: dict[int, set] = {v: set() for v in range(3)}
+    orig_recv = tr.recv
+
+    def spy(dst, now):
+        out = orig_recv(dst, now)
+        for _, m in out:
+            if isinstance(m, SubShare):
+                seen[m.dst].add((m.phase, m.src))
+        return out
+
+    tr.recv = spy
+    sched.run_mpc_round(0, collect_threshold=3,
+                        phase_models=[DeterministicLatency(base=1.0)] * 3)
+    for v in range(3):
+        assert seen[v] == {(j, s) for j in range(2) for s in range(3)}
+
+
+def test_mpc_round_dead_worker_starves_despite_live_majority():
+    """One dead worker of four: three live workers exceed 2T+1 = 3, but the
+    barrier never completes — BGW has no erasures."""
+    models = [DeadWorkerLatency(DeterministicLatency(), {3: 0}),
+              DeterministicLatency(base=0.5)]
+    sched = EventScheduler(4, models[0])
+    trace = sched.run_mpc_round(0, collect_threshold=3, phase_models=models,
+                                timeout_s=50.0)
+    assert math.isinf(trace.t_done)
+    assert math.isinf(trace.barriers[0])
+    assert len(trace.responders) == 0                    # nobody combined
+    assert sched.clock == pytest.approx(50.0)            # waited it out
+
+
 def test_scheduler_feeds_monitor_on_simulated_clock():
     from repro.runtime.resilience import HeartbeatMonitor
     mon = HeartbeatMonitor(3, timeout_s=100.0, now=0.0)

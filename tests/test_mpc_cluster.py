@@ -1,0 +1,265 @@
+"""MPC-on-the-cluster-runtime acceptance (DESIGN.md §7).
+
+The load-bearing invariant mirrors tests/test_cluster.py's for the coded
+path: MPCClusterRunner — multi-phase rounds through the event scheduler,
+reconstruction at the OBSERVED first 2T+1 arrivals — must produce exactly
+the weights of the single-host ``mpc_baseline`` oracle with the same key,
+on both backends, stragglers included.  The runtime changes the timing of
+a BGW iteration, never what it computes.
+
+The structural claims of the paper's comparison are pinned too: every
+reshare phase is a wait-for-all barrier (a straggler stalls EVERYONE even
+when reconstruction doesn't need its share), and a dead worker starves the
+round outright (no erasure decoding in BGW).
+
+Socket tests spawn N real worker processes and are marked ``slow``.
+"""
+import math
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterDecodeError,
+    DeadWorkerLatency,
+    DeterministicLatency,
+    LognormalTailLatency,
+    MPCClusterRunner,
+    mpc_phase_models,
+)
+from repro.core import field, mpc_baseline as mpc
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def binary_data():
+    return synthetic.mnist_like(jax.random.PRNGKey(42), m=200, d=16)
+
+
+class OneSlow(DeterministicLatency):
+    """Worker ``slow`` always takes ``slow_s``; everyone else ``base``."""
+
+    def __init__(self, slow: int, slow_s: float, base: float = 1.0):
+        super().__init__(base=base, skew=0.01)
+        self.slow = slow
+        self.slow_s = slow_s
+
+    def sample(self, round: int, worker: int) -> float:
+        return self.slow_s if worker == self.slow else super().sample(
+            round, worker)
+
+
+# ---------------------------------------------------------------------------
+# Numerics: subset reconstruction
+# ---------------------------------------------------------------------------
+
+def test_reconstruct_at_any_subset_matches_prefix(key):
+    """Any 2T+1 shares of a degree-2T sharing interpolate to the SAME field
+    element as the first 2T+1 — the exactness that lets the master decode
+    at arrival order."""
+    cfg = mpc.MPCConfig(N=8, T=3)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.randint(k1, (6,), 0, field.P, dtype=jnp.int32)
+    b = jax.random.randint(k2, (6,), 0, field.P, dtype=jnp.int32)
+    prod = field.mulmod(mpc.share(cfg, k1, a), mpc.share(cfg, k2, b),
+                        field.P)                         # degree 2T
+    ref = mpc.reconstruct(cfg, prod, 2 * cfg.T)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        subset = rng.permutation(8)[: 2 * cfg.T + 1]
+        got = mpc.reconstruct_at(cfg, prod[jnp.asarray(subset)], subset)
+        assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# In-process simulation: THE acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_mpc_cluster_bit_identical_with_straggler(binary_data):
+    """N=8 T=3, >= 10 rounds, one injected (alive) straggler: weights
+    bit-identical to the single-host oracle, and the straggler — though
+    never part of the 2T+1 reconstruction — gates every reshare barrier."""
+    x, y = binary_data
+    cfg = mpc.MPCConfig(N=8, T=3, r=1)
+    key = jax.random.PRNGKey(7)
+    slow = 7
+    models = [OneSlow(slow, 6.0), OneSlow(slow, 6.0, base=0.5)]
+    runner = MPCClusterRunner(cfg, key, x, y, models)
+    w = runner.run(10)
+
+    w_ref, _ = mpc.train(cfg, key, x, y, iters=10)
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+
+    for t, trace in runner.traces.items():
+        order = list(map(int, trace.responders[: 2 * cfg.T + 1]))
+        assert slow not in order               # last arrival, never decoded
+        # the barrier waited for the straggler anyway: wait-for-all
+        assert trace.barriers[0] - trace.t_start >= 6.0
+        assert trace.mpc_wait_s >= 6.0 + 0.5   # barrier + fastest final leg
+
+
+def test_mpc_cluster_bit_identical_lognormal_orders_shuffle(binary_data):
+    """Heavy-tailed latency shuffles the arrival order across rounds; the
+    subset reconstruction must track it exactly."""
+    x, y = binary_data
+    cfg = mpc.MPCConfig(N=8, T=3, r=1)
+    key = jax.random.PRNGKey(11)
+    runner = MPCClusterRunner(
+        cfg, key, x, y, mpc_phase_models("lognormal", seed=3, r=cfg.r))
+    w = runner.run(12)
+    orders = {tuple(t.responders[: 7]) for t in runner.traces.values()}
+    assert len(orders) > 1, "latency model produced a constant order"
+    w_ref, _ = mpc.train(cfg, key, x, y, iters=12)
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+
+
+def test_mpc_cluster_r2_has_one_barrier_per_reduction(binary_data):
+    """r=2: two degree reductions -> two reshare barriers per round, each
+    gated on the slowest worker, and bit-identity still holds."""
+    x, y = binary_data
+    cfg = mpc.MPCConfig(N=8, T=2, r=2, p=field.P30)
+    key = jax.random.PRNGKey(5)
+    runner = MPCClusterRunner(
+        cfg, key, x, y, mpc_phase_models("deterministic", r=cfg.r))
+    w = runner.run(3)
+    w_ref, _ = mpc.train(cfg, key, x, y, iters=3)
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+    for trace in runner.traces.values():
+        assert len(trace.barriers) == cfg.r
+        assert trace.barriers[0] < trace.barriers[1] <= trace.t_done
+
+
+def test_mpc_cluster_dead_worker_starves_the_round(binary_data):
+    """BGW cannot treat a dead worker as an erasure: the reshare barrier
+    never completes and the round starves — even though 2T+1 < N live
+    workers could have reconstructed, they never get past the barrier."""
+    x, y = binary_data
+    cfg = mpc.MPCConfig(N=8, T=1, r=1)                   # 2T+1 = 3 << 8
+    models = [DeadWorkerLatency(DeterministicLatency(), {5: 2}),
+              DeterministicLatency(base=0.5)]
+    runner = MPCClusterRunner(cfg, jax.random.PRNGKey(7), x, y, models,
+                              round_timeout_s=60.0)
+    with pytest.raises(ClusterDecodeError):
+        runner.run(10)
+    assert 0 in runner.traces and 1 in runner.traces     # pre-death rounds ok
+    assert 2 not in runner.traces
+
+
+def test_mpc_waits_exceed_coded_waits_under_same_tail(binary_data):
+    """The measured head-to-head the benchmarks aggregate: under the same
+    lognormal tail, BGW's r+1 wait-for-all barriers cost strictly more per
+    round than the coded first-T decode."""
+    from repro.cluster import ClusterRunner
+    from repro.core import protocol
+
+    x, y = binary_data
+    key = jax.random.PRNGKey(7)
+    coded = ClusterRunner(protocol.CPMLConfig(N=8, K=2, T=1, r=1), key, x, y,
+                          LognormalTailLatency(seed=0, tail_prob=0.2,
+                                               tail_scale=10.0))
+    coded.run(10)
+    bgw = MPCClusterRunner(mpc.MPCConfig(N=8, T=1, r=1), key, x, y,
+                           mpc_phase_models("lognormal", seed=0, r=1))
+    bgw.run(10)
+    assert (bgw.wait_stats()["mpc"]["mean"]
+            > coded.wait_stats()["coded_T"]["mean"])
+
+
+# ---------------------------------------------------------------------------
+# Socket backend: real worker processes, relayed reshares (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_socket_mpc_bit_identical_with_straggler(binary_data):
+    """THE socket acceptance criterion: N=8 T=3, 10 rounds over real TCP
+    with one worker process that really sleeps before every phase — the
+    reshare traffic relays through the master, every barrier waits for the
+    sleeper, and the weights are bit-identical to the single-host oracle."""
+    from repro.launch.cpml_cluster import local_socket_cluster
+
+    x, y = binary_data
+    cfg = mpc.MPCConfig(N=8, T=3, r=1)
+    key = jax.random.PRNGKey(7)
+    sleep = 0.3
+    with local_socket_cluster(cfg.N, sleep_s={7: sleep}) as tr:
+        runner = MPCClusterRunner(cfg, key, x, y, None, transport=tr,
+                                  round_timeout_s=300.0)
+        runner.provision()
+        w = runner.run(10)
+        runner.shutdown_workers()
+
+    assert len(runner.traces) == 10
+    w_ref, _ = mpc.train(cfg, key, x, y, iters=10)
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+    # steady-state rounds (0 is jit warmup) are gated on the sleeper: it
+    # sleeps before its sub-share send AND its final send, so every round
+    # costs at least both sleeps even though 2T+1 = 7 arrivals suffice.
+    for t, trace in runner.traces.items():
+        if t == 0:
+            continue
+        assert trace.mpc_wait_s >= 2 * sleep
+
+
+@pytest.mark.slow
+def test_socket_collect_all_exits_when_worker_dies(binary_data):
+    """Regression (pre-fix: infinite spin): dispatch_round(collect_all=True,
+    timeout_s=inf) on a real transport with a worker that died mid-run must
+    exit once the heartbeat monitor declares the silent worker dead, not
+    re-poll forever on `len(arrivals) < len(dispatched)`."""
+    from repro.cluster import ClusterRunner
+    from repro.core import protocol
+    from repro.core.protocol import engine
+    from repro.launch.cpml_cluster import local_socket_cluster
+
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=5, K=1, T=1, r=1)        # threshold 4
+    with local_socket_cluster(cfg.N, die_at_round={0: 1}) as tr:
+        runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                               latency=None, transport=tr,
+                               round_timeout_s=120.0,
+                               heartbeat_timeout_s=3.0)
+        runner.provision()
+        runner.step_round(0, 3)                          # all alive
+        # round 1: worker 0 crashes on receipt — dispatch by hand with the
+        # pathological arguments (the runner itself would clamp timeout)
+        key_t = engine.round_key(runner.kloop, 1)
+        w_shares = np.asarray(engine.encode_round_shares(cfg, key_t,
+                                                         runner.w2))
+        payloads = {w: {"w_share": w_shares[w], "batch": None}
+                    for w in range(cfg.N)}
+        result = {}
+
+        def go():
+            result["trace"] = runner.scheduler.dispatch_round(
+                1, cfg.threshold, monitor=runner.monitor,
+                timeout_s=math.inf, payloads=payloads, collect_all=True)
+
+        th = threading.Thread(target=go, daemon=True)
+        th.start()
+        th.join(timeout=90.0)
+        assert not th.is_alive(), \
+            "collect_all spun forever waiting for a dead worker"
+        trace = result["trace"]
+        assert len(trace.responders) >= cfg.threshold    # decode was fine
+        assert 0 not in trace.arrivals                   # the corpse
+        assert math.isinf(trace.t_all)                   # unobservable
+        runner.shutdown_workers()
+
+
+def test_collect_all_inf_timeout_without_detector_is_refused():
+    """The unfixable configuration is rejected up front: a real-transport
+    collect-all with timeout_s=inf and no (finite) failure detector could
+    never conclude a dead worker's response isn't coming."""
+    from repro.cluster import EventScheduler, SocketTransport
+
+    master = SocketTransport.master(poll_interval_s=0.02)
+    try:
+        sched = EventScheduler(2, latency=None, transport=master)
+        with pytest.raises(ValueError, match="collect_all"):
+            sched.dispatch_round(0, threshold=1, timeout_s=math.inf,
+                                 collect_all=True)
+    finally:
+        master.close()

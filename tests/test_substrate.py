@@ -1,5 +1,6 @@
 """Optimizer, compression, checkpoint, resilience, data, sharding rules."""
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -155,14 +156,25 @@ def test_resilient_loop_restores(tmp_path):
 # ----------------------------- data ---------------------------------------
 
 def test_loader_deterministic_and_shaped():
-    l1 = LMBatchLoader(None, batch=4, seq=16, vocab=100, seed=5)
-    l2 = LMBatchLoader(None, batch=4, seq=16, vocab=100, seed=5)
-    b1, b2 = next(iter(l1)), next(iter(l2))
-    l1.close(), l2.close()
+    with LMBatchLoader(None, batch=4, seq=16, vocab=100, seed=5) as l1, \
+            LMBatchLoader(None, batch=4, seq=16, vocab=100, seed=5) as l2:
+        b1, b2 = next(iter(l1)), next(iter(l2))
     assert b1["tokens"].shape == (4, 16)
     assert np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
     assert np.array_equal(np.asarray(b1["tokens"][:, 1:]),
                           np.asarray(b1["labels"][:, :-1]))
+
+
+def test_loader_close_joins_prefetch_thread():
+    """close() must actually END the daemon producer — even when it is
+    blocked on a full prefetch queue — and be idempotent."""
+    loader = LMBatchLoader(None, batch=2, seq=8, vocab=50, prefetch=1)
+    deadline = time.time() + 5.0
+    while not loader._q.full() and time.time() < deadline:
+        time.sleep(0.01)                 # producer now blocked in put()
+    loader.close()
+    assert not loader._thread.is_alive()
+    loader.close()                       # idempotent
 
 
 # ----------------------------- sharding rules ------------------------------

@@ -1,25 +1,29 @@
 """Backend-shared Transport contract suite (DESIGN.md §7).
 
-One parameterized test class runs the SAME contract against both backends:
-``InProcessTransport`` on a simulated clock and ``SocketTransport`` over a
-real loopback TCP pair.  The contract is written in terms a wall clock can
-satisfy too — delivery ORDER by effective delay, FIFO tiebreak for
-simultaneous sends, ``math.inf`` = lost message, ``recv`` draining only
-messages due by ``now``, and ``next_delivery`` returning None on an empty
-queue — so the scheduler can be retargeted across backends without changing
-semantics.  Before this suite the contract was only pinned for the
-in-process backend (tests/test_cluster.py).
+One parameterized test class runs the SAME contract against both backends
+and both TOPOLOGIES: ``InProcessTransport`` on a simulated clock and
+``SocketTransport`` over a real loopback TCP pair, each as a worker->master
+channel AND as a worker->worker PEER channel (the MPC reshare path — on the
+socket backend peer frames relay through the master inside Forward
+envelopes, so the master must be pumped like its collect loop would).  The
+contract is written in terms a wall clock can satisfy too — delivery ORDER
+by effective delay, FIFO tiebreak for simultaneous sends, ``math.inf`` =
+lost message, ``recv`` draining only messages due by ``now``, and
+``next_delivery`` returning None on an empty queue — so the scheduler can
+be retargeted across backends without changing semantics.
 """
 from __future__ import annotations
 
 import math
 import time
 
+import numpy as np
 import pytest
 
-from repro.cluster.messages import MASTER
+from repro.cluster.messages import MASTER, SubShare
 from repro.cluster.socket_transport import SocketTransport
 from repro.cluster.transport import InProcessTransport
+from repro.cluster import wire
 
 # one "delay unit" per backend: abstract seconds for the simulation, real
 # (but short) seconds for loopback TCP
@@ -33,17 +37,41 @@ class Chan:
 
     For the in-process backend producer and consumer are the same transport
     object; for the socket backend the producer is a connected client and
-    the consumer the master endpoint — the pair IS the transport.
+    the consumer the master endpoint — the pair IS the transport.  The
+    ``peer-*`` variants make BOTH ends workers: in-process that is just a
+    different destination name; on the socket backend the frames hop
+    through the master's relay, which only forwards while the master polls
+    (as its collect loop perpetually does) — ``_pump`` stands in for that.
     """
 
     def __init__(self, backend: str):
         self.backend = backend
+        self._pump = None
         if backend == "inprocess":
             self.unit = SIM_UNIT
             tr = InProcessTransport()
             self.producer = self.consumer = tr
             self.dst = MASTER
             self._to_close = []
+        elif backend == "peer-inprocess":
+            self.unit = SIM_UNIT
+            tr = InProcessTransport()
+            self.producer = self.consumer = tr
+            self.dst = "worker/1"
+            self._to_close = []
+        elif backend == "peer-socket":
+            self.unit = REAL_UNIT
+            master = SocketTransport.master(poll_interval_s=0.02)
+            w0 = SocketTransport.connect("127.0.0.1", master.port,
+                                         "worker/0", poll_interval_s=0.02)
+            w1 = SocketTransport.connect("127.0.0.1", master.port,
+                                         "worker/1", poll_interval_s=0.02)
+            master.wait_for_endpoints(["worker/0", "worker/1"],
+                                      timeout_s=WAIT_S)
+            self.producer, self.consumer = w0, w1
+            self.dst = "worker/1"
+            self._pump = lambda: master.recv(MASTER, time.monotonic())
+            self._to_close = [w0, w1, master]
         else:
             self.unit = REAL_UNIT
             master = SocketTransport.master(poll_interval_s=0.02)
@@ -68,10 +96,14 @@ class Chan:
     def next_delivery(self, wait: bool = True) -> float | None:
         """The contract call, plus the real-clock polling the scheduler does:
         on a wall clock None means "nothing YET", so callers poll."""
+        if self._pump is not None:
+            self._pump()
         nxt = self.consumer.next_delivery(self.dst)
         if nxt is None and self.real and wait:
             deadline = time.monotonic() + WAIT_S
             while nxt is None and time.monotonic() < deadline:
+                if self._pump is not None:
+                    self._pump()
                 nxt = self.consumer.next_delivery(self.dst)
         return nxt
 
@@ -83,7 +115,8 @@ class Chan:
             tr.close()
 
 
-@pytest.fixture(params=["inprocess", "socket"])
+@pytest.fixture(params=["inprocess", "socket", "peer-inprocess",
+                        "peer-socket"])
 def chan(request):
     c = Chan(request.param)
     yield c
@@ -142,3 +175,94 @@ class TestTransportContract:
         assert nxt is not None
         chan.recv(now=nxt)
         assert chan.next_delivery(wait=False) is None
+
+    def test_subshare_payload_survives_peer_delivery(self, chan):
+        """The MPC reshare unit: a SubShare with a field-array payload must
+        arrive intact over every channel (on peer-socket that includes the
+        Forward-envelope relay hop through the master)."""
+        payload = np.arange(24, dtype=np.int32).reshape(6, 4)
+        chan.send(SubShare(3, 0, src=0, dst=1, payload=payload))
+        nxt = chan.next_delivery()
+        assert nxt is not None
+        (got,) = chan.recv(now=nxt)
+        assert isinstance(got, SubShare)
+        assert (got.round, got.phase, got.src, got.dst) == (3, 0, 0, 1)
+        assert got.payload.dtype == np.int32
+        assert (got.payload == payload).all()
+
+
+def test_forward_envelope_round_trips():
+    """The relay envelope itself is a wire frame: dst + verbatim inner
+    frame bytes."""
+    inner = wire.serialize(SubShare(1, 0, 2, 3,
+                                    np.arange(4, dtype=np.int32)))
+    fwd = wire.deserialize(wire.serialize(wire.Forward("worker/3", inner)))
+    assert isinstance(fwd, wire.Forward)
+    assert fwd.dst == "worker/3" and fwd.frame == inner
+    got = wire.deserialize(fwd.frame)
+    assert isinstance(got, SubShare) and got.dst == 3
+
+
+def test_relay_survives_slow_reader_beyond_socket_buffers():
+    """A recipient that stops reading (an alive MPC straggler mid-sleep)
+    must only DELAY its relayed frames, never lose or corrupt them: the
+    per-destination outbox parks whole frames the destination socket won't
+    accept and flushes on later polls — a drop-after-stall heuristic here
+    would turn a tolerable straggle into a starved reshare barrier, and a
+    mid-frame drop would desynchronize the stream permanently."""
+    master = SocketTransport.master(poll_interval_s=0.02)
+    w0 = SocketTransport.connect("127.0.0.1", master.port, "worker/0",
+                                 poll_interval_s=0.02)
+    w1 = SocketTransport.connect("127.0.0.1", master.port, "worker/1",
+                                 poll_interval_s=0.02)
+    try:
+        master.wait_for_endpoints(["worker/0", "worker/1"], timeout_s=WAIT_S)
+        # several MB of relayed frames — far beyond default kernel socket
+        # buffers — while worker/1 never touches its transport.  The master
+        # is pumped during the sends (as its collect loop always would be),
+        # so the w0->master leg drains and the backlog piles up on the
+        # master->w1 leg, which is exactly the relay's responsibility.
+        n, payload = 16, np.zeros(1 << 16, dtype=np.int32)
+        for i in range(n):
+            w0.send("worker/1", SubShare(0, 0, 0, 1, payload + i))
+            for _ in range(12):
+                master.recv(MASTER, time.monotonic())  # pump: relay + flush
+        # a DIRECT master send while relayed frames sit (possibly half-
+        # flushed) in the outbox: it must queue BEHIND them, whole — never
+        # interleave into the middle of a partially written frame
+        from repro.cluster.messages import EncodeShare
+        master.send("worker/1", EncodeShare(9, 1, None))
+        got = []
+        deadline = time.monotonic() + 60.0
+        while len(got) < n + 1 and time.monotonic() < deadline:
+            master.recv(MASTER, time.monotonic())     # pump: flush outbox
+            got += [m for _, m in w1.recv("worker/1", time.monotonic())]
+        assert len(got) == n + 1, f"dropped {n + 1 - len(got)} frames"
+        subs, rest = got[:n], got[n:]
+        assert [int(m.payload[0]) for m in subs] == list(range(n))  # in order
+        assert isinstance(rest[0], EncodeShare) and rest[0].round == 9
+    finally:
+        w0.close()
+        w1.close()
+        master.close()
+
+
+def test_relay_to_unknown_endpoint_is_dropped():
+    """A Forward to a never-registered (or dead) endpoint vanishes — the
+    same lost-in-the-void semantics as any send to a dead peer — and must
+    not wedge or crash the relaying master."""
+    master = SocketTransport.master(poll_interval_s=0.02)
+    w0 = SocketTransport.connect("127.0.0.1", master.port, "worker/0",
+                                 poll_interval_s=0.02)
+    try:
+        master.wait_for_endpoints(["worker/0"], timeout_s=WAIT_S)
+        w0.send("worker/9", "into the void")
+        w0.send(MASTER, "still alive")
+        deadline = time.monotonic() + WAIT_S
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = [m for _, m in master.recv(MASTER, time.monotonic())]
+        assert got == ["still alive"]
+    finally:
+        w0.close()
+        master.close()

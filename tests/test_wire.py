@@ -12,7 +12,8 @@ import numpy as np
 import pytest
 
 from repro.cluster import wire
-from repro.cluster.messages import EncodeShare, Heartbeat, WorkerResult
+from repro.cluster.messages import (CombineResult, EncodeShare, Heartbeat,
+                                    SubShare, WorkerResult)
 from repro.core import field
 
 
@@ -60,6 +61,43 @@ def test_none_and_empty_payloads_roundtrip():
 def test_heartbeat_and_hello_roundtrip():
     roundtrip(Heartbeat(5, 123.456))
     roundtrip(wire.Hello("worker/5"))
+
+
+@pytest.mark.parametrize("p", [field.P, field.P30])
+def test_subshare_field_array_roundtrip(p):
+    """The MPC reshare unit for BOTH primes: (m, r) degree-T sub-shares."""
+    rng = np.random.default_rng(3)
+    payload = rng.integers(0, p, size=(19, 2), dtype=np.int64).astype(np.int32)
+    out = roundtrip(SubShare(6, 1, src=2, dst=5, payload=payload))
+    assert (out.round, out.phase, out.src, out.dst) == (6, 1, 2, 5)
+    assert out.payload.dtype == np.int32
+    assert (0 <= out.payload).all() and (out.payload < p).all()
+
+
+def test_combine_result_roundtrip():
+    rng = np.random.default_rng(4)
+    payload = rng.integers(0, field.P, size=(13,)).astype(np.int32)
+    out = roundtrip(CombineResult(9, 4, 0.75, payload))
+    assert (out.round, out.worker, out.compute_s) == (9, 4, 0.75)
+    assert (out.payload == payload).all()
+    roundtrip(CombineResult(0, 0, 0.0, None))
+
+
+def test_forward_envelope_roundtrip_and_rejection():
+    inner = wire.serialize(SubShare(1, 0, 0, 3, np.arange(6, dtype=np.int32)))
+    out = roundtrip(wire.Forward("worker/3", inner))
+    assert wire.messages_equal(wire.deserialize(out.frame),
+                               wire.deserialize(inner))
+    # a Forward whose fields are the wrong types is malformed, not garbage
+    bad = wire.serialize(wire.Forward("worker/3", inner))
+    # surgically corrupt: re-encode with an int dst via the raw encoder
+    out_parts = [bytes([0x15])]
+    wire._enc_value(7, out_parts)          # dst must be str
+    wire._enc_value(b"xx", out_parts)
+    body = b"".join(out_parts)
+    with pytest.raises(wire.WireError, match="Forward"):
+        wire.deserialize(wire._enc_u32(len(body)) + body)
+    assert wire.deserialize(bad) is not None   # the intact one still decodes
 
 
 def test_exact_python_int_matrix_roundtrip():

@@ -13,8 +13,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.cluster import wire  # noqa: E402
 from repro.cluster.messages import (  # noqa: E402
+    CombineResult,
     EncodeShare,
     Heartbeat,
+    SubShare,
     WorkerResult,
 )
 from repro.core import field  # noqa: E402
@@ -56,6 +58,12 @@ messages = st.one_of(
               compute_s=st.floats(allow_nan=False), payload=values),
     st.builds(Heartbeat, worker=st.integers(0, 10 ** 4),
               sent_at=st.floats(allow_nan=False)),
+    st.builds(SubShare, round=st.integers(0, 10 ** 6),
+              phase=st.integers(0, 16), src=st.integers(0, 10 ** 4),
+              dst=st.integers(0, 10 ** 4), payload=values),
+    st.builds(CombineResult, round=st.integers(0, 10 ** 6),
+              worker=st.integers(0, 10 ** 4),
+              compute_s=st.floats(allow_nan=False), payload=values),
 )
 
 
