@@ -17,6 +17,15 @@ pre-PR-4 analytic counterfactual (r+1 closed-form max-over-workers terms)
 is preserved under each model's ``modeled`` key so the bench trajectory is
 not silently redefined.
 
+PIPELINED vs SEQUENTIAL (DESIGN.md §9): the same latency models drive the
+round engine with ``--pipeline off`` vs ``full`` under modeled master-side
+encode/decode costs charged to the simulated clock.  Latency samples are
+(round, worker)-keyed and order-independent, so both runs observe the SAME
+responder traces and produce bit-identical weights — the comparison
+isolates exactly the critical-path time pipelining removes (the mask-row
+encode fraction and all but one decode fold).  Acceptance requires
+pipelined <= sequential per-round critical path under lognormal and bursty.
+
 Also times the on-device compute of one coded round vs one MPC step (same
 data, same quantization) for the device-side of the story.
 
@@ -48,6 +57,12 @@ from repro.data import synthetic
 
 N_WORKERS = 8
 MODELS = ("deterministic", "lognormal", "bursty")
+# modeled master-side coding costs charged to the simulated clock for the
+# pipelined-vs-sequential comparison (a realistic fraction of the ~1s mean
+# worker latency the models draw; the WAIT component is identical between
+# modes, so any positive cost isolates the pipelining effect)
+ENCODE_COST_S = 0.2
+DECODE_COST_S = 0.1
 
 
 def simulate_mpc_waits(name: str, seed: int, iters: int, r: int
@@ -105,6 +120,45 @@ def bench_model(name: str, cfg, mpc_cfg, x, y, iters: int, seed: int
     return entry
 
 
+def bench_pipeline(name: str, cfg, x, y, iters: int, seed: int) -> dict:
+    """Pipelined vs sequential per-round critical path under one latency
+    model (DESIGN.md §9).  Order-independent latency sampling makes the
+    responder traces — and therefore the weights — identical between
+    modes; only the master-side encode/decode charges differ."""
+    runs: dict[str, dict] = {}
+    weights: dict[str, np.ndarray] = {}
+    for mode in ("off", "full"):
+        runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                               make_latency(name, seed=seed),
+                               pipeline=mode,
+                               encode_cost_s=ENCODE_COST_S,
+                               decode_cost_s=DECODE_COST_S)
+        weights[mode] = np.asarray(runner.run(iters))
+        stats = runner.wait_stats()
+        runs[mode] = {"critical_path": stats["critical_path"],
+                      "encode": stats["encode"],
+                      "decode": stats["decode"],
+                      "streamed_rounds": stats["rounds"]["streamed"],
+                      "prefetched_rounds": stats["rounds"]["prefetched"]}
+    speedup = (runs["off"]["critical_path"]["mean"]
+               / runs["full"]["critical_path"]["mean"])
+    entry = {
+        "sequential": runs["off"],
+        "pipelined": runs["full"],
+        "encode_cost_s": ENCODE_COST_S,
+        "decode_cost_s": DECODE_COST_S,
+        "critical_path_speedup": float(speedup),
+        "bit_identical_modes": bool((weights["off"]
+                                     == weights["full"]).all()),
+    }
+    emit(f"cluster_pipeline/{name}/critical_path",
+         runs["full"]["critical_path"]["mean"] * 1e6,
+         f"vs sequential {runs['off']['critical_path']['mean']:.3f}s "
+         f"({speedup:.3f}x, bit_identical="
+         f"{entry['bit_identical_modes']})")
+    return entry
+
+
 def bench_compute(cfg, mpc_cfg, x, y) -> dict:
     """On-device wall time: one coded round vs one BGW MPC step."""
     key = jax.random.PRNGKey(0)
@@ -141,6 +195,9 @@ def main(argv=None) -> int:
 
     models = {name: bench_model(name, cfg, mpc_cfg, x, y, iters, args.seed)
               for name in MODELS}
+    for name in MODELS:
+        models[name]["pipeline"] = bench_pipeline(name, cfg, x, y, iters,
+                                                  args.seed)
     report = {
         "device": jax.default_backend(),
         "shapes": {"m": m, "d": d, "N": N_WORKERS,
@@ -159,6 +216,18 @@ def main(argv=None) -> int:
                for name in ("lognormal", "bursty")},
             **{f"{name}_measured_mpc_speedup_gt_1":
                bool(models[name]["speedup_vs_mpc"] > 1.0)
+               for name in ("lognormal", "bursty")},
+            # DESIGN.md §9: overlapping the W-independent encode half and
+            # streaming the decode must never cost critical-path time, and
+            # must not change a single bit of the weights
+            **{f"{name}_pipelined_not_slower": bool(
+                models[name]["pipeline"]["pipelined"]["critical_path"]
+                ["mean"]
+                <= models[name]["pipeline"]["sequential"]["critical_path"]
+                ["mean"])
+               for name in ("lognormal", "bursty")},
+            **{f"{name}_pipeline_bit_identical":
+               bool(models[name]["pipeline"]["bit_identical_modes"])
                for name in ("lognormal", "bursty")},
         },
     }

@@ -114,15 +114,27 @@ def main(argv=None) -> int:
         os.path.dirname(__file__), "..", "BENCH_protocol.json"))
     ap.add_argument("--m", type=int, default=DEFAULT_M)
     ap.add_argument("--d", type=int, default=DEFAULT_D)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + the first two settings (CI tier-1:"
+                         " exercises the full bench path and enforces the "
+                         "acceptance flags on every push)")
     args = ap.parse_args(argv)
 
+    settings_sweep = DEFAULT_SETTINGS
+    if args.smoke:
+        settings_sweep = DEFAULT_SETTINGS[:2]
+        if args.m == DEFAULT_M:
+            args.m = 256
+        if args.d == DEFAULT_D:
+            args.d = 64
     mesh = jax.make_mesh((N_WORKERS,), ("workers",))
     settings = [bench_setting(K, T, r, c, args.m, args.d, mesh)
-                for (K, T, r, c) in DEFAULT_SETTINGS]
+                for (K, T, r, c) in settings_sweep]
     report = {
         "device": jax.default_backend(),
         "pallas_compiled": jax.default_backend() != "cpu",
         "shapes": {"m": args.m, "d": args.d, "N": N_WORKERS},
+        "smoke": args.smoke,
         "settings": settings,
         "kernel_not_slower": bool(all(s["fused_not_slower"]
                                       for s in settings)),
@@ -131,7 +143,9 @@ def main(argv=None) -> int:
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out}  kernel_not_slower={report['kernel_not_slower']}")
-    return 0
+    # the acceptance flags gate CI: a fused kernel that got slower than its
+    # unfused oracle (beyond the 1.15x noise headroom) fails the job
+    return 0 if report["kernel_not_slower"] else 1
 
 
 if __name__ == "__main__":

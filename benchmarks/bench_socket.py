@@ -14,7 +14,16 @@ Two questions about the live backend (DESIGN.md §7):
      ``collect_all`` keeps each round open so both completion times are
      observed on the same wall clock — the paper's Fig. 5 effect with real
      network and real stragglers, not sampled latencies.
-  3. CPML vs MEASURED MPC — the BGW baseline run head-to-head over the
+  3. PIPELINED vs SEQUENTIAL — the same straggled cluster driven with
+     ``pipeline="full"`` (DESIGN.md §9): a prefetch thread builds the next
+     round's masks/batch/decode-coefficients during the wait and the
+     streaming decoder folds shares as they arrive (the stable fast subset
+     makes its prediction hit).  The master-side encode+decode component
+     of the critical path is measured per round on the wall clock;
+     acceptance gates on the machinery engaging and on bit-identity (the
+     deterministic pipelined-not-slower contract is bench_cluster.py's,
+     on the simulated clock — see the pipeline_cmp comment).
+  4. CPML vs MEASURED MPC — the BGW baseline run head-to-head over the
      SAME sockets with the same sleeping straggler (cluster/mpc_runner.py):
      the straggler's sleep gates every reshare barrier AND its final share
      send, so each BGW iteration pays it r+1 times while the coded round
@@ -70,13 +79,15 @@ def bench_inprocess(cfg, x, y, iters: int) -> dict:
     return {"wall_s_per_round": per_round, "rounds": iters - 1}
 
 
-def bench_socket(cfg, x, y, iters: int, sleep_s: float | None) -> dict:
+def bench_socket(cfg, x, y, iters: int, sleep_s: float | None,
+                 pipeline: str = "off") -> dict:
     straggler = {cfg.N - 1: sleep_s} if sleep_s else None
     with local_socket_cluster(cfg.N, sleep_s=straggler) as tr:
         runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
                                latency=None, transport=tr,
                                round_timeout_s=300.0,
-                               collect_all=sleep_s is not None)
+                               collect_all=sleep_s is not None,
+                               pipeline=pipeline)
         runner.provision()
         t0 = time.perf_counter()
         w = runner.run(iters)
@@ -100,6 +111,14 @@ def bench_socket(cfg, x, y, iters: int, sleep_s: float | None) -> dict:
         "wall_s_total": wall,
         "coded_T": coded,
         "full_round": wait_summary(full),
+        # measured master-side components (DESIGN.md §9): where each
+        # steady-state round's non-wait time went
+        "encode": wait_summary([r.encode_s for r in recs]),
+        "decode": wait_summary([r.decode_s for r in recs]),
+        "critical_path": wait_summary([r.critical_path_s for r in recs]),
+        "streamed_rounds": int(sum(r.streamed for r in recs)),
+        "prefetched_rounds": int(sum(r.prefetched for r in recs)),
+        "pipeline": pipeline,
         "bit_identical": identical,
         "rounds": len(recs),
     }
@@ -107,11 +126,11 @@ def bench_socket(cfg, x, y, iters: int, sleep_s: float | None) -> dict:
         allw = [r.all_wait_s for r in recs if math.isfinite(r.all_wait_s)]
         entry["wait_all"] = wait_summary(allw)
         entry["straggler_sleep_s"] = sleep_s
-        emit("socket/straggler_round", coded["mean"] * 1e6,
+        emit(f"socket/straggler_round[{pipeline}]", coded["mean"] * 1e6,
              f"vs wait_all {entry['wait_all']['mean']:.3f}s "
              f"(sleep {sleep_s}s)")
     else:
-        emit("socket/live_round", coded["mean"] * 1e6,
+        emit(f"socket/live_round[{pipeline}]", coded["mean"] * 1e6,
              f"bit_identical={identical}")
     return entry
 
@@ -170,6 +189,12 @@ def main(argv=None) -> int:
     inproc = bench_inprocess(cfg, x, y, iters)
     live = bench_socket(cfg, x, y, iters, sleep_s=None)
     straggled = bench_socket(cfg, x, y, iters, sleep_s=args.sleep_s)
+    # the pipelined engine under the same real straggler: the stable fast
+    # subset makes the streaming prediction hit, and the prefetch thread
+    # hides the mask-row encode — compare the master-side (non-wait)
+    # critical-path components, which is what pipelining shrinks
+    straggled_pipe = bench_socket(cfg, x, y, iters, sleep_s=args.sleep_s,
+                                  pipeline="full")
     # BGW head-to-head at its max honest-majority privacy T = (N-1)/2
     # (higher than the coded run's T — faithfully noted, paper §5)
     mpc_cfg = mpc_baseline.MPCConfig(N=n, T=(n - 1) // 2, r=1)
@@ -181,6 +206,28 @@ def main(argv=None) -> int:
     overhead = (live["full_round"]["mean"] - inproc["wall_s_per_round"])
     speedup_vs_mpc_live = (mpc_live["mpc_round"]["mean"]
                            / straggled["coded_T"]["mean"])
+    master_seq = (straggled["encode"]["mean"] + straggled["decode"]["mean"])
+    master_pipe = (straggled_pipe["encode"]["mean"]
+                   + straggled_pipe["decode"]["mean"])
+    pipeline_cmp = {
+        # per-round master-side (encode + decode) seconds on the critical
+        # path — the wait itself is identical policy in both runs, so this
+        # is the honest attribution of the pipelining effect on a wall
+        # clock.  MEASUREMENT, not acceptance: these are ms-scale
+        # components on a box running N worker processes, and swing 2-3x
+        # between runs under CPU contention — the enforceable
+        # pipelined-not-slower contract lives in bench_cluster.py's
+        # simulated clock, where the comparison is deterministic.  The
+        # acceptance here is structural: the pipeline machinery must have
+        # actually engaged (every round prefetched, the streaming fold hit
+        # at least once against the stable fast subset) and stayed
+        # bit-identical.
+        "sequential_master_s": master_seq,
+        "pipelined_master_s": master_pipe,
+        "master_speedup": master_seq / max(master_pipe, 1e-12),
+        "streamed_rounds": straggled_pipe["streamed_rounds"],
+        "prefetched_rounds": straggled_pipe["prefetched_rounds"],
+    }
     report = {
         "device": jax.default_backend(),
         "shapes": {"m": m, "d": d, "N": n, "K": k,
@@ -190,6 +237,8 @@ def main(argv=None) -> int:
         "in_process": inproc,
         "socket": live,
         "socket_straggler": straggled,
+        "socket_straggler_pipelined": straggled_pipe,
+        "pipeline": pipeline_cmp,
         "socket_mpc": mpc_live,
         "transport_overhead_s_per_round": overhead,
         "speedup_vs_mpc_live": speedup_vs_mpc_live,
@@ -206,6 +255,16 @@ def main(argv=None) -> int:
             # more wall time than coded rounds
             "coded_below_measured_mpc": bool(speedup_vs_mpc_live > 1.0),
             "mpc_bit_identical": bool(mpc_live["bit_identical"]),
+            # structural: the overlap machinery engaged on every round and
+            # the incremental fold fired against the stable fast subset
+            # (see pipeline_cmp comment for why the TIMING comparison is
+            # reported but not gated on a live wall clock)
+            "pipelined_engaged": bool(
+                straggled_pipe["prefetched_rounds"]
+                == straggled_pipe["rounds"]
+                and straggled_pipe["streamed_rounds"] >= 1),
+            "pipelined_bit_identical": bool(
+                straggled_pipe["bit_identical"]),
         },
     }
     out = os.path.abspath(args.out)

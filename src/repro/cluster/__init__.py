@@ -24,11 +24,17 @@ Modules:
                        advance/await the next arrival -> decode at the
                        threshold-th result; records first-T vs wait-all
                        completion times per round
+  pipeline.py          pipelined round engine (DESIGN.md §9): a one-round-
+                       ahead prefetch thread building each round's
+                       W-independent context (fresh masks + their encoded
+                       contribution, batch draw, predicted-order decode
+                       coefficients) while the previous round is in flight
   runner.py            ClusterRunner: drives core/protocol rounds through
                        the scheduler — simulated workers via round_fn, or
                        real worker processes (launch/cpml_worker.py) whose
                        serialized results feed engine.update_fn —
-                       integrates runtime/resilience
+                       integrates runtime/resilience; --pipeline modes
+                       overlap encode/decode with in-flight compute
   mpc_runner.py        MPCClusterRunner: the BGW MPC baseline as a real
                        distributed protocol over the SAME runtime — r+1
                        all-to-all reshare barriers per iteration (SubShare
@@ -62,6 +68,11 @@ from repro.cluster.messages import (
     worker_endpoint,
 )
 from repro.cluster.mpc_runner import MPCClusterRunner, mpc_phase_models
+from repro.cluster.pipeline import (
+    PIPELINE_MODES,
+    RoundContext,
+    RoundPrefetcher,
+)
 from repro.cluster.runner import ClusterRunner, RoundRecord, wait_summary
 from repro.cluster.scheduler import (
     Clock,
@@ -94,6 +105,9 @@ __all__ = [
     "LognormalTailLatency",
     "MPCClusterRunner",
     "MPCRoundTrace",
+    "PIPELINE_MODES",
+    "RoundContext",
+    "RoundPrefetcher",
     "RoundRecord",
     "RoundTrace",
     "SimClock",

@@ -29,8 +29,10 @@ Resilience integration (runtime/resilience.py):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
+import time as _time
 from typing import Callable
 
 import jax
@@ -46,9 +48,10 @@ from repro.cluster.messages import (
     Heartbeat,
     worker_endpoint,
 )
+from repro.cluster.pipeline import PIPELINE_MODES, RoundContext, RoundPrefetcher
 from repro.cluster.scheduler import ClusterDecodeError, EventScheduler, RoundTrace
 from repro.cluster.transport import Transport
-from repro.core.protocol import engine
+from repro.core.protocol import decode, engine
 from repro.core.protocol.config import CPMLConfig
 from repro.runtime.resilience import HeartbeatMonitor, ResilientLoop
 
@@ -98,6 +101,14 @@ class RoundRecord:
     coded_wait_s: float          # wait-for-fastest-T (the paper's policy)
     all_wait_s: float            # wait-for-all counterfactual (inf = dead)
     replayed: bool = False       # True when re-run after a restore
+    encode_s: float = 0.0        # master encode on the critical path
+    decode_s: float = 0.0        # master decode+step on the critical path
+    prefetched: bool = False     # W-independent half built ahead of time
+    streamed: bool = False       # decode was the incremental fold (hit)
+
+    @property
+    def critical_path_s(self) -> float:
+        return self.encode_s + self.coded_wait_s + self.decode_s
 
 
 class ClusterRunner:
@@ -116,6 +127,30 @@ class ClusterRunner:
         the round's weight shares, decodes the first-``threshold`` received
         payloads via ``engine.update_fn``, and the wall clock replaces the
         simulated clock.  ``provision()`` must run once before rounds.
+
+    Pipelining (DESIGN.md §9) — ``pipeline`` selects how much master-side
+    work leaves the critical path; every mode stays bit-identical to
+    ``train_reference`` on the observed trace:
+
+      * ``"off"``       — the sequential loop: encode -> dispatch -> wait ->
+        decode, all serial.
+      * ``"prefetch"``  — a RoundPrefetcher thread builds round t+1's
+        W-independent context (key split, fresh masks + their encoded
+        contribution, batch draw, decode-coefficient prefixes) while round
+        t is in flight; the critical path keeps only the W-dependent encode
+        half.
+      * ``"streaming"`` — decode.StreamingDecoder folds each share into the
+        Lagrange reconstruction as it arrives (predicted-order coefficient
+        columns); after the threshold-th arrival only ONE fold remains.
+      * ``"full"``      — both.
+
+    On a real transport the overlap is EXECUTED (threads + incremental
+    folds, components measured on the wall clock); in simulation it is
+    MODELED — ``encode_cost_s``/``decode_cost_s`` are charged to the
+    SimClock, scaled down by what each mode hides: prefetch leaves the
+    K/(K+T) data-row fraction of the encode; streaming leaves 1/threshold
+    of the decode on rounds whose subset prediction hits, and the FULL
+    decode cost on misses (the fallback batch decode a real decoder pays).
     """
 
     def __init__(self, cfg: CPMLConfig, key, x, y,
@@ -127,19 +162,33 @@ class ClusterRunner:
                  straggler_factor: float = 3.0,
                  master_overhead_s: float = 0.0,
                  exclude_stragglers: bool = True,
-                 collect_all: bool = False):
+                 collect_all: bool = False,
+                 pipeline: str = "off",
+                 encode_cost_s: float = 0.0,
+                 decode_cost_s: float = 0.0):
         # heartbeat_timeout_s defaults to inf: in the simulation, true
         # deaths surface as round starvation (-> mark_failed) and slowness
         # as the EWMA straggler stat; a finite timeout models a gossip-style
         # failure detector and must exceed the worst healthy round, or a
         # single long round makes healthy-but-quiet workers look dead.
+        assert pipeline in PIPELINE_MODES, (
+            f"pipeline={pipeline!r} not in {PIPELINE_MODES}")
         self.cfg = cfg
         ksetup, self.kloop = jax.random.split(key)
         self.state = engine.setup(cfg, ksetup, x, y)
         self.eta = (engine.lipschitz_eta(self.state.xq_real)
                     if eta is None else eta)
         self._round = engine.round_fn(cfg, self.state, self.eta)
+        self._round_split = engine.round_fn_split(cfg, self.state, self.eta)
         self._update = engine.update_fn(cfg, self.state, self.eta)
+        self._update_parts = engine.update_from_parts_fn(cfg, self.state,
+                                                         self.eta)
+        self.pipeline = pipeline
+        self.encode_cost_s = encode_cost_s
+        self.decode_cost_s = decode_cost_s
+        self._w_shape = (x.shape[1], cfg.c)       # internal w2 shape
+        self._prefetcher: RoundPrefetcher | None = None
+        self._last_order: np.ndarray | None = None    # prediction source
         self.latency = latency
         self.round_timeout_s = round_timeout_s
         self.exclude_stragglers = exclude_stragglers
@@ -161,6 +210,78 @@ class ClusterRunner:
     def distributed(self) -> bool:
         """True when real worker processes compute (socket transport)."""
         return self.latency is None
+
+    # ------------------------------------------------------------------
+    # Pipeline plumbing (DESIGN.md §9)
+    # ------------------------------------------------------------------
+
+    @property
+    def prefetching(self) -> bool:
+        return self.pipeline in ("prefetch", "full")
+
+    @property
+    def streaming(self) -> bool:
+        return self.pipeline in ("streaming", "full")
+
+    def _predicted_order(self) -> np.ndarray | None:
+        """Forecast next round's responder order: last round's arrivals.
+
+        Read racily by the prefetch thread — the prediction only steers
+        which decode coefficients are precomputed/folded eagerly, never
+        which decode runs, so staleness costs a fallback, not correctness.
+        """
+        return self._last_order
+
+    def _build_ctx(self, t: int, iters: int) -> RoundContext:
+        """Round t's W-independent context (runs on the prefetch thread)."""
+        cfg = self.cfg
+        key_t = engine.round_key(self.kloop, t)
+        kq, mask_shares = engine.round_mask_context(cfg, key_t, self._w_shape)
+        bidx = next_np = None
+        if cfg.batch_rows is not None:
+            bidx = engine.draw_batch(cfg, self.kloop, iters,
+                                     self.state.mk, t)
+            if self.distributed and t + 1 < iters:
+                # round t+1's indices ride in round t's dispatch so the
+                # workers pre-slice their coded sub-batch while idle
+                next_np = np.asarray(engine.draw_batch(
+                    cfg, self.kloop, iters, self.state.mk, t + 1))
+        plan = (decode.prefix_decode_plan(cfg, self._predicted_order())
+                if self.streaming else None)
+        return RoundContext(t=t, kq=kq,
+                            mask_shares=np.asarray(mask_shares),
+                            batch_idx=bidx, plan=plan, next_batch=next_np)
+
+    def _pipeline_scope(self, iters: int):
+        """Context manager owning the prefetch thread for one training run."""
+        if not self.prefetching:
+            return contextlib.nullcontext()
+        self._prefetcher = RoundPrefetcher(
+            lambda t: self._build_ctx(t, iters), start=0, stop=iters)
+
+        @contextlib.contextmanager
+        def scope():
+            try:
+                yield
+            finally:
+                self._prefetcher.close()
+                self._prefetcher = None
+
+        return scope()
+
+    def _sim_charges(self) -> tuple[float, float]:
+        """(pre_s, post_s) master-side charges for the SimClock, scaled by
+        what the active pipeline mode hides (class docstring).  post_s is
+        the prediction-HIT fold; step_round tops it up to the full decode
+        cost on rounds whose subset prediction missed."""
+        cfg = self.cfg
+        pre = self.encode_cost_s
+        if self.prefetching:
+            pre *= cfg.K / (cfg.K + cfg.T)    # mask rows precomputed
+        post = self.decode_cost_s
+        if self.streaming:
+            post /= cfg.threshold             # one fold left after arrival
+        return pre, post
 
     # ------------------------------------------------------------------
     # Distributed-mode provisioning: one-time worker state over the wire
@@ -236,25 +357,73 @@ class ClusterRunner:
             raise ClusterDecodeError(
                 f"round {t}: only {len(workers)} dispatchable workers < "
                 f"recovery threshold {cfg.threshold}")
-        key_t = engine.round_key(self.kloop, t)
-        bidx = (engine.draw_batch(cfg, self.kloop, iters, self.state.mk, t)
-                if cfg.batch_rows is not None else None)
+        ctx = (self._prefetcher.get(t)
+               if self._prefetcher is not None else None)
+        key_t = None if ctx is not None else engine.round_key(self.kloop, t)
+        # the subset the streaming decode would fold against this round
+        # (ctx.plan when prefetched — possibly one round staler — else the
+        # last observed order); used for the decoder plan in distributed
+        # mode and for honest streamed-flag reporting in simulation
+        pred_subset = None
+        if self.streaming:
+            if ctx is not None and ctx.plan is not None:
+                pred_subset = ctx.plan.subset
+            elif ctx is None:
+                pred = self._predicted_order()
+                if pred is not None and len(pred) >= cfg.threshold:
+                    pred_subset = frozenset(
+                        int(w) for w in pred[: cfg.threshold])
+        if ctx is not None:
+            bidx = ctx.batch_idx
+        else:
+            bidx = (engine.draw_batch(cfg, self.kloop, iters,
+                                      self.state.mk, t)
+                    if cfg.batch_rows is not None else None)
         payloads = None
+        enc_t0 = _time.perf_counter()
         if self.distributed:
             # encode THIS round's weight shares and ship one to each worker;
             # field elements are exact int32, so the share a worker process
             # receives is bit-identical to the one the in-process round
-            # would have traced from the same key.
-            w_shares = np.asarray(engine.encode_round_shares(
-                cfg, key_t, self.w2))                    # (N, d, c, r)
+            # would have traced from the same key.  With a prefetched ctx
+            # only the W-dependent half runs here (DESIGN.md §9).
+            if ctx is not None:
+                w_shares = np.asarray(engine.encode_round_shares_split(
+                    cfg, ctx.kq, ctx.mask_shares, self.w2))  # (N, d, c, r)
+            else:
+                w_shares = np.asarray(engine.encode_round_shares(
+                    cfg, key_t, self.w2))
             batch_np = None if bidx is None else np.asarray(bidx)
+            # round t+1's batch indices were drawn by the prefetch thread,
+            # off the critical path (ctx.next_batch); sequential mode ships
+            # none and the worker slices on receipt as before
+            next_np = None if ctx is None else ctx.next_batch
             payloads = {int(w): {"w_share": w_shares[int(w)],
-                                 "batch": batch_np}
+                                 "batch": batch_np,
+                                 "next_batch": next_np}
                         for w in workers}
+        encode_wall_s = _time.perf_counter() - enc_t0
+
+        decoder = None
+        on_result = None
+        if self.streaming and self.distributed:
+            plan = (ctx.plan if ctx is not None
+                    else decode.prefix_decode_plan(
+                        cfg, self._predicted_order()))
+            decoder = decode.StreamingDecoder(cfg, plan)
+            on_result = decoder.fold
+        pre_s = post_s = 0.0
+        if not self.distributed:
+            pre_s, post_s = self._sim_charges()
+        if self._prefetcher is not None:
+            # critical-path master work is done; let the producer build
+            # round t+1's context during the collect wait we enter now
+            self._prefetcher.release()
         trace = self.scheduler.dispatch_round(
             t, cfg.threshold, workers=workers, monitor=self.monitor,
             timeout_s=self.round_timeout_s, payloads=payloads,
-            collect_all=self.collect_all)
+            collect_all=self.collect_all, pre_s=pre_s, post_s=post_s,
+            on_result=on_result)
         if not math.isfinite(trace.t_first_R):
             # non-responders within the timeout are presumed dead
             for w in workers:
@@ -264,24 +433,72 @@ class ClusterRunner:
                 f"round {t}: {len(trace.responders)} responses < threshold "
                 f"{cfg.threshold} within {self.round_timeout_s}s")
 
-        dmat, order = engine.survivor_round(cfg, trace.responders)
+        streamed = False
+        dec_t0 = _time.perf_counter()
+        if decoder is not None:
+            # the streaming path never needs the batch decode matrix on a
+            # hit — the decoder's accumulator IS the decode, and on a miss
+            # finish() resolves its own (cached) matrix inside the timed
+            # window below, so the fallback solve is attributed honestly
+            order = np.asarray(trace.responders[: cfg.threshold],
+                               dtype=np.int32)
+        else:
+            dmat, order = engine.survivor_round(cfg, trace.responders)
         if self.distributed:
-            # decode from the payloads the responders actually sent
-            fastest = np.stack([np.asarray(trace.payloads[int(w)],
-                                           dtype=np.int32) for w in order])
-            self.w2 = self._update(self.w2, jnp.asarray(fastest),
-                                   jnp.asarray(dmat, jnp.int32), bidx)
+            if decoder is not None:
+                # the shares are already folded (or retained) — finish is
+                # one fold on a prediction hit, a batch decode on a miss
+                parts = decoder.finish(order)
+                streamed = decoder.streamed
+                self.w2 = self._update_parts(self.w2, parts, bidx)
+            else:
+                # decode from the payloads the responders actually sent
+                fastest = np.stack([np.asarray(trace.payloads[int(w)],
+                                               dtype=np.int32)
+                                    for w in order])
+                self.w2 = self._update(self.w2, jnp.asarray(fastest),
+                                       jnp.asarray(dmat, jnp.int32), bidx)
+            self.w2.block_until_ready()   # honest decode_s measurement
+        elif ctx is not None:
+            self.w2 = self._round_split(ctx.kq, ctx.mask_shares, self.w2,
+                                        jnp.asarray(dmat, jnp.int32),
+                                        jnp.asarray(order, jnp.int32), bidx)
         else:
             self.w2 = self._round(key_t, self.w2,
                                   jnp.asarray(dmat, jnp.int32),
                                   jnp.asarray(order, jnp.int32), bidx)
+        decode_wall_s = _time.perf_counter() - dec_t0
+        if self.distributed:
+            # real transport: the scheduler cannot see master-side encode/
+            # decode walls — record the measured components on the trace
+            trace.encode_s = encode_wall_s
+            trace.decode_s = decode_wall_s
+            trace.t_ready = self.scheduler.clock
+        else:
+            # simulation: was this round a streaming hit?  A real decoder
+            # folds eagerly only when the observed threshold subset matches
+            # the prediction — on a miss it pays the full batch decode, so
+            # charge the remaining decode cost to the clock (the optimistic
+            # 1/threshold fold was charged inside dispatch_round)
+            streamed = (self.streaming and pred_subset is not None
+                        and frozenset(int(w) for w in order) == pred_subset)
+            if self.streaming and not streamed:
+                miss_extra = self.decode_cost_s - post_s
+                if miss_extra > 0:
+                    self.scheduler.time.advance_to(
+                        self.scheduler.clock + miss_extra)
+                    trace.decode_s = post_s + miss_extra
+                    trace.t_ready = self.scheduler.clock
+        self._last_order = np.asarray(trace.responders).copy()
         self.traces[t] = trace
         self.records[t] = RoundRecord(
             round=t, survivors=order.copy(),
             n_responders=len(trace.responders),
             dispatched=trace.dispatched.copy(),
             coded_wait_s=trace.coded_wait_s, all_wait_s=trace.all_wait_s,
-            replayed=replayed)
+            replayed=replayed,
+            encode_s=trace.encode_s, decode_s=trace.decode_s,
+            prefetched=ctx is not None, streamed=streamed)
         return trace
 
     # ------------------------------------------------------------------
@@ -291,8 +508,9 @@ class ClusterRunner:
     def run(self, iters: int):
         """Plain run: any starved round raises ClusterDecodeError."""
         self._reset()
-        for t in range(iters):
-            self.step_round(t, iters)
+        with self._pipeline_scope(iters):
+            for t in range(iters):
+                self.step_round(t, iters)
         return engine._w_public(self.cfg, self.w2)
 
     def run_resilient(self, iters: int, ckpt_manager,
@@ -321,7 +539,11 @@ class ClusterRunner:
         state0 = {"train": {"w2": np.asarray(self.w2)}}
         ckpt_manager.save(0, state0)
         ckpt_manager.wait()
-        loop.run(state0, step_fn, start_step=0, num_steps=iters)
+        with self._pipeline_scope(iters):
+            # a restore rewinds t; RoundPrefetcher.get resets its producer,
+            # and contexts are pure functions of (kloop, t), so the replay
+            # re-derives identical masks/batches
+            loop.run(state0, step_fn, start_step=0, num_steps=iters)
         self.restarts = loop.restarts
         return engine._w_public(self.cfg, self.w2)
 
@@ -329,6 +551,7 @@ class ClusterRunner:
         self.w2 = engine._w_internal(self.cfg, self.state.w)
         self.records.clear()
         self.traces.clear()
+        self._last_order = None
 
     # ------------------------------------------------------------------
     # Trace export + stats
@@ -345,11 +568,22 @@ class ClusterRunner:
         return lambda t: trace[t]
 
     def wait_stats(self) -> dict[str, dict[str, float]]:
-        """Per-round completion-time stats: coded first-T vs wait-for-all."""
+        """Per-round completion-time stats: coded first-T vs wait-for-all,
+        plus the master-side encode/decode components and the critical path
+        (encode + wait + decode) the pipeline modes shrink."""
         recs = sorted(self.records.values(), key=lambda r: r.round)
         coded = np.array([r.coded_wait_s for r in recs])
         allw = np.array([r.all_wait_s for r in recs])
+        enc = np.array([r.encode_s for r in recs])
+        dec = np.array([r.decode_s for r in recs])
         return {"coded_T": wait_summary(coded),
                 "wait_all": wait_summary(allw[np.isfinite(allw)]),
+                "encode": wait_summary(enc),
+                "decode": wait_summary(dec),
+                "critical_path": wait_summary(enc + coded + dec),
                 "rounds": {"n": float(len(recs)),
-                           "dead_rounds": float(np.sum(~np.isfinite(allw)))}}
+                           "dead_rounds": float(np.sum(~np.isfinite(allw))),
+                           "prefetched": float(sum(r.prefetched
+                                                   for r in recs)),
+                           "streamed": float(sum(r.streamed
+                                                 for r in recs))}}

@@ -127,6 +127,18 @@ class RoundTrace:
                                     # worker -> WorkerResult payload (real
                                     # transports carry serialized arrays;
                                     # the simulation carries None)
+    # master-side pipeline components (DESIGN.md §9), recorded NEXT TO the
+    # wait so the benches can attribute where each round's time went:
+    encode_s: float = 0.0           # encode time on the critical path
+                                    # BEFORE dispatch (sim: the pre_s
+                                    # charge; real: runner-measured wall)
+    decode_s: float = 0.0           # decode+step time on the critical path
+                                    # AFTER the threshold-th arrival (sim:
+                                    # the post_s charge; real: measured)
+    t_ready: float = math.nan       # clock when the updated weights were
+                                    # ready (t_first_R + post charges; on a
+                                    # real transport set by the runner
+                                    # after the actual update)
 
     @property
     def coded_wait_s(self) -> float:
@@ -135,6 +147,12 @@ class RoundTrace:
     @property
     def all_wait_s(self) -> float:
         return self.t_all - self.t_start
+
+    @property
+    def critical_path_s(self) -> float:
+        """Master-observed round cost: encode + wait-for-threshold + decode
+        — the quantity pipelining shrinks (the wait is irreducible)."""
+        return self.encode_s + self.coded_wait_s + self.decode_s
 
 
 @dataclasses.dataclass
@@ -196,7 +214,8 @@ class EventScheduler:
                            latencies: dict[int, float],
                            responders: list[int],
                            payloads: dict[int, Any],
-                           result_type: type = WorkerResult) -> None:
+                           result_type: type = WorkerResult,
+                           on_result=None) -> None:
         for at, msg in self.transport.recv(MASTER, now):
             if isinstance(msg, Heartbeat):
                 if monitor is not None:
@@ -220,6 +239,11 @@ class EventScheduler:
                     latencies[msg.worker] = msg.compute_s
                     responders.append(msg.worker)
                     payloads[msg.worker] = msg.payload
+                    if on_result is not None:
+                        # streaming decode: fold this share into the
+                        # reconstruction NOW, while later shares are still
+                        # in flight (DESIGN.md §9)
+                        on_result(msg.worker, msg.payload)
 
     def _presumed_dead(self, missing, monitor) -> bool:
         """True when the failure detector has declared EVERY missing worker
@@ -234,9 +258,10 @@ class EventScheduler:
 
     def _collect(self, round: int, threshold: int, dispatched: set[int],
                  monitor, deadline: float, collect_all: bool,
-                 result_type: type) -> tuple[dict[int, float],
-                                             dict[int, float], list[int],
-                                             dict[int, Any]]:
+                 result_type: type, on_result=None
+                 ) -> tuple[dict[int, float],
+                            dict[int, float], list[int],
+                            dict[int, Any]]:
         """The master's event loop: pop deliveries in time order until
         ``threshold`` results of ``result_type`` for THIS round are in (and,
         under ``collect_all``, every dispatched worker has responded), or
@@ -272,7 +297,8 @@ class EventScheduler:
             self.time.advance_to(nxt)
             self._deliver_to_master(self.time.now(), round, monitor,
                                     dispatched, arrivals, latencies,
-                                    responders, payloads, result_type)
+                                    responders, payloads, result_type,
+                                    on_result)
         return arrivals, latencies, responders, payloads
 
     @staticmethod
@@ -326,7 +352,9 @@ class EventScheduler:
                        monitor=None,
                        timeout_s: float = math.inf,
                        payloads: dict[int, Any] | None = None,
-                       collect_all: bool = False) -> RoundTrace:
+                       collect_all: bool = False,
+                       pre_s: float = 0.0, post_s: float = 0.0,
+                       on_result=None) -> RoundTrace:
         """Run one round's event loop; returns the observed RoundTrace.
 
         Does NOT raise when fewer than ``threshold`` results arrive — the
@@ -336,10 +364,21 @@ class EventScheduler:
         ``collect_all`` keeps collecting past the decode instant until every
         dispatched worker has responded (or the deadline passes) — the only
         way a real transport can observe the wait-for-all counterfactual.
+
+        ``pre_s``/``post_s`` model master-side encode/decode time on a
+        SIMULATED clock (DESIGN.md §9): pre_s advances the clock before
+        dispatch (encode on the critical path), post_s after the decode
+        instant.  On a wall clock both are no-ops — real master time passes
+        by itself and the runner records the measured components on the
+        trace.  ``on_result(worker, payload)`` fires at each accepted
+        arrival of THIS round, in arrival order — the streaming decoder's
+        fold point.
         """
         workers = np.arange(self.n) if workers is None else np.asarray(workers)
         real = self.transport.real
         self._check_exitable(real, collect_all, timeout_s, monitor)
+        if pre_s:
+            self.time.advance_to(self.time.now() + pre_s)
         t0 = self.time.now()
         sampled = self._send_round(round, workers, t0, payloads)
 
@@ -347,7 +386,8 @@ class EventScheduler:
         deadline = t0 + timeout_s
         arrivals, latencies, responders, round_payloads = self._collect(
             round, threshold, dispatched, monitor, deadline,
-            collect_all=collect_all, result_type=WorkerResult)
+            collect_all=collect_all, result_type=WorkerResult,
+            on_result=on_result)
 
         got_R = len(responders) >= threshold
         # the decode instant is the threshold-th ARRIVAL, which (under
@@ -359,15 +399,20 @@ class EventScheduler:
                      else math.inf)
         else:
             t_all = t0 + max(sampled.values(), default=0.0)
+        t_ready = math.inf
         if got_R:
-            self.time.advance_to(self.time.now() + self.master_overhead_s)
+            self.time.advance_to(self.time.now() + self.master_overhead_s
+                                 + post_s)
+            t_ready = (self.time.now() if not real
+                       else math.nan)     # real: runner stamps after update
         elif not real:
             self._park_starved(t0, deadline, t_all, monitor)
         return RoundTrace(
             round=round, t_start=t0, dispatched=workers,
             responders=np.asarray(responders, dtype=np.int64),
             arrivals=arrivals, latencies=latencies,
-            t_first_R=t_first_R, t_all=t_all, payloads=round_payloads)
+            t_first_R=t_first_R, t_all=t_all, payloads=round_payloads,
+            encode_s=pre_s, decode_s=post_s, t_ready=t_ready)
 
     # ------------------------------------------------------------------
     # Multi-phase MPC rounds (DESIGN.md §7: "MPC on the cluster runtime")

@@ -91,6 +91,46 @@ def encode(scheme: CodingScheme, x_parts: jax.Array, masks: jax.Array,
     return shares.reshape(scheme.N, *part_shape)
 
 
+def _encode_rows(scheme: CodingScheme, stacked: jax.Array, rows: slice,
+                 p: int) -> jax.Array:
+    """Shares contributed by a contiguous row-slice of the encode matrix U."""
+    part_shape = stacked.shape[1:]
+    flat = stacked.reshape(stacked.shape[0], -1)
+    U = jnp.asarray(scheme.encode_matrix[rows], jnp.int32)   # (nrows, N)
+    shares = field.matmul(U.T, flat, p)                      # (N, prod(shape))
+    return shares.reshape(scheme.N, *part_shape)
+
+
+def encode_data(scheme: CodingScheme, x_parts: jax.Array,
+                p: int | None = None) -> jax.Array:
+    """The data-row contribution U[:K]ᵀ X̄ of a split encode.
+
+    ``addmod(encode_data(parts), encode_masks(masks)) == encode(parts,
+    masks)`` bit-for-bit: field.matmul/addmod are exact mod p, so splitting
+    the (K+T)-row matmul into its K-row and T-row halves changes nothing.
+    This is the W-DEPENDENT half of a round's weight encode — the only part
+    that must wait for the previous round's decoded weights.
+    """
+    p = p or scheme.p
+    return _encode_rows(scheme, x_parts, slice(0, scheme.K), p)
+
+
+def encode_masks(scheme: CodingScheme, masks: jax.Array,
+                 p: int | None = None) -> jax.Array:
+    """The mask-row contribution U[K:]ᵀ Z of a split encode.
+
+    Depends only on the round's random masks — never on the data or the
+    weights — so a pipelined master precomputes it for round k+1 while
+    round k is still in flight (cluster/pipeline.py).  T == 0 contributes
+    nothing (zeros), mirroring encode()'s no-mask path.
+    """
+    p = p or scheme.p
+    if scheme.T == 0:
+        return jnp.zeros((scheme.N, *masks.shape[1:]), jnp.int32)
+    return _encode_rows(scheme, masks,
+                        slice(scheme.K, scheme.K + scheme.T), p)
+
+
 def draw_masks(key: jax.Array, T: int, part_shape: tuple[int, ...],
                p: int = field.P) -> jax.Array:
     """T i.i.d. uniform matrices over F_p (the privacy masks)."""

@@ -17,16 +17,22 @@ from repro.core.protocol.config import CPMLConfig
 from repro.core.protocol.encode import (
     encode_dataset,
     encode_weights,
+    encode_weights_finish,
     pad_rows,
+    weight_mask_shares,
 )
 from repro.core.protocol.compute import (
     all_worker_results,
     worker_fn,
 )
 from repro.core.protocol.decode import (
+    DecodePlan,
+    StreamingDecoder,
     decode_gradient,
     decode_parts,
     make_decode_matrix,
+    parts_to_gradient,
+    prefix_decode_plan,
 )
 from repro.core.protocol.engine import (
     CPMLState,
@@ -34,6 +40,7 @@ from repro.core.protocol.engine import (
     cleartext_baseline,
     draw_batch,
     encode_round_shares,
+    encode_round_shares_split,
     lipschitz_eta,
     loss_and_accuracy,
     make_schedule,
@@ -41,7 +48,9 @@ from repro.core.protocol.engine import (
     per_class_accuracy,
     poly_coeffs,
     round_fn,
+    round_fn_split,
     round_key,
+    round_mask_context,
     setup,
     sigmoid,
     step,
@@ -49,12 +58,15 @@ from repro.core.protocol.engine import (
     train,
     train_reference,
     update_fn,
+    update_from_parts_fn,
 )
 
 __all__ = [
     "CPMLConfig",
     "CPMLState",
+    "DecodePlan",
     "Schedule",
+    "StreamingDecoder",
     "all_worker_results",
     "cleartext_baseline",
     "decode_gradient",
@@ -62,17 +74,23 @@ __all__ = [
     "draw_batch",
     "encode_dataset",
     "encode_round_shares",
+    "encode_round_shares_split",
     "encode_weights",
+    "encode_weights_finish",
     "lipschitz_eta",
     "loss_and_accuracy",
     "make_decode_matrix",
     "make_schedule",
     "multiclass_loss_and_accuracy",
     "pad_rows",
+    "parts_to_gradient",
     "per_class_accuracy",
     "poly_coeffs",
+    "prefix_decode_plan",
     "round_fn",
+    "round_fn_split",
     "round_key",
+    "round_mask_context",
     "setup",
     "sigmoid",
     "step",
@@ -80,5 +98,7 @@ __all__ = [
     "train",
     "train_reference",
     "update_fn",
+    "update_from_parts_fn",
+    "weight_mask_shares",
     "worker_fn",
 ]

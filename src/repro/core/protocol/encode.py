@@ -13,7 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import lagrange, quantize
+from repro.core import field, lagrange, quantize
 from repro.core.protocol.config import CPMLConfig
 
 
@@ -50,3 +50,41 @@ def encode_weights(cfg: CPMLConfig, key: jax.Array, w: jax.Array) -> jax.Array:
     parts = jnp.broadcast_to(wbar[None], (cfg.K, *wbar.shape))
     masks = lagrange.draw_masks(km, cfg.T, wbar.shape, cfg.p)
     return lagrange.encode(cfg.scheme, parts, masks, cfg.p)
+
+
+# ---------------------------------------------------------------------------
+# Split weight encode: the W-INDEPENDENT half (key split + fresh masks +
+# their encoded contribution) can run while the previous round is still in
+# flight; only the W-DEPENDENT half (quantize + data-row encode) must wait
+# for the decoded weights.  Exactness of the field ops makes the split
+# bit-identical to encode_weights (pinned in tests/test_pipeline.py).
+# ---------------------------------------------------------------------------
+
+def weight_mask_shares(cfg: CPMLConfig, key: jax.Array,
+                       w_shape: tuple[int, ...]
+                       ) -> tuple[jax.Array, jax.Array]:
+    """W-independent half of ``encode_weights``.
+
+    Splits the round key exactly as encode_weights does, draws the T fresh
+    privacy masks (shape depends only on (d, c, r) — known before W is),
+    and encodes their contribution.  Returns ``(kq, mask_shares)`` where
+    ``kq`` is the stochastic-quantization key the W-dependent half consumes
+    and ``mask_shares`` is (N, *w_shape, r).
+    """
+    kq, km = jax.random.split(key)
+    wbar_shape = (*w_shape, cfg.r)
+    masks = lagrange.draw_masks(km, cfg.T, wbar_shape, cfg.p)
+    return kq, lagrange.encode_masks(cfg.scheme, masks, cfg.p)
+
+
+def encode_weights_finish(cfg: CPMLConfig, kq: jax.Array,
+                          mask_shares: jax.Array, w: jax.Array) -> jax.Array:
+    """W-dependent half: quantize w, encode the data rows, add the masks.
+
+    ``encode_weights_finish(cfg, *weight_mask_shares(cfg, key, w.shape), w)
+    == encode_weights(cfg, key, w)`` bit-for-bit.
+    """
+    wbar = quantize.quantize_weights(kq, w, cfg.lw, cfg.r, cfg.p)
+    parts = jnp.broadcast_to(wbar[None], (cfg.K, *wbar.shape))
+    data = lagrange.encode_data(cfg.scheme, parts, cfg.p)
+    return field.addmod(data, mask_shares, cfg.p)

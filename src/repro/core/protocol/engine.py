@@ -94,18 +94,11 @@ def _w_public(cfg: CPMLConfig, w2: jax.Array) -> jax.Array:
 # scan body — this sharing is what makes scan-vs-loop bit-identity hold)
 # ---------------------------------------------------------------------------
 
-def _round_update(cfg: CPMLConfig, w2: jax.Array, fastest: jax.Array,
-                  xq_parts: jax.Array, y_parts: jax.Array,
-                  xty_full: jax.Array, dmat: jax.Array,
-                  batch_idx: jax.Array | None, eta: jax.Array,
-                  m_int: jax.Array) -> jax.Array:
-    """Decode the survivors' results and apply the gradient step.
-
-    fastest: (R, d, c) field evaluations in responder order — either sliced
-    out of a master-side all_worker_results (the simulated paths, _round) or
-    received over the wire from real worker processes (runner socket mode).
-    Both paths flow through THIS function, so where the worker compute ran
-    cannot change what the update computes.
+def _gradient_step(cfg: CPMLConfig, w2: jax.Array, xg: jax.Array,
+                   xq_parts: jax.Array, y_parts: jax.Array,
+                   xty_full: jax.Array, batch_idx: jax.Array | None,
+                   eta: jax.Array, m_int: jax.Array) -> jax.Array:
+    """Apply one gradient step given the decoded real gradient xg (d, c).
 
     Batch index i selects global sample k*mk + i from every part k; rows
     with k*mk + i >= m are all-zero padding, so the 1/batch normalization
@@ -123,19 +116,52 @@ def _round_update(cfg: CPMLConfig, w2: jax.Array, fastest: jax.Array,
         part0 = jnp.arange(cfg.K, dtype=jnp.int32) * mk  # global row offsets
         real = jnp.sum((batch_idx[None, :] + part0[:, None]) < m_int)
         scale = eta / real.astype(jnp.float32)
-    xg = decode.decode_gradient(cfg, fastest, dmat)                # (d, c)
     return w2 - scale * (xg - xty)
 
 
-def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
-           x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
-           xty_full: jax.Array, dmat: jax.Array, order: jax.Array,
-           batch_idx: jax.Array | None, eta: jax.Array, m_int: jax.Array
-           ) -> jax.Array:
-    """w2 (d, c) -> updated (d, c).  One full encode->compute->decode round
-    with the N workers enacted on-device (vmap/shard, DESIGN.md §4)."""
+def _round_update(cfg: CPMLConfig, w2: jax.Array, fastest: jax.Array,
+                  xq_parts: jax.Array, y_parts: jax.Array,
+                  xty_full: jax.Array, dmat: jax.Array,
+                  batch_idx: jax.Array | None, eta: jax.Array,
+                  m_int: jax.Array) -> jax.Array:
+    """Decode the survivors' results and apply the gradient step.
+
+    fastest: (R, d, c) field evaluations in responder order — either sliced
+    out of a master-side all_worker_results (the simulated paths, _round) or
+    received over the wire from real worker processes (runner socket mode).
+    Both paths flow through THIS function, so where the worker compute ran
+    cannot change what the update computes.
+    """
+    xg = decode.decode_gradient(cfg, fastest, dmat)                # (d, c)
+    return _gradient_step(cfg, w2, xg, xq_parts, y_parts, xty_full,
+                          batch_idx, eta, m_int)
+
+
+def _update_from_parts(cfg: CPMLConfig, w2: jax.Array, parts: jax.Array,
+                       xq_parts: jax.Array, y_parts: jax.Array,
+                       xty_full: jax.Array, batch_idx: jax.Array | None,
+                       eta: jax.Array, m_int: jax.Array) -> jax.Array:
+    """Gradient step from ALREADY-DECODED (K, d, c) field parts.
+
+    The streaming-decode path (decode.StreamingDecoder folds shares on the
+    host as they arrive) lands here: the parts are exact integers identical
+    to decode_parts' output, and parts_to_gradient + _gradient_step are the
+    same ops _round_update composes — so a streamed round stays
+    bit-identical to the batch-decoded one (tests/test_pipeline.py).
+    """
+    xg = decode.parts_to_gradient(cfg, parts)
+    return _gradient_step(cfg, w2, xg, xq_parts, y_parts, xty_full,
+                          batch_idx, eta, m_int)
+
+
+def _round_body(cfg: CPMLConfig, w_shares: jax.Array, w2: jax.Array,
+                x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
+                xty_full: jax.Array, dmat: jax.Array, order: jax.Array,
+                batch_idx: jax.Array | None, eta: jax.Array,
+                m_int: jax.Array) -> jax.Array:
+    """compute -> decode -> step, given this round's encoded weight shares
+    (shared verbatim by the one-key and split-encode round variants)."""
     cbar = jnp.asarray(poly_coeffs(cfg), jnp.int32)
-    w_shares = encode.encode_weights(cfg, key, w2)       # (N, d, c, r)
     xb = (x_shares if batch_idx is None
           else jnp.take(x_shares, batch_idx, axis=1))    # (N, b, d): the
     # coded sub-batch is the SAME row subset of every share / part.
@@ -145,9 +171,42 @@ def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
                          dmat, batch_idx, eta, m_int)
 
 
+def _round(cfg: CPMLConfig, key: jax.Array, w2: jax.Array,
+           x_shares: jax.Array, xq_parts: jax.Array, y_parts: jax.Array,
+           xty_full: jax.Array, dmat: jax.Array, order: jax.Array,
+           batch_idx: jax.Array | None, eta: jax.Array, m_int: jax.Array
+           ) -> jax.Array:
+    """w2 (d, c) -> updated (d, c).  One full encode->compute->decode round
+    with the N workers enacted on-device (vmap/shard, DESIGN.md §4)."""
+    w_shares = encode.encode_weights(cfg, key, w2)       # (N, d, c, r)
+    return _round_body(cfg, w_shares, w2, x_shares, xq_parts, y_parts,
+                       xty_full, dmat, order, batch_idx, eta, m_int)
+
+
+def _round_split(cfg: CPMLConfig, kq: jax.Array, mask_shares: jax.Array,
+                 w2: jax.Array, x_shares: jax.Array, xq_parts: jax.Array,
+                 y_parts: jax.Array, xty_full: jax.Array, dmat: jax.Array,
+                 order: jax.Array, batch_idx: jax.Array | None,
+                 eta: jax.Array, m_int: jax.Array) -> jax.Array:
+    """_round with the W-independent encode half supplied from outside.
+
+    (kq, mask_shares) come from ``round_mask_context`` — typically built by
+    the pipeline prefetcher while the PREVIOUS round was in flight.  The
+    encode split is exact, so this is bit-identical to _round on the same
+    round key (tests/test_pipeline.py)."""
+    w_shares = encode.encode_weights_finish(cfg, kq, mask_shares, w2)
+    return _round_body(cfg, w_shares, w2, x_shares, xq_parts, y_parts,
+                       xty_full, dmat, order, batch_idx, eta, m_int)
+
+
 _round_jit = jax.jit(_round, static_argnums=(0,))
+_round_split_jit = jax.jit(_round_split, static_argnums=(0,))
 _round_update_jit = jax.jit(_round_update, static_argnums=(0,))
+_update_from_parts_jit = jax.jit(_update_from_parts, static_argnums=(0,))
 _encode_weights_jit = jax.jit(encode.encode_weights, static_argnums=(0,))
+_weight_mask_jit = jax.jit(encode.weight_mask_shares, static_argnums=(0, 2))
+_encode_finish_jit = jax.jit(encode.encode_weights_finish,
+                             static_argnums=(0,))
 
 
 def _scale_args(cfg: CPMLConfig, eta: float, state: CPMLState):
@@ -172,6 +231,51 @@ def round_fn(cfg: CPMLConfig, state: CPMLState, eta: float
             batch_idx: jax.Array | None = None) -> jax.Array:
         return _round_jit(cfg, key, w2, state.x_shares, state.xq_parts,
                           state.y_parts, xty2, dmat, order, batch_idx, *scale)
+
+    return run
+
+
+def round_fn_split(cfg: CPMLConfig, state: CPMLState, eta: float
+                   ) -> Callable[..., jax.Array]:
+    """round_fn with the W-independent encode half supplied by the caller.
+
+    Returns ``run(kq, mask_shares, w2, dmat, order, batch_idx=None) -> w2``
+    — the pipelined in-process round: (kq, mask_shares) come from
+    ``round_mask_context`` built ahead of time, and the result is
+    bit-identical to round_fn on the same round key.
+    """
+    scale = _scale_args(cfg, eta, state)
+    xty2 = _w_internal(cfg, state.xty)
+
+    def run(kq: jax.Array, mask_shares: jax.Array, w2: jax.Array,
+            dmat: jax.Array, order: jax.Array,
+            batch_idx: jax.Array | None = None) -> jax.Array:
+        return _round_split_jit(cfg, kq, jnp.asarray(mask_shares), w2,
+                                state.x_shares, state.xq_parts,
+                                state.y_parts, xty2, dmat, order,
+                                batch_idx, *scale)
+
+    return run
+
+
+def update_from_parts_fn(cfg: CPMLConfig, state: CPMLState, eta: float
+                         ) -> Callable[..., jax.Array]:
+    """Decode-and-update hook for STREAMED rounds (DESIGN.md §9).
+
+    Returns ``run(w2, parts, batch_idx=None) -> w2`` where ``parts`` is the
+    (K, d, c) field output of ``decode.StreamingDecoder.finish`` — the
+    already-decoded sub-gradients.  parts_to_gradient + the shared
+    _gradient_step make it bit-identical to update_fn on the equivalent
+    (fastest, dmat) inputs.
+    """
+    scale = _scale_args(cfg, eta, state)
+    xty2 = _w_internal(cfg, state.xty)
+
+    def run(w2: jax.Array, parts: jax.Array,
+            batch_idx: jax.Array | None = None) -> jax.Array:
+        return _update_from_parts_jit(cfg, w2, jnp.asarray(parts, jnp.int32),
+                                      state.xq_parts, state.y_parts, xty2,
+                                      batch_idx, *scale)
 
     return run
 
@@ -207,6 +311,29 @@ def encode_round_shares(cfg: CPMLConfig, key: jax.Array, w2: jax.Array
     are bit-identical to the ones the in-process round would have used.
     """
     return _encode_weights_jit(cfg, key, w2)
+
+
+def round_mask_context(cfg: CPMLConfig, key: jax.Array,
+                       w_shape: tuple[int, ...]
+                       ) -> tuple[jax.Array, jax.Array]:
+    """W-INDEPENDENT half of round t's weight encode (DESIGN.md §9).
+
+    Everything ``encode_round_shares(cfg, round_key(kloop, t), w2)`` does
+    that does not need w2: the key split, the T fresh privacy masks, and
+    their encoded contribution.  Returns ``(kq, mask_shares)``; feed them to
+    ``encode_round_shares_split`` once the previous round's weights decode.
+    Because it only needs (kloop, t, shape), a pipelined master computes it
+    while round t-1 is still in flight.
+    """
+    return _weight_mask_jit(cfg, key, tuple(int(s) for s in w_shape))
+
+
+def encode_round_shares_split(cfg: CPMLConfig, kq: jax.Array,
+                              mask_shares: jax.Array, w2: jax.Array
+                              ) -> jax.Array:
+    """W-DEPENDENT half: bit-identical to ``encode_round_shares`` when
+    (kq, mask_shares) came from ``round_mask_context`` on the same key."""
+    return _encode_finish_jit(cfg, kq, jnp.asarray(mask_shares), w2)
 
 
 def poly_coeffs(cfg: CPMLConfig) -> np.ndarray:

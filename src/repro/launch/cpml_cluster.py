@@ -2,7 +2,10 @@
 
     python -m repro.launch.cpml_cluster --latency lognormal --iters 25
     python -m repro.launch.cpml_cluster --latency dead --resilient
+    python -m repro.launch.cpml_cluster --pipeline full \\
+        --encode-cost-s 0.2 --decode-cost-s 0.1
     python -m repro.launch.cpml_cluster --transport socket --iters 10
+    python -m repro.launch.cpml_cluster --transport socket --pipeline full
     python -m repro.launch.cpml_cluster --transport socket --kill-worker 5 \\
         --kill-at-round 4
     python -m repro.launch.cpml_cluster --protocol mpc --latency lognormal
@@ -67,6 +70,22 @@ def build_parser() -> argparse.ArgumentParser:
                     default="inprocess",
                     help="inprocess = event-driven simulation; socket = "
                          "spawn N real worker processes on localhost")
+    ap.add_argument("--pipeline", choices=("off", "prefetch", "streaming",
+                                           "full"),
+                    default="off",
+                    help="overlap master-side coding with in-flight worker "
+                         "compute (DESIGN.md §9): prefetch = next round's "
+                         "masks/batch/decode-coefficients built during the "
+                         "wait; streaming = fold shares into the decode as "
+                         "they arrive; full = both.  Bit-identical to off "
+                         "in every mode")
+    ap.add_argument("--encode-cost-s", type=float, default=0.0,
+                    help="modeled master encode seconds per round charged "
+                         "to the simulated clock (inprocess only; shows "
+                         "the pipelining win on the sim timeline)")
+    ap.add_argument("--decode-cost-s", type=float, default=0.0,
+                    help="modeled master decode seconds per round "
+                         "(inprocess only)")
     ap.add_argument("--latency", choices=("deterministic", "lognormal",
                                           "bursty", "dead"),
                     default="lognormal",
@@ -175,7 +194,8 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
         runner = ClusterRunner(cfg, key, x, y, latency=None, transport=tr,
                                round_timeout_s=timeout,
                                heartbeat_timeout_s=args.heartbeat_timeout,
-                               collect_all=args.collect_all)
+                               collect_all=args.collect_all,
+                               pipeline=args.pipeline)
         runner.provision()
         t0 = time.monotonic()
         w = runner.run(args.iters)
@@ -213,6 +233,12 @@ def _run_mpc(args) -> int:
     if args.resilient:
         print("--resilient is meaningless for MPC: BGW has no erasure "
               "tolerance — a starved round is terminal", file=sys.stderr)
+        return 2
+    if args.pipeline != "off":
+        print("--pipeline applies to the coded protocol only: every BGW "
+              "reshare barrier consumes the previous phase's output, so "
+              "there is no W-independent master work to overlap",
+              file=sys.stderr)
         return 2
     if args.classes != 1:
         print("--protocol mpc supports the paper's binary task only",
@@ -339,7 +365,10 @@ def main(argv: list[str] | None = None) -> int:
         if args.latency == "dead" and math.isinf(timeout):
             timeout = 60.0          # a dead worker must be detectable
         runner = ClusterRunner(cfg, key, x, y, latency,
-                               round_timeout_s=timeout)
+                               round_timeout_s=timeout,
+                               pipeline=args.pipeline,
+                               encode_cost_s=args.encode_cost_s,
+                               decode_cost_s=args.decode_cost_s)
         if args.resilient:
             from repro.checkpoint.manager import CheckpointManager
             with tempfile.TemporaryDirectory() as ckdir:
@@ -354,6 +383,14 @@ def main(argv: list[str] | None = None) -> int:
     coded, allw = stats["coded_T"], stats["wait_all"]
     print(f"per-round wait  coded-T: mean {coded['mean']:.2f}s  "
           f"p50 {coded['p50']:.2f}s  p95 {coded['p95']:.2f}s")
+    if args.pipeline != "off" or args.encode_cost_s or args.decode_cost_s:
+        cp, enc, dec = (stats["critical_path"], stats["encode"],
+                        stats["decode"])
+        print(f"per-round critical path [{args.pipeline}]: "
+              f"mean {cp['mean']:.3f}s = encode {enc['mean']:.3f}s + wait "
+              f"+ decode {dec['mean']:.3f}s  "
+              f"({int(stats['rounds']['prefetched'])} prefetched, "
+              f"{int(stats['rounds']['streamed'])} streamed rounds)")
     unobserved = int(stats["rounds"]["dead_rounds"])
     if math.isfinite(allw["mean"]):
         print(f"per-round wait wait-all: mean {allw['mean']:.2f}s  "

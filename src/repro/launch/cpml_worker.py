@@ -13,7 +13,10 @@ message protocol (DESIGN.md §7):
      with a Heartbeat once loaded.
   2. ROUNDS    — CPML: each EncodeShare(t, i, {"w_share", "batch"}) is
      acked with an immediate Heartbeat (liveness), then answered with
-     WorkerResult(t, i, compute_s, payload=f(X̃_i, W̃_i)).  MPC: the share
+     WorkerResult(t, i, compute_s, payload=f(X̃_i, W̃_i)).  A pipelined
+     master (DESIGN.md §9) additionally ships "next_batch" — round t+1's
+     W-independent batch indices — and the worker pre-slices that coded
+     sub-batch after replying, while its next weight share is in flight.  MPC: the share
      carries {"w_share", "kred"}; the worker runs the BGW phases — local
      multiply, then one all-to-all reshare BARRIER per degree reduction
      (SubShares exchanged with every peer through the master's relay;
@@ -152,14 +155,29 @@ def serve(args) -> int:
         w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)
         batch = msg.payload.get("batch")
         x_share = state["x_share"]
-        xb = (x_share if batch is None
-              else jnp.take(x_share, jnp.asarray(batch, jnp.int32),
-                            axis=0))
+        cached = state.get("xb_cache")
+        if batch is None:
+            xb = x_share
+        elif cached is not None and cached[0] == msg.round:
+            # pre-sliced from last round's "next_batch" (pipelined master,
+            # DESIGN.md §9) — same indices, so the result is bit-identical
+            xb = cached[1]
+        else:
+            xb = jnp.take(x_share, jnp.asarray(batch, jnp.int32), axis=0)
         result = np.asarray(state["f"](xb, w_share), dtype=np.int32)
         tr.send(MASTER,
                 WorkerResult(msg.round, args.worker,
                              compute_s=time.monotonic() - t0,
                              payload=result))
+        nxt = msg.payload.get("next_batch")
+        if nxt is not None:
+            # W-independent worker-side prefetch: slice round t+1's coded
+            # sub-batch AFTER replying, while waiting for its weight share
+            state["xb_cache"] = (
+                msg.round + 1,
+                jnp.take(x_share, jnp.asarray(nxt, jnp.int32), axis=0))
+        else:
+            state["xb_cache"] = None
 
     try:
         while not tr.peer_closed:

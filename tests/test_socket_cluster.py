@@ -31,14 +31,15 @@ def binary_data():
 
 def _run_socket(cfg, x, y, *, iters, die_at_round=None, sleep_s=None,
                 collect_all=False, heartbeat_timeout_s=math.inf,
-                seed=7):
+                seed=7, pipeline="off"):
     with local_socket_cluster(cfg.N, die_at_round=die_at_round,
                               sleep_s=sleep_s) as tr:
         runner = ClusterRunner(cfg, jax.random.PRNGKey(seed), x, y,
                                latency=None, transport=tr,
                                round_timeout_s=120.0,
                                heartbeat_timeout_s=heartbeat_timeout_s,
-                               collect_all=collect_all)
+                               collect_all=collect_all,
+                               pipeline=pipeline)
         runner.provision()
         w = runner.run(iters)
         runner.shutdown_workers()
@@ -104,6 +105,66 @@ def test_socket_first_T_beats_wait_all_under_real_straggler(binary_data):
         assert 2 not in set(map(int, rec.survivors))
         assert rec.all_wait_s > rec.coded_wait_s
         assert int(runner.traces[t].responders[-1]) == 2
+
+
+def test_socket_pipelined_bit_identical_with_dead_worker(binary_data):
+    """Pipelined-vs-sequential bit-identity through a REAL mid-run crash
+    (DESIGN.md §9): the full pipeline (prefetch thread + streaming decode)
+    over live TCP with a worker dying at round 4 must still equal
+    train_reference on the observed trace — the sequential twin of this
+    run is test_socket_bit_identical_with_worker_killed_mid_run, pinned to
+    the same oracle."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)        # threshold 7
+    runner, w = _run_socket(cfg, x, y, iters=10, die_at_round={5: 4},
+                            pipeline="full")
+    assert len(runner.records) == 10
+    for t, rec in runner.records.items():
+        if t >= 4:
+            assert 5 not in set(map(int, rec.survivors))
+        assert rec.prefetched                     # every round used the
+                                                  # prefetched W-independent
+                                                  # context
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=10,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+
+
+def test_socket_pipelined_bit_identical_with_real_straggler(binary_data):
+    """Full pipeline vs a worker process that REALLY sleeps: the stable
+    fast subset makes the streaming prediction hit, the sleeper never
+    enters a decode, and the weights stay bit-identical to the
+    reference."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=5, K=1, T=1, r=1)        # threshold 4
+    runner, w = _run_socket(cfg, x, y, iters=8, sleep_s={2: 0.4},
+                            pipeline="full")
+    stats = runner.wait_stats()
+    for t, rec in runner.records.items():
+        if t >= 1:                                # round 0 is jit warmup
+            assert 2 not in set(map(int, rec.survivors))
+    # with the sleeper pinned outside the fast set, the predicted subset
+    # repeats and the incremental fold actually fires (round 0 has no
+    # prediction; round 1's plan may lag in the prefetch thread)
+    assert stats["rounds"]["streamed"] >= 4.0
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=8,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+
+
+def test_socket_pipelined_minibatch_ships_next_batch(binary_data):
+    """Mini-batch + pipeline over the wire: the master ships round t+1's
+    batch indices ahead (worker pre-slices its coded sub-batch) and the
+    result must still reproduce make_schedule's derivations exactly."""
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=5, K=1, T=1, r=1, batch_rows=16)
+    runner, w = _run_socket(cfg, x, y, iters=6, pipeline="full")
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=6,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
 
 
 def test_socket_heartbeats_feed_monitor_on_wall_clock(binary_data):
