@@ -31,7 +31,17 @@ Two questions about the live backend (DESIGN.md §7):
      a wall clock, with worker processes, frames, and relays included —
      bit-identity to the single-host oracle is part of the acceptance.
 
+  5. WIRE v1 vs v2 — the same live run on the legacy wire format
+     (``local_socket_cluster(wire_version=1)``): v2's packed/coalesced
+     frames (DESIGN.md §10) must ship strictly fewer bytes per round while
+     both stay bit-identical.  Every socket entry reports bytes-on-wire
+     from the scheduler's per-round ``wire_totals()`` deltas.
+  6. SCALE-N (``--scale-n``) — the fleet-size trend: N=16/32 worker
+     processes (64 with ``--full``) on a tiny problem, gated on
+     bit-identity and a sanity ceiling on per-round wall time.
+
     PYTHONPATH=src python benchmarks/bench_socket.py [--smoke] [--out PATH]
+                                                     [--scale-n] [--full]
 
 Writes BENCH_socket.json; CI's slow job runs --smoke and uploads the
 artifact alongside BENCH_cluster.json.  Round 0 is excluded from per-round
@@ -80,18 +90,22 @@ def bench_inprocess(cfg, x, y, iters: int) -> dict:
 
 
 def bench_socket(cfg, x, y, iters: int, sleep_s: float | None,
-                 pipeline: str = "off") -> dict:
+                 pipeline: str = "off", wire_version: int = 2,
+                 connect_timeout_s: float = 60.0) -> dict:
     straggler = {cfg.N - 1: sleep_s} if sleep_s else None
-    with local_socket_cluster(cfg.N, sleep_s=straggler) as tr:
+    with local_socket_cluster(cfg.N, sleep_s=straggler,
+                              wire_version=wire_version,
+                              connect_timeout_s=connect_timeout_s) as tr:
         runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
                                latency=None, transport=tr,
                                round_timeout_s=300.0,
                                collect_all=sleep_s is not None,
                                pipeline=pipeline)
-        runner.provision()
+        runner.provision(timeout_s=max(60.0, connect_timeout_s))
         t0 = time.perf_counter()
         w = runner.run(iters)
         wall = time.perf_counter() - t0
+        stats = runner.wait_stats()
         runner.shutdown_workers()
         # bit-identity is part of the benchmark contract: a fast wrong
         # backend is worthless
@@ -121,6 +135,15 @@ def bench_socket(cfg, x, y, iters: int, sleep_s: float | None,
         "pipeline": pipeline,
         "bit_identical": identical,
         "rounds": len(recs),
+        # bytes on the wire (satellite telemetry, DESIGN.md §10): per-round
+        # tx/rx from the scheduler's wire_totals() deltas + run totals
+        "wire_version": wire_version,
+        "wire": {
+            "tx_bytes_per_round": stats["wire_tx_bytes"]["mean"],
+            "rx_bytes_per_round": stats["wire_rx_bytes"]["mean"],
+            "tx_frames_per_round": stats["wire_tx_frames"]["mean"],
+            "totals": stats.get("wire_totals", {}),
+        },
     }
     if sleep_s:
         allw = [r.all_wait_s for r in recs if math.isfinite(r.all_wait_s)]
@@ -166,6 +189,35 @@ def bench_socket_mpc(cfg, x, y, iters: int, sleep_s: float) -> dict:
     return entry
 
 
+def bench_scale_n(full: bool) -> dict:
+    """Fleet-size trend: the same tiny problem on N=16/32 (and 64 with
+    ``--full``) worker processes.  On a contended box per-round wall time
+    grows with N (compute serializes across cores and the master writes N
+    frames), so the gate is not a flat number but SANITY: every scale stays
+    bit-identical and per-round overhead stays within an absolute ceiling —
+    a superlinear blowup (an O(N^2) wire or scheduler regression) blows
+    straight through it."""
+    sizes = [16, 32] + ([64] if full else [])
+    points = []
+    for n in sizes:
+        cfg = protocol.CPMLConfig(N=n, K=2, T=1, r=1)
+        x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=256, d=32)
+        entry = bench_socket(cfg, x, y, iters=4, sleep_s=None,
+                             connect_timeout_s=120.0 + 10.0 * n)
+        points.append({
+            "N": n,
+            "threshold": cfg.threshold,
+            "coded_T_mean_s": entry["coded_T"]["mean"],
+            "full_round_mean_s": entry["full_round"]["mean"],
+            "tx_bytes_per_round": entry["wire"]["tx_bytes_per_round"],
+            "bit_identical": entry["bit_identical"],
+        })
+        emit(f"socket/scale_n[{n}]", entry["full_round"]["mean"] * 1e6,
+             f"threshold={cfg.threshold} "
+             f"bit_identical={entry['bit_identical']}")
+    return {"points": points, "m": 256, "d": 32, "iters": 4}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
@@ -174,6 +226,11 @@ def main(argv=None) -> int:
                     help="small shapes + few rounds (CI)")
     ap.add_argument("--sleep-s", type=float, default=0.25,
                     help="injected straggler sleep per round (> 0)")
+    ap.add_argument("--scale-n", action="store_true",
+                    help="add the fleet-size trend (N=16/32 tiny-shape "
+                         "runs; N=64 too with --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="include the N=64 point in --scale-n")
     args = ap.parse_args(argv)
     if args.sleep_s <= 0:
         ap.error("--sleep-s must be > 0: the straggler comparison is the "
@@ -188,6 +245,9 @@ def main(argv=None) -> int:
 
     inproc = bench_inprocess(cfg, x, y, iters)
     live = bench_socket(cfg, x, y, iters, sleep_s=None)
+    # the same run on the legacy v1 wire: same messages, fatter frames —
+    # the byte-for-byte baseline the packed/coalesced v2 format must beat
+    live_v1 = bench_socket(cfg, x, y, iters, sleep_s=None, wire_version=1)
     straggled = bench_socket(cfg, x, y, iters, sleep_s=args.sleep_s)
     # the pipelined engine under the same real straggler: the stable fast
     # subset makes the streaming prediction hit, and the prefetch thread
@@ -206,6 +266,16 @@ def main(argv=None) -> int:
     overhead = (live["full_round"]["mean"] - inproc["wall_s_per_round"])
     speedup_vs_mpc_live = (mpc_live["mpc_round"]["mean"]
                            / straggled["coded_T"]["mean"])
+    wire_cmp = {
+        "v1_tx_bytes_per_round": live_v1["wire"]["tx_bytes_per_round"],
+        "v2_tx_bytes_per_round": live["wire"]["tx_bytes_per_round"],
+        "v2_byte_ratio": (live["wire"]["tx_bytes_per_round"]
+                          / max(live_v1["wire"]["tx_bytes_per_round"], 1.0)),
+    }
+    emit("socket/wire_v2_bytes", wire_cmp["v2_byte_ratio"] * 1e6,
+         f"{wire_cmp['v2_tx_bytes_per_round'] / 1e3:.1f} kB/round vs "
+         f"{wire_cmp['v1_tx_bytes_per_round'] / 1e3:.1f} kB v1")
+    scale = bench_scale_n(args.full) if args.scale_n else None
     master_seq = (straggled["encode"]["mean"] + straggled["decode"]["mean"])
     master_pipe = (straggled_pipe["encode"]["mean"]
                    + straggled_pipe["decode"]["mean"])
@@ -236,10 +306,13 @@ def main(argv=None) -> int:
         "smoke": args.smoke,
         "in_process": inproc,
         "socket": live,
+        "socket_v1": live_v1,
         "socket_straggler": straggled,
         "socket_straggler_pipelined": straggled_pipe,
         "pipeline": pipeline_cmp,
         "socket_mpc": mpc_live,
+        "wire_cmp": wire_cmp,
+        "scale_n": scale,
         "transport_overhead_s_per_round": overhead,
         "speedup_vs_mpc_live": speedup_vs_mpc_live,
         "acceptance": {
@@ -265,8 +338,28 @@ def main(argv=None) -> int:
                 and straggled_pipe["streamed_rounds"] >= 1),
             "pipelined_bit_identical": bool(
                 straggled_pipe["bit_identical"]),
+            # wire v2 ships the same rounds in strictly fewer bytes than
+            # the v1 baseline run (lossless narrowing + coalescing), and
+            # the v1 run itself stays bit-identical — compatibility is
+            # part of the contract, not just speed
+            "wire_v2_fewer_bytes": bool(
+                live["wire"]["tx_bytes_per_round"]
+                < live_v1["wire"]["tx_bytes_per_round"]),
+            "wire_v1_bit_identical": bool(live_v1["bit_identical"]),
         },
     }
+    if not args.smoke:
+        # ISSUE 6 acceptance: steady-state per-round first-T wait at the
+        # committed full shapes (N=8, m=1024, d=64) at most half the
+        # pre-v2 committed baseline's 0.516 s/round
+        report["acceptance"]["round_overhead_halved"] = bool(
+            live["coded_T"]["mean"] <= 0.26)
+    if scale is not None:
+        # sanity ceiling, not a race: see bench_scale_n docstring
+        report["acceptance"]["scale_n_bit_identical"] = all(
+            p["bit_identical"] for p in scale["points"])
+        report["acceptance"]["scale_n_bounded"] = all(
+            p["full_round_mean_s"] <= 2.0 for p in scale["points"])
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

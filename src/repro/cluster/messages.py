@@ -34,6 +34,15 @@ def worker_endpoint(worker: int) -> str:
     return f"worker/{worker}"
 
 
+# The canonical per-(worker, round) dispatch payload the scheduler ships in
+# one EncodeShare (runner.step_round): the round's weight share, this
+# round's batch rows, and — when pipelining — the NEXT round's rows so the
+# worker can pre-slice.  Wire v2 coalesces exactly this dict into a single
+# compact ROUND frame (wire.py); any other payload shape (provisioning,
+# shutdown, tests) rides the generic encoding unchanged.
+ROUND_PAYLOAD_KEYS = ("w_share", "batch", "next_batch")
+
+
 @dataclasses.dataclass(frozen=True)
 class EncodeShare:
     """Master -> worker: round t's coded weight share (+ optional batch)."""

@@ -105,6 +105,10 @@ class RoundRecord:
     decode_s: float = 0.0        # master decode+step on the critical path
     prefetched: bool = False     # W-independent half built ahead of time
     streamed: bool = False       # decode was the incremental fold (hit)
+    tx_bytes: int = 0            # wire bytes enqueued during the round
+    rx_bytes: int = 0            # wire bytes received during the round
+    tx_frames: int = 0           # (all four zero on the simulated backend)
+    rx_frames: int = 0
 
     @property
     def critical_path_s(self) -> float:
@@ -498,7 +502,9 @@ class ClusterRunner:
             coded_wait_s=trace.coded_wait_s, all_wait_s=trace.all_wait_s,
             replayed=replayed,
             encode_s=trace.encode_s, decode_s=trace.decode_s,
-            prefetched=ctx is not None, streamed=streamed)
+            prefetched=ctx is not None, streamed=streamed,
+            tx_bytes=trace.tx_bytes, rx_bytes=trace.rx_bytes,
+            tx_frames=trace.tx_frames, rx_frames=trace.rx_frames)
         return trace
 
     # ------------------------------------------------------------------
@@ -576,14 +582,27 @@ class ClusterRunner:
         allw = np.array([r.all_wait_s for r in recs])
         enc = np.array([r.encode_s for r in recs])
         dec = np.array([r.decode_s for r in recs])
-        return {"coded_T": wait_summary(coded),
-                "wait_all": wait_summary(allw[np.isfinite(allw)]),
-                "encode": wait_summary(enc),
-                "decode": wait_summary(dec),
-                "critical_path": wait_summary(enc + coded + dec),
-                "rounds": {"n": float(len(recs)),
-                           "dead_rounds": float(np.sum(~np.isfinite(allw))),
-                           "prefetched": float(sum(r.prefetched
-                                                   for r in recs)),
-                           "streamed": float(sum(r.streamed
-                                                 for r in recs))}}
+        stats = {"coded_T": wait_summary(coded),
+                 "wait_all": wait_summary(allw[np.isfinite(allw)]),
+                 "encode": wait_summary(enc),
+                 "decode": wait_summary(dec),
+                 "critical_path": wait_summary(enc + coded + dec),
+                 # per-round bytes/frames on the wire (socket backend; all
+                 # zero on the simulation, where nothing is serialized)
+                 "wire_tx_bytes": wait_summary([r.tx_bytes for r in recs]),
+                 "wire_rx_bytes": wait_summary([r.rx_bytes for r in recs]),
+                 "wire_tx_frames": wait_summary([r.tx_frames for r in recs]),
+                 "wire_rx_frames": wait_summary([r.rx_frames for r in recs]),
+                 "rounds": {"n": float(len(recs)),
+                            "dead_rounds": float(np.sum(~np.isfinite(allw))),
+                            "prefetched": float(sum(r.prefetched
+                                                    for r in recs)),
+                            "streamed": float(sum(r.streamed
+                                                  for r in recs))}}
+        wire_totals = getattr(self.scheduler.transport, "wire_totals", None)
+        if wire_totals is not None:
+            # run-level totals include provisioning (the big x_share ship)
+            # and heartbeats that landed between rounds
+            stats["wire_totals"] = {k: float(v)
+                                    for k, v in wire_totals().items()}
+        return stats

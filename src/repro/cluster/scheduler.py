@@ -139,6 +139,14 @@ class RoundTrace:
                                     # ready (t_first_R + post charges; on a
                                     # real transport set by the runner
                                     # after the actual update)
+    # wire accounting (real transports only; zeros on the simulation): the
+    # delta of the transport's wire_totals() across this round's dispatch +
+    # collect — bytes/frames enqueued to and decoded from ALL peers while
+    # the round ran, so coalescing/packing wins show up per round
+    tx_bytes: int = 0
+    rx_bytes: int = 0
+    tx_frames: int = 0
+    rx_frames: int = 0
 
     @property
     def coded_wait_s(self) -> float:
@@ -379,6 +387,8 @@ class EventScheduler:
         self._check_exitable(real, collect_all, timeout_s, monitor)
         if pre_s:
             self.time.advance_to(self.time.now() + pre_s)
+        wire0 = (self.transport.wire_totals()
+                 if hasattr(self.transport, "wire_totals") else None)
         t0 = self.time.now()
         sampled = self._send_round(round, workers, t0, payloads)
 
@@ -407,12 +417,16 @@ class EventScheduler:
                        else math.nan)     # real: runner stamps after update
         elif not real:
             self._park_starved(t0, deadline, t_all, monitor)
+        wire_d = {}
+        if wire0 is not None:
+            wire1 = self.transport.wire_totals()
+            wire_d = {k: wire1[k] - wire0[k] for k in wire0}
         return RoundTrace(
             round=round, t_start=t0, dispatched=workers,
             responders=np.asarray(responders, dtype=np.int64),
             arrivals=arrivals, latencies=latencies,
             t_first_R=t_first_R, t_all=t_all, payloads=round_payloads,
-            encode_s=pre_s, decode_s=post_s, t_ready=t_ready)
+            encode_s=pre_s, decode_s=post_s, t_ready=t_ready, **wire_d)
 
     # ------------------------------------------------------------------
     # Multi-phase MPC rounds (DESIGN.md §7: "MPC on the cluster runtime")

@@ -15,10 +15,40 @@ encoding.  Three design constraints (DESIGN.md §7):
   * FAIL LOUD — malformed or truncated input raises ``WireError`` with a
     description of what broke; it never hangs and never returns garbage.
 
-``serialize``/``deserialize`` round-trip the three message dataclasses
+``serialize``/``deserialize`` round-trip the message dataclasses
 (messages.py) plus two socket-layer frames: HELLO (endpoint registration on
 connect) and RAW (an arbitrary encodable value — used by the backend-shared
 transport contract tests, which ship plain strings/ints).
+
+Two wire VERSIONS coexist (DESIGN.md §10).  v1 is the original encoding
+above.  v2 adds three encodings that cut bytes and copies without touching
+the value semantics — every v2 frame decodes to a message ``messages_equal``
+to its v1 twin:
+
+  * PACKED (value tag): a non-negative int32 array whose max fits in
+    1/2/3 bytes ships that many little-endian bytes per element instead of
+    4.  Field shares under the 24-bit prime P pack to 3 bytes/element;
+    P30 shares exceed 24 bits and fall back to the raw 4-byte encoding.
+    This is LOSSLESS dtype narrowing keyed on the actual value range
+    (core/quantize.py's ``wire_itemsize`` gives the per-prime width), never
+    lossy compression — coded shares must stay bit-exact.
+  * ROUND (frame tag): the per-(worker, round) EncodeShare whose payload is
+    the scheduler's ``{"w_share", "batch", "next_batch"}`` dict coalesces
+    into ONE compact frame (presence bitmap + packed arrays) instead of a
+    generic dict encoding.
+  * HELLO2 (frame tag): HELLO plus the sender's wire version, the
+    negotiation handshake.  A v1 peer sends plain HELLO and is spoken to in
+    v1 forever; a v2 master acks HELLO2 so both sides upgrade.
+
+Encoders take an explicit ``version`` and NEVER emit v2 tags below
+``WIRE_V2``; decoders take the version negotiated for the stream and reject
+v2 tags on a v1 stream exactly as a real v1 peer would (unknown tag).
+
+``serialize_iovec`` is the zero-copy path: it returns the frame as a list
+of buffers (header runs as small ``bytes``, array bodies as ``memoryview``s
+of the arrays themselves) ready for ``socket.sendmsg`` scatter-gather — the
+hot path never materializes a joined frame copy.  ``serialize`` is the
+``b"".join`` of it, kept for tests and one-shot callers.
 """
 from __future__ import annotations
 
@@ -29,6 +59,7 @@ from typing import Any
 import numpy as np
 
 from repro.cluster.messages import (
+    ROUND_PAYLOAD_KEYS,
     CombineResult,
     EncodeShare,
     Heartbeat,
@@ -37,6 +68,10 @@ from repro.cluster.messages import (
 )
 
 MAX_FRAME_BYTES = 1 << 30        # reject absurd length prefixes outright
+
+WIRE_V1 = 1                      # original tagged encoding
+WIRE_V2 = 2                      # + PACKED / ROUND / HELLO2
+WIRE_VERSION = WIRE_V2           # newest version this build speaks
 
 # frame tags (first body byte)
 _FRAME_ENCODE_SHARE = 0x10
@@ -47,6 +82,8 @@ _FRAME_RAW = 0x14
 _FRAME_FORWARD = 0x15
 _FRAME_SUB_SHARE = 0x16
 _FRAME_COMBINE_RESULT = 0x17
+_FRAME_HELLO2 = 0x18             # v2: HELLO + sender wire version
+_FRAME_ROUND = 0x19              # v2: coalesced (worker, round) EncodeShare
 
 # value tags
 _T_NONE = 0x00
@@ -61,6 +98,11 @@ _T_INTARRAY = 0x08               # object-dtype array of exact python ints
 _T_LIST = 0x09
 _T_TUPLE = 0x0A
 _T_DICT = 0x0B
+_T_PACKED = 0x0C                 # v2: bit-packed non-negative int32 array
+
+# array bodies at least this big ride as memoryviews in the iovec; smaller
+# ones are folded into the adjacent header bytes (fewer sendmsg buffers)
+_BLOB_MIN = 256
 
 
 class WireError(ValueError):
@@ -70,8 +112,15 @@ class WireError(ValueError):
 @dataclasses.dataclass(frozen=True)
 class Hello:
     """Connection registration: the first frame a client sends names its
-    endpoint ("worker/3") so the master can route by destination."""
+    endpoint ("worker/3") so the master can route by destination.
+
+    ``version`` is the sender's wire version.  On the wire a v1 HELLO has no
+    version field (decodes as 1); a v2 sender uses the HELLO2 frame, and the
+    master acks with its own HELLO2 so both directions upgrade (DESIGN.md
+    §10).  Both ends speak ``min(theirs, ours)`` per peer thereafter.
+    """
     endpoint: str
+    version: int = WIRE_V1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +139,9 @@ class Forward:
     master — so worker->worker traffic (SubShare, DESIGN.md §7) rides to the
     master wrapped in a Forward, and the master writes the inner frame bytes
     to the destination connection VERBATIM (no re-serialization on the relay
-    hop).  Never surfaced to recv(): the transport consumes it.
+    hop).  The inner frame is always encoded at v1: the sender cannot know
+    what version the final recipient negotiated.  Never surfaced to recv():
+    the transport consumes it.
     """
     dst: str
     frame: bytes
@@ -104,7 +155,22 @@ def _enc_u32(n: int) -> bytes:
     return struct.pack(">I", n)
 
 
-def _enc_value(v: Any, out: list[bytes]) -> None:
+def _pack_itemsize(vmax: int) -> int:
+    """Bytes/element for the PACKED encoding of values in [0, vmax]."""
+    return 1 if vmax < (1 << 8) else 2 if vmax < (1 << 16) else 3
+
+
+def _append_blob(out: list, arr: np.ndarray) -> None:
+    """Array body -> iovec entry: a memoryview of the array itself when big
+    enough to be worth a scatter-gather slot, a small bytes copy otherwise
+    (0-d and tiny arrays aren't worth an iovec entry)."""
+    if arr.nbytes >= _BLOB_MIN and arr.ndim > 0:
+        out.append(memoryview(arr).cast("B"))
+    else:
+        out.append(arr.tobytes())
+
+
+def _enc_value(v: Any, out: list, version: int = WIRE_V1) -> None:
     if v is None:
         out.append(bytes([_T_NONE]))
     elif isinstance(v, bool):
@@ -134,41 +200,60 @@ def _enc_value(v: Any, out: list[bytes]) -> None:
                     f"object arrays may only hold ints, got {type(e).__name__}")
             _enc_value(int(e), out)
     elif isinstance(v, np.ndarray):
+        if version >= WIRE_V2 and v.dtype == np.int32 and v.size:
+            a = np.ascontiguousarray(v, dtype="<i4")
+            vmin, vmax = int(a.min()), int(a.max())
+            if vmin >= 0 and vmax < (1 << 24):
+                # lossless narrowing: the low `w` little-endian bytes of
+                # each element carry the full value (field shares under the
+                # 24-bit P: w=3; P30 shares miss this branch and ship raw)
+                w = _pack_itemsize(vmax)
+                out.append(bytes([_T_PACKED, w, v.ndim])
+                           + b"".join(_enc_u32(d) for d in v.shape))
+                flat = a.reshape(-1).view(np.uint8).reshape(-1, 4)[:, :w]
+                _append_blob(out, np.ascontiguousarray(flat))
+                return
         dt = v.dtype.newbyteorder("<")
         ds = dt.str.encode("ascii")
         out.append(bytes([_T_NDARRAY, len(ds)]) + ds + bytes([v.ndim]))
         for dim in v.shape:
             out.append(_enc_u32(dim))
-        out.append(np.ascontiguousarray(v, dtype=dt).tobytes())
+        _append_blob(out, np.ascontiguousarray(v, dtype=dt))
     elif isinstance(v, list):
         out.append(bytes([_T_LIST]) + _enc_u32(len(v)))
         for e in v:
-            _enc_value(e, out)
+            _enc_value(e, out, version)
     elif isinstance(v, tuple):
         out.append(bytes([_T_TUPLE]) + _enc_u32(len(v)))
         for e in v:
-            _enc_value(e, out)
+            _enc_value(e, out, version)
     elif isinstance(v, dict):
         out.append(bytes([_T_DICT]) + _enc_u32(len(v)))
         for k, e in v.items():
             if not isinstance(k, str):
                 raise WireError(f"dict keys must be str, got {type(k).__name__}")
-            _enc_value(k, out)
-            _enc_value(e, out)
+            _enc_value(k, out, version)
+            _enc_value(e, out, version)
     else:
         # device arrays (jax) quack like arrays; anything else is a bug.
         arr = np.asarray(v)
         if arr.dtype == object:
             raise WireError(f"cannot encode {type(v).__name__}")
-        _enc_value(arr, out)
+        _enc_value(arr, out, version)
 
 
 class _Reader:
-    def __init__(self, data: bytes):
-        self.data = data
-        self.pos = 0
+    """Cursor over one frame body.  Works on a memoryview so buffered and
+    zero-copy callers share one parser; ``version`` is the stream's
+    negotiated wire version — v2 tags on a v1 stream are rejected exactly
+    like any unknown tag, which is what a REAL v1 peer would do."""
 
-    def take(self, n: int) -> bytes:
+    def __init__(self, data, version: int = WIRE_VERSION):
+        self.data = data if isinstance(data, memoryview) else memoryview(data)
+        self.pos = 0
+        self.version = version
+
+    def take(self, n: int) -> memoryview:
         if n < 0 or self.pos + n > len(self.data):
             raise WireError(
                 f"truncated frame: wanted {n} bytes at offset {self.pos}, "
@@ -199,15 +284,15 @@ def _dec_value(r: _Reader) -> Any:
     if tag == _T_FLOAT:
         return struct.unpack(">d", r.take(8))[0]
     if tag == _T_STR:
-        return r.take(r.u32()).decode("utf-8")
+        return bytes(r.take(r.u32())).decode("utf-8")
     if tag == _T_BYTES:
-        return r.take(r.u32())
+        return bytes(r.take(r.u32()))
     if tag == _T_NDARRAY:
         # the fail-loud contract covers garbage INSIDE fields too: a bogus
         # dtype string or impossible shape must surface as WireError, not
         # as whatever numpy happens to raise
         try:
-            dt = np.dtype(r.take(r.u8()).decode("ascii"))
+            dt = np.dtype(bytes(r.take(r.u8())).decode("ascii"))
         except Exception as e:
             raise WireError(f"malformed ndarray dtype: {e}") from None
         shape = tuple(r.u32() for _ in range(r.u8()))
@@ -219,6 +304,22 @@ def _dec_value(r: _Reader) -> Any:
         except Exception as e:
             raise WireError(f"malformed ndarray body: {e}") from None
         return arr.copy()             # writable, detached from the buffer
+    if tag == _T_PACKED:
+        if r.version < WIRE_V2:
+            raise WireError(f"unknown value tag 0x{tag:02x} "
+                            f"(wire v2 PACKED on a v1 stream)")
+        w = r.u8()
+        if not 1 <= w <= 3:
+            raise WireError(f"packed array itemsize {w} not in 1..3")
+        shape = tuple(r.u32() for _ in range(r.u8()))
+        n = int(np.prod(shape, dtype=np.int64))
+        raw = r.take(n * w)
+        # reassemble directly into the preallocated 4-byte-strided array:
+        # low `w` bytes from the wire, high bytes already zero
+        quad = np.zeros((n, 4), dtype=np.uint8)
+        if n:
+            quad[:, :w] = np.frombuffer(raw, dtype=np.uint8).reshape(n, w)
+        return quad.view("<i4").reshape(shape)
     if tag == _T_INTARRAY:
         shape = tuple(r.u32() for _ in range(r.u8()))
         n = int(np.prod(shape, dtype=np.int64))
@@ -239,33 +340,61 @@ def _dec_value(r: _Reader) -> Any:
 # Message frames
 # ---------------------------------------------------------------------------
 
-def serialize(msg: Any) -> bytes:
-    """Message -> one length-prefixed frame (ready for ``sendall``)."""
-    out: list[bytes] = []
+def _round_frame_eligible(msg: EncodeShare) -> bool:
+    """Exactly the scheduler's round-dispatch payload shape (runner.py):
+    all three ROUND_PAYLOAD_KEYS present, each an array or None."""
+    p = msg.payload
+    return (isinstance(p, dict) and set(p) == set(ROUND_PAYLOAD_KEYS)
+            and all(p[k] is None or isinstance(p[k], np.ndarray)
+                    for k in ROUND_PAYLOAD_KEYS))
+
+
+def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
+    """Message -> one frame as a buffer list for ``socket.sendmsg``.
+
+    Header/scalar runs are small ``bytes``; array bodies are ``memoryview``s
+    over the (contiguous, possibly packed) arrays themselves — the caller
+    hands the list straight to sendmsg without ever joining it.  Entry 0
+    starts with the u32 length prefix.
+    """
+    out: list = []
     if isinstance(msg, EncodeShare):
-        out.append(bytes([_FRAME_ENCODE_SHARE]))
-        _enc_value(msg.round, out)
-        _enc_value(msg.worker, out)
-        _enc_value(msg.payload, out)
+        if version >= WIRE_V2 and _round_frame_eligible(msg):
+            out.append(bytes([_FRAME_ROUND]))
+            _enc_value(msg.round, out)
+            _enc_value(msg.worker, out)
+            present = 0
+            for i, k in enumerate(ROUND_PAYLOAD_KEYS):
+                if msg.payload[k] is not None:
+                    present |= 1 << i
+            out.append(bytes([present]))
+            for k in ROUND_PAYLOAD_KEYS:
+                if msg.payload[k] is not None:
+                    _enc_value(msg.payload[k], out, version)
+        else:
+            out.append(bytes([_FRAME_ENCODE_SHARE]))
+            _enc_value(msg.round, out)
+            _enc_value(msg.worker, out)
+            _enc_value(msg.payload, out, version)
     elif isinstance(msg, WorkerResult):
         out.append(bytes([_FRAME_WORKER_RESULT]))
         _enc_value(msg.round, out)
         _enc_value(msg.worker, out)
         _enc_value(msg.compute_s, out)
-        _enc_value(msg.payload, out)
+        _enc_value(msg.payload, out, version)
     elif isinstance(msg, SubShare):
         out.append(bytes([_FRAME_SUB_SHARE]))
         _enc_value(msg.round, out)
         _enc_value(msg.phase, out)
         _enc_value(msg.src, out)
         _enc_value(msg.dst, out)
-        _enc_value(msg.payload, out)
+        _enc_value(msg.payload, out, version)
     elif isinstance(msg, CombineResult):
         out.append(bytes([_FRAME_COMBINE_RESULT]))
         _enc_value(msg.round, out)
         _enc_value(msg.worker, out)
         _enc_value(msg.compute_s, out)
-        _enc_value(msg.payload, out)
+        _enc_value(msg.payload, out, version)
     elif isinstance(msg, Heartbeat):
         out.append(bytes([_FRAME_HEARTBEAT]))
         _enc_value(msg.worker, out)
@@ -275,24 +404,69 @@ def serialize(msg: Any) -> bytes:
         _enc_value(msg.dst, out)
         _enc_value(msg.frame, out)
     elif isinstance(msg, Hello):
-        out.append(bytes([_FRAME_HELLO]))
-        _enc_value(msg.endpoint, out)
+        if version >= WIRE_V2 and msg.version >= WIRE_V2:
+            out.append(bytes([_FRAME_HELLO2]))
+            _enc_value(msg.endpoint, out)
+            _enc_value(msg.version, out)
+        else:
+            # a v1 wire cannot express a version: the field is dropped and
+            # the receiver correctly infers a v1 peer
+            out.append(bytes([_FRAME_HELLO]))
+            _enc_value(msg.endpoint, out)
     else:
         out.append(bytes([_FRAME_RAW]))
-        _enc_value(msg, out)
-    body = b"".join(out)
-    if len(body) > MAX_FRAME_BYTES:
-        raise WireError(f"frame body of {len(body)} bytes exceeds "
+        _enc_value(msg, out, version)
+    body_len = sum(len(c) for c in out)
+    if body_len > MAX_FRAME_BYTES:
+        raise WireError(f"frame body of {body_len} bytes exceeds "
                         f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
-    return _enc_u32(len(body)) + body
+    return _coalesce_iovec([_enc_u32(body_len)] + out)
 
 
-def _decode_body(body: bytes) -> Any:
-    r = _Reader(body)
+def _coalesce_iovec(parts: list) -> list:
+    """Merge adjacent small chunks into single buffers so the iovec stays a
+    handful of entries (header run, array body, header run, ...)."""
+    out: list = []
+    run = bytearray()
+    for c in parts:
+        if isinstance(c, memoryview):
+            if run:
+                out.append(bytes(run))
+                run = bytearray()
+            out.append(c)
+        else:
+            run += c
+    if run:
+        out.append(bytes(run))
+    return out
+
+
+def iovec_nbytes(bufs: list) -> int:
+    """Total byte length of a serialize_iovec result (tx accounting)."""
+    return sum(len(b) for b in bufs)
+
+
+def serialize(msg: Any, version: int = WIRE_V1) -> bytes:
+    """Message -> one length-prefixed frame (ready for ``sendall``)."""
+    return b"".join(serialize_iovec(msg, version))
+
+
+def _decode_body(body, version: int = WIRE_VERSION) -> Any:
+    r = _Reader(body, version)
     tag = r.u8()
     if tag == _FRAME_ENCODE_SHARE:
         msg = EncodeShare(round=_dec_value(r), worker=_dec_value(r),
                           payload=_dec_value(r))
+    elif tag == _FRAME_ROUND:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 ROUND on a v1 stream)")
+        rnd = _dec_value(r)
+        worker = _dec_value(r)
+        present = r.u8()
+        payload = {k: (_dec_value(r) if present & (1 << i) else None)
+                   for i, k in enumerate(ROUND_PAYLOAD_KEYS)}
+        msg = EncodeShare(round=rnd, worker=worker, payload=payload)
     elif tag == _FRAME_WORKER_RESULT:
         msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
                            compute_s=_dec_value(r), payload=_dec_value(r))
@@ -313,20 +487,31 @@ def _decode_body(body: bytes) -> Any:
         msg = Forward(dst=dst, frame=frame)
     elif tag == _FRAME_HELLO:
         msg = Hello(endpoint=_dec_value(r))
+    elif tag == _FRAME_HELLO2:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 HELLO2 on a v1 stream)")
+        endpoint = _dec_value(r)
+        ver = _dec_value(r)
+        if not isinstance(endpoint, str) or not isinstance(ver, int):
+            raise WireError("malformed HELLO2 frame")
+        msg = Hello(endpoint=endpoint, version=ver)
     elif tag == _FRAME_RAW:
         msg = Raw(value=_dec_value(r)).value
     else:
         raise WireError(f"unknown frame tag 0x{tag:02x}")
-    if r.pos != len(body):
-        raise WireError(f"{len(body) - r.pos} trailing bytes after frame")
+    if r.pos != len(r.data):
+        raise WireError(f"{len(r.data) - r.pos} trailing bytes after frame")
     return msg
 
 
-def deserialize(frame: bytes) -> Any:
+def deserialize(frame: bytes, version: int = WIRE_VERSION) -> Any:
     """One complete length-prefixed frame -> message.
 
     Raises WireError on a short, overlong, or malformed frame — a corrupt
     peer must produce a clear error on the spot, never a hang downstream.
+    ``version`` is the stream's negotiated version; pass ``WIRE_V1`` to
+    decode exactly as a v1 peer would (v2 tags become unknown-tag errors).
     """
     if len(frame) < 4:
         raise WireError(f"frame shorter than its 4-byte length prefix "
@@ -338,7 +523,7 @@ def deserialize(frame: bytes) -> Any:
     if len(frame) != 4 + n:
         raise WireError(f"frame length mismatch: prefix says {n} body bytes, "
                         f"got {len(frame) - 4}")
-    return _decode_body(frame[4:])
+    return _decode_body(memoryview(frame)[4:], version)
 
 
 class FrameReader:
@@ -347,22 +532,59 @@ class FrameReader:
     ``feed(chunk)`` returns every message completed by the chunk; partial
     frames are buffered until the rest arrives.  A bad length prefix raises
     immediately (a desynchronized stream cannot be resynchronized).
+
+    Zero-copy recv path (DESIGN.md §10): ``feed`` accepts a memoryview over
+    the transport's persistent recv scratch buffer and decodes complete
+    frames IN PLACE — array payloads are reassembled straight from the
+    scratch/stream buffer into their own freshly allocated arrays, with no
+    intermediate ``bytes`` materialization.  Only a trailing partial frame
+    is buffered.  ``version`` is the negotiated stream version; a v1 reader
+    rejects v2 tags like any real v1 peer.
     """
 
-    def __init__(self):
+    def __init__(self, version: int = WIRE_VERSION):
         self._buf = bytearray()
+        self.version = version
 
-    def feed(self, chunk: bytes) -> list[Any]:
-        self._buf.extend(chunk)
-        msgs = []
-        while len(self._buf) >= 4:
-            (n,) = struct.unpack(">I", self._buf[:4])
-            if n > MAX_FRAME_BYTES:
-                raise WireError(f"length prefix {n} exceeds "
-                                f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
-            if len(self._buf) < 4 + n:
+    def _frame_len(self, view) -> int | None:
+        """Body length of the frame at ``view``'s start, or None if the
+        prefix (or body) isn't fully available yet."""
+        if len(view) < 4:
+            return None
+        n = int.from_bytes(view[:4], "big")
+        if n > MAX_FRAME_BYTES:
+            raise WireError(f"length prefix {n} exceeds "
+                            f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+        return n if len(view) >= 4 + n else None
+
+    def feed(self, chunk) -> list[Any]:
+        msgs: list[Any] = []
+        mv = chunk if isinstance(chunk, memoryview) else memoryview(chunk)
+        if not self._buf:
+            # fast path: decode complete frames straight out of the caller's
+            # buffer; only the trailing partial frame (if any) is copied in
+            pos = 0
+            while True:
+                n = self._frame_len(mv[pos:])
+                if n is None:
+                    break
+                msgs.append(_decode_body(mv[pos + 4: pos + 4 + n],
+                                         self.version))
+                pos += 4 + n
+            if pos < len(mv):
+                self._buf.extend(mv[pos:])
+            return msgs
+        self._buf.extend(mv)
+        while True:
+            view = memoryview(self._buf)
+            try:
+                n = self._frame_len(view)
+                if n is not None:
+                    msgs.append(_decode_body(view[4: 4 + n], self.version))
+            finally:
+                view.release()
+            if n is None:
                 break
-            msgs.append(_decode_body(bytes(self._buf[4: 4 + n])))
             del self._buf[: 4 + n]
         return msgs
 

@@ -54,3 +54,16 @@ def required_prime_bits(x_max: float, lx: int) -> int:
     """Minimum bits so p >= 2^(lx+1) max|X| + 1 (no wrap-around, §3.1)."""
     import math
     return max(1, math.ceil(math.log2(2 ** (lx + 1) * max(x_max, 1e-9) + 1)))
+
+
+def wire_itemsize(p: int = field.P) -> int:
+    """Bytes/element needed to ship field elements of F_p losslessly.
+
+    Quantized shares are ints in [0, p), so ceil(bits(p-1) / 8) bytes carry
+    them bit-exactly: 3 for the 24-bit P, 4 for the 30-bit P30.  Wire v2's
+    PACKED encoding (cluster/wire.py, DESIGN.md §10) narrows int32 payloads
+    to exactly this width on the wire — dtype narrowing, never lossy
+    quantization (optim/compress.py is a different, opt-in animal and stays
+    off every protocol path).
+    """
+    return max(1, ((p - 1).bit_length() + 7) // 8)

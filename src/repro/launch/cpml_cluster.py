@@ -117,6 +117,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--heartbeat-timeout", type=float, default=math.inf,
                     help="wall seconds of heartbeat silence before a worker "
                          "drops from the dispatch set (socket only)")
+    ap.add_argument("--wire", choices=("v1", "v2"), default="v2",
+                    help="wire protocol version for the socket transport "
+                         "(DESIGN.md §10): v2 = bit-packed, coalesced, "
+                         "scatter-gather frames negotiated at HELLO; v1 = "
+                         "force the legacy format end to end (master AND "
+                         "spawned workers) for byte-for-byte comparison")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-identity check vs train_reference "
                          "(socket only)")
@@ -130,13 +136,16 @@ def local_socket_cluster(n_workers: int, *, port: int = 0,
                          die_at_round: dict[int, int] | None = None,
                          sleep_s: dict[int, float] | None = None,
                          connect_timeout_s: float = 60.0,
-                         poll_interval_s: float = 0.02):
+                         poll_interval_s: float = 0.02,
+                         wire_version: int = 2):
     """Spawn N cpml_worker processes against a fresh master transport.
 
     Yields the master ``SocketTransport`` once every worker has connected
     and HELLOed.  On exit the worker processes are terminated and the
     transport closed.  Reused by benchmarks/bench_socket.py and the slow
     socket tests, so every consumer launches workers the same way.
+    ``wire_version=1`` forces the legacy wire format on the master AND every
+    spawned worker (the v1 baseline for byte-for-byte comparison).
     """
     from repro.cluster.socket_transport import SocketTransport
     from repro.cluster.messages import worker_endpoint
@@ -147,13 +156,14 @@ def local_socket_cluster(n_workers: int, *, port: int = 0,
     env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
     env.setdefault("JAX_PLATFORMS", "cpu")
 
-    tr = SocketTransport.master(port=port, poll_interval_s=poll_interval_s)
+    tr = SocketTransport.master(port=port, poll_interval_s=poll_interval_s,
+                                wire_version=wire_version)
     procs: list[subprocess.Popen] = []
     try:
         for w in range(n_workers):
             cmd = [sys.executable, "-m", "repro.launch.cpml_worker",
                    "--host", "127.0.0.1", "--port", str(tr.port),
-                   "--worker", str(w)]
+                   "--worker", str(w), "--wire", str(wire_version)]
             if die_at_round and w in die_at_round:
                 cmd += ["--die-at-round", str(die_at_round[w])]
             if sleep_s and w in sleep_s:
@@ -190,7 +200,8 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
     if math.isinf(timeout):
         timeout = 120.0         # real silence must be detectable
     with local_socket_cluster(cfg.N, port=args.port, die_at_round=die,
-                              sleep_s=sleep) as tr:
+                              sleep_s=sleep,
+                              wire_version=int(args.wire[1:])) as tr:
         runner = ClusterRunner(cfg, key, x, y, latency=None, transport=tr,
                                round_timeout_s=timeout,
                                heartbeat_timeout_s=args.heartbeat_timeout,
@@ -203,6 +214,14 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
         runner.shutdown_workers()
     print(f"socket run: {args.iters} rounds over TCP in {wall_s:.1f}s "
           f"({wall_s / args.iters * 1e3:.0f} ms/round)")
+    stats = runner.wait_stats()
+    if "wire_totals" in stats:
+        tot, per = stats["wire_totals"], stats["wire_tx_bytes"]
+        print(f"wire [{args.wire}]: {tot['tx_bytes'] / 1e6:.2f} MB tx / "
+              f"{tot['rx_bytes'] / 1e6:.2f} MB rx total "
+              f"({per['mean'] / 1e3:.1f} kB/round tx, "
+              f"{stats['wire_rx_bytes']['mean'] / 1e3:.1f} kB/round rx, "
+              f"{int(tot['tx_frames'])} frames out)")
     if die:
         dead = set(die)
         late = [t for t, rec in runner.records.items()
@@ -267,7 +286,8 @@ def _run_mpc(args) -> int:
             timeout = 120.0
         sleep = ({args.straggle_worker: args.straggle_sleep}
                  if args.straggle_worker is not None else None)
-        with local_socket_cluster(cfg.N, port=args.port, sleep_s=sleep) as tr:
+        with local_socket_cluster(cfg.N, port=args.port, sleep_s=sleep,
+                                  wire_version=int(args.wire[1:])) as tr:
             runner = MPCClusterRunner(
                 cfg, key, x, y, None, transport=tr,
                 round_timeout_s=timeout,

@@ -60,11 +60,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sleep-s", type=float, default=0.0,
                     help="sleep this long before every reply — a real "
                          "injected straggler")
+    ap.add_argument("--wire", type=int, choices=(1, 2), default=2,
+                    help="wire protocol version this worker speaks "
+                         "(DESIGN.md §10): 2 = packed/coalesced frames "
+                         "negotiated at HELLO, 1 = behave exactly like a "
+                         "legacy v1 build")
     return ap
 
 
 def serve(args) -> int:
     # imports deferred so --help/arg errors don't pay jax startup
+    import jax
     import jax.numpy as jnp
     import numpy as np
 
@@ -78,7 +84,8 @@ def serve(args) -> int:
 
     me = worker_endpoint(args.worker)
     tr = SocketTransport.connect(args.host, args.port, me,
-                                 timeout_s=args.connect_timeout)
+                                 timeout_s=args.connect_timeout,
+                                 wire_version=args.wire)
     pending: collections.deque = collections.deque()
     subshares: dict[tuple[int, int], dict[int, object]] = {}
     state: dict[str, object] = {"protocol": None}
@@ -201,9 +208,26 @@ def serve(args) -> int:
                     # field-arithmetic spec (DESIGN.md §4), identical mod p.
                     state["protocol"] = "cpml"
                     cfg = CPMLConfig(**p["cfg"])
-                    state["f"] = compute.worker_fn(
-                        cfg, jnp.asarray(p["cbar"], jnp.int32))
+                    # jit the round evaluation: eager op-by-op dispatch of
+                    # the limb matmul costs ~50x the fused kernel per round
+                    # and was the bulk of the measured socket "overhead".
+                    # jit changes WHEN ops run, never what they compute —
+                    # exact int32 field math either way (DESIGN.md §4).
+                    state["f"] = jax.jit(compute.worker_fn(
+                        cfg, jnp.asarray(p["cbar"], jnp.int32)))
                 state["x_share"] = jnp.asarray(p["x_share"], jnp.int32)
+                if state["protocol"] == "cpml":
+                    # compile BEFORE acking: provisioning is the documented
+                    # warmup window (rounds start only after every ack, so
+                    # round-0 timing never absorbs XLA compilation).  Round
+                    # shapes are static: (batch_rows|mk, d) x (d, c, r).
+                    x_share = state["x_share"]
+                    rows = (cfg.batch_rows if cfg.batch_rows is not None
+                            else x_share.shape[0])
+                    xw = x_share[jnp.zeros(rows, jnp.int32)]
+                    ww = jnp.zeros((x_share.shape[1], cfg.c, cfg.r),
+                                   jnp.int32)
+                    state["f"](xw, ww).block_until_ready()
                 tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
                 continue
             if args.die_at_round is not None \

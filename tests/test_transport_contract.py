@@ -73,11 +73,15 @@ class Chan:
             self._pump = lambda: master.recv(MASTER, time.monotonic())
             self._to_close = [w0, w1, master]
         else:
+            # "socket" = a current v2 client; "socket-v1" = a legacy client
+            # that only speaks wire v1 — the whole contract must hold on the
+            # negotiated-down stream too (DESIGN.md §10)
             self.unit = REAL_UNIT
             master = SocketTransport.master(poll_interval_s=0.02)
-            client = SocketTransport.connect("127.0.0.1", master.port,
-                                             "worker/0",
-                                             poll_interval_s=0.02)
+            client = SocketTransport.connect(
+                "127.0.0.1", master.port, "worker/0", poll_interval_s=0.02,
+                wire_version=(wire.WIRE_V1 if backend == "socket-v1"
+                              else wire.WIRE_VERSION))
             master.wait_for_endpoints(["worker/0"], timeout_s=WAIT_S)
             self.producer, self.consumer = client, master
             self.dst = MASTER
@@ -115,8 +119,8 @@ class Chan:
             tr.close()
 
 
-@pytest.fixture(params=["inprocess", "socket", "peer-inprocess",
-                        "peer-socket"])
+@pytest.fixture(params=["inprocess", "socket", "socket-v1",
+                        "peer-inprocess", "peer-socket"])
 def chan(request):
     c = Chan(request.param)
     yield c
@@ -247,7 +251,105 @@ def test_relay_survives_slow_reader_beyond_socket_buffers():
         master.close()
 
 
-def test_relay_to_unknown_endpoint_is_dropped():
+def test_wire_version_negotiation_mixed_fleet():
+    """A legacy v1 worker and a current v2 worker on the SAME master
+    (DESIGN.md §10): the master speaks v1 to the one that sent plain HELLO
+    and v2 to the one whose HELLO2 it acked — and the round-shaped
+    EncodeShare (coalesced+packed on the v2 stream, generic on v1) arrives
+    bit-identical on both, as do the results coming back."""
+    from repro.cluster.messages import EncodeShare, WorkerResult
+
+    master = SocketTransport.master(poll_interval_s=0.02)
+    legacy = SocketTransport.connect("127.0.0.1", master.port, "worker/0",
+                                     poll_interval_s=0.02,
+                                     wire_version=wire.WIRE_V1)
+    modern = SocketTransport.connect("127.0.0.1", master.port, "worker/1",
+                                     poll_interval_s=0.02)
+    try:
+        master.wait_for_endpoints(["worker/0", "worker/1"], timeout_s=WAIT_S)
+        assert master.peer_version("worker/0") == wire.WIRE_V1
+        assert master.peer_version("worker/1") == wire.WIRE_V2
+        # the legacy client never upgrades; the modern one does once the
+        # master's HELLO2 ack lands (the client pumps its socket whenever
+        # the serve loop touches the transport, as next_delivery does here)
+        assert legacy.peer_version(MASTER) == wire.WIRE_V1
+        deadline = time.monotonic() + WAIT_S
+        while (modern.peer_version(MASTER) != wire.WIRE_V2
+               and time.monotonic() < deadline):
+            modern.next_delivery("worker/1")
+        assert modern.peer_version(MASTER) == wire.WIRE_V2
+
+        rng = np.random.default_rng(0)
+        payload = {
+            "w_share": rng.integers(0, 1 << 24, (32, 2, 2)).astype(np.int32),
+            "batch": np.arange(48, dtype=np.int32),
+            "next_batch": None,
+        }
+        before = master.wire_stats()        # after handshake: round traffic
+        for i, w in enumerate((legacy, modern)):
+            master.send(f"worker/{i}", EncodeShare(0, i, dict(payload)))
+            got = []
+            deadline = time.monotonic() + WAIT_S
+            while not got and time.monotonic() < deadline:
+                master.recv(MASTER, time.monotonic())
+                got = [m for _, m in w.recv(f"worker/{i}", time.monotonic())]
+            (msg,) = got
+            assert (msg.payload["w_share"] == payload["w_share"]).all()
+            assert (msg.payload["batch"] == payload["batch"]).all()
+            assert msg.payload["next_batch"] is None
+            w.send(MASTER, WorkerResult(0, i, 0.5, payload["w_share"] + i))
+        got = []
+        deadline = time.monotonic() + WAIT_S
+        while len(got) < 2 and time.monotonic() < deadline:
+            got += [m for _, m in master.recv(MASTER, time.monotonic())]
+        for m in got:
+            assert (m.payload == payload["w_share"] + m.worker).all()
+        # the v2 stream carried the same round share in fewer bytes
+        after = master.wire_stats()
+        tx = {ep: {k: after[ep][k] - before[ep][k] for k in after[ep]}
+              for ep in ("worker/0", "worker/1")}
+        assert tx["worker/0"]["tx_frames"] == tx["worker/1"]["tx_frames"] == 1
+        assert tx["worker/1"]["tx_bytes"] < tx["worker/0"]["tx_bytes"]
+    finally:
+        legacy.close()
+        modern.close()
+        master.close()
+
+
+def test_wire_stats_count_both_directions():
+    """Satellite telemetry contract: per-endpoint tx/rx byte & frame
+    counters advance on every leg and sum into wire_totals()."""
+    master = SocketTransport.master(poll_interval_s=0.02)
+    w0 = SocketTransport.connect("127.0.0.1", master.port, "worker/0",
+                                 poll_interval_s=0.02)
+    try:
+        master.wait_for_endpoints(["worker/0"], timeout_s=WAIT_S)
+        base = master.wire_totals()
+        w0.send(MASTER, "ping")
+        deadline = time.monotonic() + WAIT_S
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = [m for _, m in master.recv(MASTER, time.monotonic())]
+        assert got == ["ping"]
+        master.send("worker/0", "pong")
+        deadline = time.monotonic() + WAIT_S
+        got = []
+        while not got and time.monotonic() < deadline:
+            master.recv(MASTER, time.monotonic())      # pump the flush
+            got = [m for _, m in w0.recv("worker/0", time.monotonic())]
+        assert got == ["pong"]
+        stats = master.wire_stats()["worker/0"]
+        assert stats["rx_frames"] >= 1 and stats["rx_bytes"] > 0
+        assert stats["tx_frames"] >= 1 and stats["tx_bytes"] > 0
+        tot = master.wire_totals()
+        assert tot["tx_bytes"] > base["tx_bytes"]
+        assert tot["rx_bytes"] > base["rx_bytes"]
+        wstats = w0.wire_stats()[MASTER]
+        assert wstats["tx_frames"] >= 2          # HELLO2 + ping
+        assert wstats["rx_frames"] >= 2          # HELLO2 ack + pong
+    finally:
+        w0.close()
+        master.close()
     """A Forward to a never-registered (or dead) endpoint vanishes — the
     same lost-in-the-void semantics as any send to a dead peer — and must
     not wedge or crash the relaying master."""

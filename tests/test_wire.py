@@ -201,3 +201,147 @@ def test_frame_reader_reassembles_partial_feeds():
     assert len(got) == 5
     for a, b in zip(got, msgs):
         assert wire.messages_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Wire v2 (DESIGN.md §10): packed arrays, coalesced round frames, HELLO2
+# negotiation, iovec emission — every v2 frame decodes messages_equal to its
+# v1 twin, and a v1 reader rejects v2 tags like any real v1 build would.
+# ---------------------------------------------------------------------------
+
+def roundtrip_v2(msg):
+    out = wire.deserialize(wire.serialize(msg, wire.WIRE_V2))
+    assert wire.messages_equal(out, msg), f"{out!r} != {msg!r}"
+    return out
+
+
+@pytest.mark.parametrize("p", [field.P, field.P30])
+def test_v2_field_array_roundtrip_and_width(p):
+    """Shares under the 24-bit P pack to 3 bytes/element; P30 values above
+    2^24 are ineligible and ship raw — decoded bits identical either way."""
+    from repro.core import quantize
+    rng = np.random.default_rng(5)
+    payload = rng.integers(0, p, size=(64, 3), dtype=np.int64).astype(np.int32)
+    v1 = wire.serialize(WorkerResult(3, 1, 0.25, payload), wire.WIRE_V1)
+    v2 = wire.serialize(WorkerResult(3, 1, 0.25, payload), wire.WIRE_V2)
+    out = roundtrip_v2(WorkerResult(3, 1, 0.25, payload))
+    assert out.payload.dtype == np.int32 and (out.payload == payload).all()
+    if int(payload.max()) < 1 << 24:
+        assert quantize.wire_itemsize(p) == 3
+        assert len(v2) < len(v1)          # 3 bytes/elem beats 4
+    elif quantize.wire_itemsize(p) == 4:
+        assert len(v2) == len(v1)         # no narrowing available: raw
+
+
+def test_v2_packing_is_lossless_at_range_edges():
+    edges = np.array([0, 1, 255, 256, 65535, 65536, (1 << 24) - 1],
+                     dtype=np.int32)
+    assert (roundtrip_v2(WorkerResult(0, 0, 0.0, edges)).payload
+            == edges).all()
+    # one value at 2^24 pushes the whole array out of packing eligibility
+    over = np.array([0, 1 << 24], dtype=np.int32)
+    assert (roundtrip_v2(WorkerResult(0, 0, 0.0, over)).payload == over).all()
+    # negatives are never packed (field values are non-negative by
+    # construction, but the encoder must not corrupt arbitrary int32)
+    neg = np.array([-1, 5], dtype=np.int32)
+    assert (roundtrip_v2(WorkerResult(0, 0, 0.0, neg)).payload == neg).all()
+
+
+def test_v2_coalesced_round_frame_roundtrip():
+    rng = np.random.default_rng(6)
+    payload = {"w_share": rng.integers(0, field.P, (20, 1, 1)).astype(np.int32),
+               "batch": np.arange(16, dtype=np.int32),
+               "next_batch": None}
+    msg = EncodeShare(7, 3, payload)
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    assert frame[4] == 0x19                  # the ROUND frame tag
+    out = wire.deserialize(frame)
+    assert wire.messages_equal(out, msg)
+    assert out.payload["next_batch"] is None
+    # smaller than the generic v1 dict encoding of the same message
+    assert len(frame) < len(wire.serialize(msg, wire.WIRE_V1))
+    # a payload dict with OTHER keys (provisioning) stays a generic frame
+    prov = EncodeShare(-1, 0, {"cfg": {"N": 5}, "x_share":
+                               np.ones((4, 2), np.int32)})
+    assert wire.serialize(prov, wire.WIRE_V2)[4] == 0x10
+    roundtrip_v2(prov)
+
+
+def test_v1_reader_rejects_v2_tags():
+    """A true v1 peer sees v2 tags as unknown garbage: WireError, not a
+    misparse — for the packed value, the coalesced frame, and HELLO2."""
+    packed = wire.serialize(WorkerResult(0, 0, 0.0,
+                                         np.arange(9, dtype=np.int32)),
+                            wire.WIRE_V2)
+    coalesced = wire.serialize(
+        EncodeShare(1, 0, {"w_share": np.ones((2, 1, 1), np.int32),
+                           "batch": None, "next_batch": None}),
+        wire.WIRE_V2)
+    hello2 = wire.serialize(wire.Hello("worker/1", wire.WIRE_V2),
+                            wire.WIRE_V2)
+    for frame in (packed, coalesced, hello2):
+        wire.deserialize(frame)              # a v2 reader is fine with it
+        with pytest.raises(wire.WireError, match="v1 stream"):
+            wire.deserialize(frame, wire.WIRE_V1)
+        r1 = wire.FrameReader(version=wire.WIRE_V1)
+        with pytest.raises(wire.WireError):
+            r1.feed(frame)
+
+
+def test_hello_negotiation_encoding():
+    # v2 x v2 -> HELLO2 carries the version
+    out = wire.deserialize(wire.serialize(wire.Hello("worker/2", 2), 2))
+    assert out.version == 2 and out.endpoint == "worker/2"
+    # a v1 WIRE cannot express a version: encoding a v2 Hello at v1 falls
+    # back to plain HELLO and decodes as a v1 peer — the safe default
+    out = wire.deserialize(wire.serialize(wire.Hello("worker/2", 2), 1))
+    assert out.version == 1
+    # plain HELLO from a real v1 build decodes as version 1 on a v2 reader
+    out = wire.deserialize(wire.serialize(wire.Hello("worker/2", 1), 2))
+    assert out.version == 1
+
+
+def test_serialize_iovec_matches_serialize():
+    rng = np.random.default_rng(7)
+    msgs = [
+        WorkerResult(1, 2, 0.5, rng.integers(0, field.P,
+                                             (100, 2)).astype(np.int32)),
+        EncodeShare(2, 0, {"w_share": rng.integers(0, field.P,
+                                                   (64, 1, 1)).astype(np.int32),
+                           "batch": np.arange(32, dtype=np.int32),
+                           "next_batch": np.arange(32, dtype=np.int32)}),
+        wire.Hello("worker/0", 2),
+        Heartbeat(3, 1.25),
+    ]
+    for version in (wire.WIRE_V1, wire.WIRE_V2):
+        for msg in msgs:
+            bufs = wire.serialize_iovec(msg, version)
+            assert b"".join(bufs) == wire.serialize(msg, version)
+            assert wire.iovec_nbytes(bufs) == len(wire.serialize(msg, version))
+    # large array bodies ride as memoryviews (zero-copy), not joined bytes
+    bufs = wire.serialize_iovec(msgs[0], wire.WIRE_V2)
+    assert any(isinstance(b, memoryview) for b in bufs)
+
+
+def test_v2_truncation_and_corruption_parity_with_v1():
+    """The fail-loud contract holds for v2 frames exactly as for v1."""
+    msg = EncodeShare(5, 1, {"w_share": np.arange(24, dtype=np.int32)
+                             .reshape(8, 3), "batch": None,
+                             "next_batch": None})
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    for cut in (1, 3, len(frame) // 2, len(frame) - 1):
+        with pytest.raises(wire.WireError):
+            wire.deserialize(frame[:cut])
+    with pytest.raises(wire.WireError):
+        wire.deserialize(frame + b"\x00")
+    bad = bytearray(frame)
+    bad[4] = 0xEE
+    with pytest.raises(wire.WireError, match="frame tag"):
+        wire.deserialize(bytes(bad))
+    # corrupt packed itemsize byte: the value-layer guard fires
+    packed = wire.serialize(np.arange(10, dtype=np.int32), wire.WIRE_V2)
+    assert packed[5] == 0x0C                # RAW tag, then PACKED value
+    bad = bytearray(packed)
+    bad[6] = 9                              # itemsize must be 1..3
+    with pytest.raises(wire.WireError, match="itemsize"):
+        wire.deserialize(bytes(bad))

@@ -92,3 +92,82 @@ def test_truncation_always_raises(msg, data):
     cut = data.draw(st.integers(0, len(frame) - 1))
     with pytest.raises(wire.WireError):
         wire.deserialize(frame[:cut])
+
+
+# ---------------------------------------------------------------------------
+# Wire v2 laws (DESIGN.md §10): the packed/coalesced encodings are pure
+# byte-savers — every v2 frame decodes messages_equal to its v1 twin, for
+# field arrays under BOTH primes, under any chunking, and truncation of a
+# v2 frame fails exactly as loudly as a v1 one.
+# ---------------------------------------------------------------------------
+
+def round_payloads(p):
+    """The scheduler's coalescible {w_share, batch, next_batch} payloads,
+    each member independently an array or None (absent batch = full-batch
+    round; absent next_batch = unpipelined master)."""
+    opt = st.one_of(st.none(), field_arrays(p))
+    return st.fixed_dictionaries(
+        {"w_share": opt, "batch": opt, "next_batch": opt})
+
+
+round_messages = st.one_of(
+    st.builds(EncodeShare, round=st.integers(-2, 10 ** 6),
+              worker=st.integers(0, 10 ** 4), payload=round_payloads(field.P)),
+    st.builds(EncodeShare, round=st.integers(-2, 10 ** 6),
+              worker=st.integers(0, 10 ** 4),
+              payload=round_payloads(field.P30)),
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.one_of(messages, round_messages))
+def test_v2_serialize_roundtrip_identity(msg):
+    """v2 encode -> v2 decode is the identity for generic messages AND
+    coalesced round frames, whatever mix of packable (P) and unpackable
+    (P30) arrays the payload holds."""
+    assert wire.messages_equal(
+        wire.deserialize(wire.serialize(msg, wire.WIRE_V2)), msg)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.one_of(messages, round_messages))
+def test_v2_never_beats_v1_on_correctness_only_on_bytes(msg):
+    """The v2 frame for a message is never LARGER than the v1 frame, and
+    the two decode to equal messages — narrowing is free, not a trade."""
+    v1 = wire.serialize(msg, wire.WIRE_V1)
+    v2 = wire.serialize(msg, wire.WIRE_V2)
+    assert len(v2) <= len(v1)
+    assert wire.messages_equal(wire.deserialize(v2), wire.deserialize(v1))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.one_of(messages, round_messages), st.integers(1, 64))
+def test_v2_frame_reader_any_chunking(msg, chunk):
+    stream = wire.serialize(msg, wire.WIRE_V2) * 2
+    reader = wire.FrameReader(version=wire.WIRE_V2)
+    got = []
+    for i in range(0, len(stream), chunk):
+        got += reader.feed(stream[i: i + chunk])
+    assert len(got) == 2
+    assert all(wire.messages_equal(g, msg) for g in got)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.one_of(messages, round_messages), st.data())
+def test_v2_truncation_always_raises(msg, data):
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    cut = data.draw(st.integers(0, len(frame) - 1))
+    with pytest.raises(wire.WireError):
+        wire.deserialize(frame[:cut])
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.one_of(messages, round_messages))
+def test_iovec_join_equals_serialize(msg):
+    """The scatter-gather emission is byte-identical to the joined frame at
+    both versions — sendmsg and sendall peers see the same stream."""
+    for version in (wire.WIRE_V1, wire.WIRE_V2):
+        bufs = wire.serialize_iovec(msg, version)
+        frame = wire.serialize(msg, version)
+        assert b"".join(bufs) == frame
+        assert wire.iovec_nbytes(bufs) == len(frame)
