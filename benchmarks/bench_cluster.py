@@ -159,6 +159,52 @@ def bench_pipeline(name: str, cfg, x, y, iters: int, seed: int) -> dict:
     return entry
 
 
+def bench_trace_overhead(cfg, x, y, iters: int, seed: int) -> dict:
+    """Flight recorder on vs off (DESIGN.md §11): the recorder must be
+    provably cheap.  The SIMULATED critical path is the gate — tracing
+    observes the clock, it must never advance it, so recorder-on and
+    recorder-off runs of the same seeded model must agree to float
+    identity — and the weights must stay bit-identical.  Wall time is
+    reported for context, not gated (host noise dwarfs the span appends)."""
+    import time as _t
+
+    from repro.obs.trace import Recorder
+
+    runs: dict[str, dict] = {}
+    weights: dict[str, np.ndarray] = {}
+    spans = 0
+    for label in ("off", "on"):
+        rec = Recorder() if label == "on" else None
+        t0 = _t.perf_counter()
+        runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                               make_latency("lognormal", seed=seed),
+                               recorder=rec)
+        weights[label] = np.asarray(runner.run(iters))
+        wall = _t.perf_counter() - t0
+        runs[label] = {
+            "critical_path": runner.wait_stats()["critical_path"],
+            "wall_s": float(wall),
+        }
+        if rec is not None:
+            spans = len(rec.spans)
+            assert not rec.open_spans()
+    off_cp = runs["off"]["critical_path"]["total"]
+    on_cp = runs["on"]["critical_path"]["total"]
+    entry = {
+        "recorder_off": runs["off"],
+        "recorder_on": runs["on"],
+        "spans_recorded": spans,
+        "sim_critical_path_ratio": float(on_cp / off_cp) if off_cp else 1.0,
+        "wall_ratio": float(runs["on"]["wall_s"] / runs["off"]["wall_s"]),
+        "bit_identical": bool((weights["off"] == weights["on"]).all()),
+    }
+    emit("cluster_trace/overhead", runs["on"]["wall_s"] * 1e6,
+         f"sim critical-path ratio {entry['sim_critical_path_ratio']:.6f}, "
+         f"wall ratio {entry['wall_ratio']:.3f}, {spans} spans, "
+         f"bit_identical={entry['bit_identical']}")
+    return entry
+
+
 def bench_compute(cfg, mpc_cfg, x, y) -> dict:
     """On-device wall time: one coded round vs one BGW MPC step."""
     key = jax.random.PRNGKey(0)
@@ -205,6 +251,7 @@ def main(argv=None) -> int:
         "iters": iters,
         "smoke": args.smoke,
         "models": models,
+        "trace_overhead": bench_trace_overhead(cfg, x, y, iters, args.seed),
         "compute_us": bench_compute(cfg, mpc_cfg, x, y),
         # the paper's Fig. 5 effect: under heavy-tailed latency the
         # first-T policy must beat waiting for everyone, strictly — and
@@ -231,6 +278,14 @@ def main(argv=None) -> int:
                for name in ("lognormal", "bursty")},
         },
     }
+    # DESIGN.md §11: the recorder observes the clock, never advances it —
+    # the simulated critical path may not move by more than float noise
+    # (≤5% is the generous bound; equality is the expectation), and tracing
+    # may not change a single bit of the weights.
+    report["acceptance"]["trace_overhead_ok"] = bool(
+        report["trace_overhead"]["sim_critical_path_ratio"] <= 1.05)
+    report["acceptance"]["trace_bit_identical"] = bool(
+        report["trace_overhead"]["bit_identical"])
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

@@ -39,6 +39,14 @@ Two questions about the live backend (DESIGN.md §7):
   6. SCALE-N (``--scale-n``) — the fleet-size trend: N=16/32 worker
      processes (64 with ``--full``) on a tiny problem, gated on
      bit-identity and a sanity ceiling on per-round wall time.
+  7. FLIGHT RECORDER ON vs OFF — the straggled run repeated with the span
+     recorder enabled (DESIGN.md §11): worker processes ship their
+     recv/compute/serialize spans over the v2 TRACE wire field, the
+     master's per-round spans must reconcile with wait_stats, training
+     stays bit-identical, and the traced full-round wall time stays
+     within a generous bound of the untraced run (the tight ≤5% overhead
+     gate lives in bench_cluster.py on the simulated clock, where the
+     comparison is deterministic).
 
     PYTHONPATH=src python benchmarks/bench_socket.py [--smoke] [--out PATH]
                                                      [--scale-n] [--full]
@@ -91,7 +99,12 @@ def bench_inprocess(cfg, x, y, iters: int) -> dict:
 
 def bench_socket(cfg, x, y, iters: int, sleep_s: float | None,
                  pipeline: str = "off", wire_version: int = 2,
-                 connect_timeout_s: float = 60.0) -> dict:
+                 connect_timeout_s: float = 60.0,
+                 traced: bool = False) -> dict:
+    recorder = None
+    if traced:
+        from repro.obs.trace import Recorder
+        recorder = Recorder()
     straggler = {cfg.N - 1: sleep_s} if sleep_s else None
     with local_socket_cluster(cfg.N, sleep_s=straggler,
                               wire_version=wire_version,
@@ -100,7 +113,8 @@ def bench_socket(cfg, x, y, iters: int, sleep_s: float | None,
                                latency=None, transport=tr,
                                round_timeout_s=300.0,
                                collect_all=sleep_s is not None,
-                               pipeline=pipeline)
+                               pipeline=pipeline,
+                               recorder=recorder)
         runner.provision(timeout_s=max(60.0, connect_timeout_s))
         t0 = time.perf_counter()
         w = runner.run(iters)
@@ -145,11 +159,30 @@ def bench_socket(cfg, x, y, iters: int, sleep_s: float | None,
             "totals": stats.get("wire_totals", {}),
         },
     }
+    if traced:
+        # flight-recorder extras (DESIGN.md §11): span volume, worker-side
+        # spans shipped over the v2 TRACE field, and the reconciliation of
+        # per-round critical-path spans against wait_stats on a wall clock
+        from repro.obs.export import round_summaries
+        span_cp = sum(r["critical_path"]
+                      for r in round_summaries(runner.obs))
+        stats_cp = stats["critical_path"]["total"]
+        entry["trace"] = {
+            "spans": len(runner.obs.spans),
+            "open_spans": len(runner.obs.open_spans()),
+            "worker_processes": len({s.process for s in runner.obs.spans
+                                     if s.process.startswith("worker")}),
+            "span_critical_path_s": float(span_cp),
+            "stats_critical_path_s": float(stats_cp),
+            "reconciles": bool(abs(span_cp - stats_cp)
+                               <= 1e-9 * max(1.0, abs(stats_cp))),
+        }
     if sleep_s:
         allw = [r.all_wait_s for r in recs if math.isfinite(r.all_wait_s)]
         entry["wait_all"] = wait_summary(allw)
         entry["straggler_sleep_s"] = sleep_s
-        emit(f"socket/straggler_round[{pipeline}]", coded["mean"] * 1e6,
+        emit(f"socket/straggler_round[{pipeline}]"
+             + ("[traced]" if traced else ""), coded["mean"] * 1e6,
              f"vs wait_all {entry['wait_all']['mean']:.3f}s "
              f"(sleep {sleep_s}s)")
     else:
@@ -255,6 +288,10 @@ def main(argv=None) -> int:
     # critical-path components, which is what pipelining shrinks
     straggled_pipe = bench_socket(cfg, x, y, iters, sleep_s=args.sleep_s,
                                   pipeline="full")
+    # the same straggled run with the flight recorder on: spans recorded
+    # master-side, worker spans shipped over the v2 TRACE field
+    straggled_traced = bench_socket(cfg, x, y, iters, sleep_s=args.sleep_s,
+                                    traced=True)
     # BGW head-to-head at its max honest-majority privacy T = (N-1)/2
     # (higher than the coded run's T — faithfully noted, paper §5)
     mpc_cfg = mpc_baseline.MPCConfig(N=n, T=(n - 1) // 2, r=1)
@@ -298,6 +335,26 @@ def main(argv=None) -> int:
         "streamed_rounds": straggled_pipe["streamed_rounds"],
         "prefetched_rounds": straggled_pipe["prefetched_rounds"],
     }
+    trace_cmp = {
+        # recorder-on vs recorder-off on the live wall clock.  The
+        # full-round span is sleep-dominated (collect_all holds each round
+        # open for the 0.25 s straggler), so its ratio is stable enough to
+        # gate generously; the coded_T ratio is ms-scale under CPU
+        # contention and is reported only (see the pipeline_cmp comment —
+        # the tight ≤5% overhead gate is bench_cluster.py's, on the
+        # simulated clock).
+        "untraced_full_round_s": straggled["full_round"]["mean"],
+        "traced_full_round_s": straggled_traced["full_round"]["mean"],
+        "full_round_ratio": (straggled_traced["full_round"]["mean"]
+                             / max(straggled["full_round"]["mean"], 1e-12)),
+        "coded_T_ratio": (straggled_traced["coded_T"]["mean"]
+                          / max(straggled["coded_T"]["mean"], 1e-12)),
+        **straggled_traced["trace"],
+    }
+    emit("socket/trace_overhead", trace_cmp["full_round_ratio"] * 1e6,
+         f"traced/untraced full-round ratio, "
+         f"{trace_cmp['spans']} spans from "
+         f"{trace_cmp['worker_processes']} worker process(es)")
     report = {
         "device": jax.default_backend(),
         "shapes": {"m": m, "d": d, "N": n, "K": k,
@@ -309,7 +366,9 @@ def main(argv=None) -> int:
         "socket_v1": live_v1,
         "socket_straggler": straggled,
         "socket_straggler_pipelined": straggled_pipe,
+        "socket_straggler_traced": straggled_traced,
         "pipeline": pipeline_cmp,
+        "trace_cmp": trace_cmp,
         "socket_mpc": mpc_live,
         "wire_cmp": wire_cmp,
         "scale_n": scale,
@@ -346,6 +405,21 @@ def main(argv=None) -> int:
                 live["wire"]["tx_bytes_per_round"]
                 < live_v1["wire"]["tx_bytes_per_round"]),
             "wire_v1_bit_identical": bool(live_v1["bit_identical"]),
+            # flight recorder (DESIGN.md §11): tracing must not change the
+            # training (bit-identity to the same oracle), every worker's
+            # spans must land over the v2 TRACE field, per-round spans must
+            # reconcile with wait_stats to float identity, no span left
+            # open, and the sleep-dominated full-round time stays within a
+            # generous bound of the untraced run (the tight ≤5% gate is
+            # bench_cluster.py's, on the simulated clock)
+            "trace_bit_identical": bool(straggled_traced["bit_identical"]),
+            "trace_worker_spans_shipped": bool(
+                straggled_traced["trace"]["worker_processes"] == n),
+            "trace_reconciles_wait_stats": bool(
+                straggled_traced["trace"]["reconciles"]
+                and straggled_traced["trace"]["open_spans"] == 0),
+            "trace_overhead_bounded": bool(
+                trace_cmp["full_round_ratio"] <= 1.25),
         },
     }
     if not args.smoke:

@@ -53,11 +53,20 @@ class EncodeShare:
 
 @dataclasses.dataclass(frozen=True)
 class WorkerResult:
-    """Worker -> master: the worker's polynomial evaluation f(X̃_i, W̃_i)."""
+    """Worker -> master: the worker's polynomial evaluation f(X̃_i, W̃_i).
+
+    ``trace`` is the optional piggy-backed worker-side span list (DESIGN.md
+    §11): ``[name, start, end]`` triples on the WORKER's monotonic clock
+    (recv/compute/serialize/send phases).  It rides a v2-only wire frame —
+    a v1 peer's serialization simply omits it, the same negotiation shape
+    as HELLO2 — and is None unless the master asked for tracing at
+    provisioning.
+    """
     round: int
     worker: int
     compute_s: float             # simulated compute+network time this round
     payload: Any = None          # result ref / serialized (d, c) field array
+    trace: Any = None            # worker-clock span triples (v2 wire only)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +94,8 @@ class CombineResult:
     worker: int
     compute_s: float             # worker-side compute time this round
     payload: Any = None          # result ref / serialized (d,) field array
+    trace: Any = None            # worker-clock span triples incl. barrier
+                                 # phases (v2 wire only, like WorkerResult)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -51,6 +51,7 @@ from repro.cluster.scheduler import (
 from repro.cluster.transport import Transport
 from repro.core import field
 from repro.core import mpc_baseline as mpc
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.resilience import HeartbeatMonitor
 
 
@@ -91,7 +92,9 @@ class MPCClusterRunner:
                  transport: Transport | None = None,
                  round_timeout_s: float = math.inf,
                  heartbeat_timeout_s: float = math.inf,
-                 master_overhead_s: float = 0.0):
+                 master_overhead_s: float = 0.0,
+                 recorder=None,
+                 metrics: MetricsRegistry | None = None):
         from repro.core import protocol as cpml
         self.cfg = cfg
         self.collect_threshold = 2 * cfg.T + 1
@@ -103,7 +106,18 @@ class MPCClusterRunner:
         self.scheduler = EventScheduler(
             cfg.N,
             None if phase_latency is None else phase_latency[0],
-            transport, master_overhead_s=master_overhead_s)
+            transport, master_overhead_s=master_overhead_s,
+            recorder=recorder)
+        # same flight-recorder wiring as ClusterRunner (DESIGN.md §11): the
+        # MPC barrier structure becomes spans on the shared clock
+        self.obs = self.scheduler.obs
+        self.obs.bind_clock(self.scheduler.time.now)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_rounds = self.metrics.counter(
+            "mpc_rounds_total", "completed BGW iterations")
+        self._m_wait = self.metrics.histogram(
+            "mpc_round_wait_seconds",
+            "dispatch to (2T+1)-th final share, per iteration")
         self.round_timeout_s = round_timeout_s
         if self.distributed and math.isinf(round_timeout_s):
             self.round_timeout_s = 300.0   # real silence must be detectable
@@ -143,7 +157,8 @@ class MPCClusterRunner:
                     EncodeShare(PROVISION_ROUND, w,
                                 {"protocol": "mpc", "cfg": cfg_kw,
                                  "x_share": x_shares[w],
-                                 "cbar": mpc.poly_coeffs(self.cfg)}),
+                                 "cbar": mpc.poly_coeffs(self.cfg),
+                                 "trace": bool(self.obs.enabled)}),
                     at=now)
         await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
                           self.monitor, timeout_s)
@@ -160,6 +175,16 @@ class MPCClusterRunner:
     # ------------------------------------------------------------------
 
     def step_round(self, t: int) -> MPCRoundTrace:
+        rspan = self.obs.begin("mpc_round", round=t)
+        try:
+            return self._step_round_inner(t)
+        except ClusterDecodeError:
+            self.obs.instant("starved", round=t)
+            raise
+        finally:
+            self.obs.end(rspan)
+
+    def _step_round_inner(self, t: int) -> MPCRoundTrace:
         cfg = self.cfg
         key_t = mpc.iteration_key(self.kloop, t)
         payloads = None
@@ -194,6 +219,16 @@ class MPCClusterRunner:
         decoded = mpc.reconstruct_at(cfg, g, order)
         self.w = self._finish(self.w, decoded)
         self.traces[t] = trace
+        if self.obs.enabled:
+            # the wait-for-all structure BGW pays: one span from dispatch to
+            # the (2T+1)-th final share, under the open "mpc_round" span;
+            # worker-side barrier phases arrive via the traced CombineResult
+            self.obs.add_span("wait", trace.t_start, trace.t_done, round=t,
+                              responders=len(trace.responders))
+            for w, spans in trace.worker_traces.items():
+                self.obs.add_process_spans(f"worker{int(w)}", spans, round=t)
+        self._m_rounds.inc()
+        self._m_wait.observe(trace.mpc_wait_s)
         return trace
 
     def run(self, iters: int):

@@ -34,6 +34,8 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.obs.trace import NULL_RECORDER
+
 PIPELINE_MODES = ("off", "prefetch", "streaming", "full")
 
 
@@ -64,8 +66,12 @@ class RoundPrefetcher:
     """
 
     def __init__(self, build_fn: Callable[[int], RoundContext],
-                 start: int, stop: int):
+                 start: int, stop: int, recorder=None):
         self._build = build_fn
+        # flight-recorder hook (DESIGN.md §11): builds get their own
+        # "prefetch" track so the overlap with the in-flight round is
+        # visible in the waterfall; the default NullRecorder is a no-op
+        self._obs = recorder if recorder is not None else NULL_RECORDER
         self._stop_t = stop
         self._cond = threading.Condition()
         self._next = start          # next t the producer should build
@@ -90,7 +96,8 @@ class RoundPrefetcher:
                 if self._halt:
                     return
                 t = self._next
-            ctx = self._build(t)                    # heavy work, no lock
+            with self._obs.span("prefetch_build", track="prefetch", round=t):
+                ctx = self._build(t)                # heavy work, no lock
             with self._cond:
                 if self._halt:
                     return

@@ -53,18 +53,22 @@ from repro.cluster.scheduler import ClusterDecodeError, EventScheduler, RoundTra
 from repro.cluster.transport import Transport
 from repro.core.protocol import decode, engine
 from repro.core.protocol.config import CPMLConfig
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.resilience import HeartbeatMonitor, ResilientLoop
 
 
 def wait_summary(a) -> dict[str, float]:
-    """mean/p50/p95/total of a wait-time series (inf stats when empty).
+    """mean/p50/p95/total of a wait-time series (zeroed when empty).
 
     The one aggregation both runner.wait_stats and bench_cluster.py report,
-    so BENCH_cluster.json and live stats can never disagree on keys."""
+    so BENCH_cluster.json and live stats can never disagree on keys.  An
+    EMPTY series — no completed rounds, or an all-starved trace — returns a
+    well-formed all-zero summary: numpy would warn and NaN on a mean over
+    nothing, and inf placeholders poison downstream ratio math (inf/inf)
+    (pinned by tests/test_obs.py)."""
     a = np.asarray(a, dtype=float)
     if a.size == 0:
-        return {"mean": math.inf, "p50": math.inf, "p95": math.inf,
-                "total": math.inf}
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "total": 0.0}
     return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
             "p95": float(np.percentile(a, 95)), "total": float(a.sum())}
 
@@ -93,26 +97,65 @@ def await_worker_acks(transport: Transport, clock_fn, n_workers: int,
 
 @dataclasses.dataclass
 class RoundRecord:
-    """Per-round outcome: who decoded, and what each wait policy cost."""
+    """Per-round outcome: who decoded, and what each wait policy cost.
+
+    A thin VIEW over the scheduler's RoundTrace (DESIGN.md §11): every
+    timing/wire number is read from the one trace the scheduler observed —
+    the same source the flight recorder's spans are emitted from — so
+    wait_stats, the recorder, and the benches can never drift apart.  The
+    record adds only what the runner itself decided: the decode order used,
+    and the replay/pipeline flags.
+    """
     round: int
+    trace: RoundTrace            # the single timing source for this round
     survivors: np.ndarray        # decode order used (first `threshold`)
-    n_responders: int            # responses in by the decode instant
-    dispatched: np.ndarray
-    coded_wait_s: float          # wait-for-fastest-T (the paper's policy)
-    all_wait_s: float            # wait-for-all counterfactual (inf = dead)
     replayed: bool = False       # True when re-run after a restore
-    encode_s: float = 0.0        # master encode on the critical path
-    decode_s: float = 0.0        # master decode+step on the critical path
     prefetched: bool = False     # W-independent half built ahead of time
     streamed: bool = False       # decode was the incremental fold (hit)
-    tx_bytes: int = 0            # wire bytes enqueued during the round
-    rx_bytes: int = 0            # wire bytes received during the round
-    tx_frames: int = 0           # (all four zero on the simulated backend)
-    rx_frames: int = 0
+
+    @property
+    def n_responders(self) -> int:           # responses in by loop exit
+        return len(self.trace.responders)
+
+    @property
+    def dispatched(self) -> np.ndarray:
+        return self.trace.dispatched
+
+    @property
+    def coded_wait_s(self) -> float:         # wait-for-fastest-T
+        return self.trace.coded_wait_s
+
+    @property
+    def all_wait_s(self) -> float:           # wait-for-all (inf = dead)
+        return self.trace.all_wait_s
+
+    @property
+    def encode_s(self) -> float:             # master encode, critical path
+        return self.trace.encode_s
+
+    @property
+    def decode_s(self) -> float:             # master decode+step
+        return self.trace.decode_s
+
+    @property
+    def tx_bytes(self) -> int:               # wire accounting (zeros on
+        return self.trace.tx_bytes           # the simulated backend)
+
+    @property
+    def rx_bytes(self) -> int:
+        return self.trace.rx_bytes
+
+    @property
+    def tx_frames(self) -> int:
+        return self.trace.tx_frames
+
+    @property
+    def rx_frames(self) -> int:
+        return self.trace.rx_frames
 
     @property
     def critical_path_s(self) -> float:
-        return self.encode_s + self.coded_wait_s + self.decode_s
+        return self.trace.critical_path_s
 
 
 class ClusterRunner:
@@ -169,7 +212,9 @@ class ClusterRunner:
                  collect_all: bool = False,
                  pipeline: str = "off",
                  encode_cost_s: float = 0.0,
-                 decode_cost_s: float = 0.0):
+                 decode_cost_s: float = 0.0,
+                 recorder=None,
+                 metrics: MetricsRegistry | None = None):
         # heartbeat_timeout_s defaults to inf: in the simulation, true
         # deaths surface as round starvation (-> mark_failed) and slowness
         # as the EWMA straggler stat; a finite timeout models a gossip-style
@@ -198,7 +243,18 @@ class ClusterRunner:
         self.exclude_stragglers = exclude_stragglers
         self.collect_all = collect_all
         self.scheduler = EventScheduler(cfg.N, latency, transport,
-                                        master_overhead_s=master_overhead_s)
+                                        master_overhead_s=master_overhead_s,
+                                        recorder=recorder)
+        # flight recorder (DESIGN.md §11): bound to the SCHEDULER's clock so
+        # sim and wall runs emit the same span shape through the same call
+        # sites; the default NullRecorder keeps every site a no-op.
+        self.obs = self.scheduler.obs
+        self.obs.bind_clock(self.scheduler.time.now)
+        # metrics are always on, like the wire byte counters they aggregate
+        # (a handful of float ops per round; gated with the recorder in
+        # bench_cluster's trace_overhead entry)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._init_metrics()
         if self.distributed and math.isinf(round_timeout_s):
             # a real cluster must be able to give up on silence
             self.round_timeout_s = 300.0
@@ -214,6 +270,90 @@ class ClusterRunner:
     def distributed(self) -> bool:
         """True when real worker processes compute (socket transport)."""
         return self.latency is None
+
+    # ------------------------------------------------------------------
+    # Observability (DESIGN.md §11)
+    # ------------------------------------------------------------------
+
+    def _init_metrics(self) -> None:
+        m = self.metrics
+        self._m_rounds = m.counter(
+            "cpml_rounds_total", "completed training rounds")
+        self._m_starved = m.counter(
+            "cpml_starved_rounds_total",
+            "rounds with fewer than threshold responses in the timeout")
+        self._m_excluded = m.counter(
+            "cpml_straggler_exclusions_total",
+            "worker-rounds speculatively excluded from dispatch")
+        self._m_marked_dead = m.counter(
+            "cpml_heartbeat_misses_total",
+            "workers marked dead after round-timeout silence")
+        self._m_prefetch = m.counter(
+            "cpml_prefetch_hits_total",
+            "rounds served from a prefetched W-independent context")
+        self._m_folds = m.counter(
+            "cpml_stream_folds_total", "eager streaming-decoder folds")
+        self._m_streamed = m.counter(
+            "cpml_streamed_rounds_total",
+            "rounds decoded by the incremental fold (prediction hits)")
+        self._m_tx = m.counter(
+            "cpml_wire_tx_bytes_total", "wire bytes enqueued during rounds")
+        self._m_rx = m.counter(
+            "cpml_wire_rx_bytes_total", "wire bytes received during rounds")
+        self._m_wait = m.histogram(
+            "cpml_round_wait_seconds",
+            "dispatch to threshold-th arrival, per round")
+        self._m_cp = m.histogram(
+            "cpml_round_critical_path_seconds",
+            "encode + wait + decode, per round")
+        self._m_alive = m.gauge(
+            "cpml_workers_alive", "dispatchable workers at last round")
+        self._m_warm = m.gauge(
+            "cpml_xla_warm_compile_seconds",
+            "max worker-reported XLA warm-compile wall (needs tracing + v2 "
+            "wire)")
+
+    def _observe_round(self, t: int, trace: RoundTrace,
+                       rec: RoundRecord) -> None:
+        """Emit the round's derived spans + update the metrics registry.
+
+        Runs while the ``round`` span is still open, so the derived spans
+        nest under it.  The encode/wait/decode intervals are reconstructed
+        from the SAME RoundTrace fields wait_stats aggregates — on the sim
+        clock they are the pre/post charges, on the wall clock the measured
+        components — which is what makes the recorder and wait_stats
+        reconcile exactly (tests/test_obs.py, bench trace gates).
+        """
+        obs = self.obs
+        if obs.enabled:
+            if trace.encode_s > 0:
+                obs.add_span("encode", trace.t_start - trace.encode_s,
+                             trace.t_start, round=t)
+            obs.add_span("wait", trace.t_start, trace.t_first_R, round=t,
+                         responders=rec.n_responders)
+            t_ready = trace.t_ready
+            if math.isfinite(t_ready) and trace.decode_s > 0:
+                obs.add_span("decode", t_ready - trace.decode_s, t_ready,
+                             round=t, streamed=rec.streamed)
+            for w, spans in trace.worker_traces.items():
+                obs.add_process_spans(f"worker{int(w)}", spans, round=t)
+        self._m_rounds.inc()
+        if rec.prefetched:
+            self._m_prefetch.inc()
+        if rec.streamed:
+            self._m_streamed.inc()
+        self._m_tx.inc(trace.tx_bytes)
+        self._m_rx.inc(trace.rx_bytes)
+        self._m_wait.observe(trace.coded_wait_s)
+        self._m_cp.observe(trace.critical_path_s)
+        self._m_alive.set(len(self._alive(self.scheduler.clock)))
+        for spans in trace.worker_traces.values():
+            for item in spans:
+                # the worker attaches its provisioning-window XLA compile
+                # to its first traced result (launch/cpml_worker.py)
+                if item and item[0] == "warm_compile" and len(item) == 3:
+                    self._m_warm.set(max(self._m_warm.value,
+                                         float(item[2]) - float(item[1])))
 
     # ------------------------------------------------------------------
     # Pipeline plumbing (DESIGN.md §9)
@@ -261,7 +401,8 @@ class ClusterRunner:
         if not self.prefetching:
             return contextlib.nullcontext()
         self._prefetcher = RoundPrefetcher(
-            lambda t: self._build_ctx(t, iters), start=0, stop=iters)
+            lambda t: self._build_ctx(t, iters), start=0, stop=iters,
+            recorder=self.obs)
 
         @contextlib.contextmanager
         def scope():
@@ -300,22 +441,33 @@ class ClusterRunner:
         does not absorb worker warmup).
         """
         assert self.distributed, "provision() is for real transports only"
-        tr = self.scheduler.transport
-        x_shares = np.asarray(self.state.x_shares)
-        cbar = engine.poly_coeffs(self.cfg)
-        cfg_kw = {"N": self.cfg.N, "K": self.cfg.K, "T": self.cfg.T,
-                  "r": self.cfg.r, "c": self.cfg.c, "lx": self.cfg.lx,
-                  "lw": self.cfg.lw, "lc": self.cfg.lc, "p": self.cfg.p,
-                  "batch_rows": self.cfg.batch_rows}
-        now = self.scheduler.clock
-        for w in range(self.cfg.N):
-            tr.send(worker_endpoint(w),
-                    EncodeShare(PROVISION_ROUND, w,
-                                {"cfg": cfg_kw, "x_share": x_shares[w],
-                                 "cbar": cbar}),
-                    at=now)
-        await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
-                          self.monitor, timeout_s)
+        wall0 = _time.perf_counter()
+        with self.obs.span("provision", workers=self.cfg.N):
+            tr = self.scheduler.transport
+            x_shares = np.asarray(self.state.x_shares)
+            cbar = engine.poly_coeffs(self.cfg)
+            cfg_kw = {"N": self.cfg.N, "K": self.cfg.K, "T": self.cfg.T,
+                      "r": self.cfg.r, "c": self.cfg.c, "lx": self.cfg.lx,
+                      "lw": self.cfg.lw, "lc": self.cfg.lc, "p": self.cfg.p,
+                      "batch_rows": self.cfg.batch_rows}
+            now = self.scheduler.clock
+            for w in range(self.cfg.N):
+                tr.send(worker_endpoint(w),
+                        EncodeShare(PROVISION_ROUND, w,
+                                    {"cfg": cfg_kw, "x_share": x_shares[w],
+                                     "cbar": cbar,
+                                     # ask the workers to record + piggy-back
+                                     # their own per-round spans (v2 wire
+                                     # only; a v1 peer drops the field)
+                                     "trace": bool(self.obs.enabled)}),
+                        at=now)
+            await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
+                              self.monitor, timeout_s)
+        self.metrics.gauge(
+            "cpml_provision_seconds",
+            "wall seconds from provisioning dispatch to the last worker "
+            "ack (includes worker XLA warmup)").set(
+                _time.perf_counter() - wall0)
 
     def shutdown_workers(self) -> None:
         """Ask every worker process to exit its serve loop."""
@@ -346,6 +498,7 @@ class ClusterRunner:
             # dead worker — dispatching exactly `threshold` workers means a
             # single silent failure starves the round.
             if len(fast) > self.cfg.threshold:
+                self._m_excluded.inc(len(alive) - len(fast))
                 return fast
         return alive
 
@@ -355,6 +508,25 @@ class ClusterRunner:
 
     def step_round(self, t: int, iters: int, replayed: bool = False
                    ) -> RoundTrace:
+        """One traced protocol round: the ``round`` span brackets the whole
+        critical path, the derived encode/wait/decode spans and metrics are
+        emitted while it is open (so they nest), and a starved round leaves
+        an instant marker + counter bump before the error propagates to the
+        resilient loop."""
+        rspan = self.obs.begin("round", round=t, replayed=replayed)
+        try:
+            trace = self._step_round_inner(t, iters, replayed)
+            self._observe_round(t, trace, self.records[t])
+            return trace
+        except ClusterDecodeError:
+            self.obs.instant("starved", round=t)
+            self._m_starved.inc()
+            raise
+        finally:
+            self.obs.end(rspan)
+
+    def _step_round_inner(self, t: int, iters: int, replayed: bool = False
+                          ) -> RoundTrace:
         cfg = self.cfg
         workers = self.dispatch_set()
         if len(workers) < cfg.threshold:
@@ -415,7 +587,11 @@ class ClusterRunner:
                     else decode.prefix_decode_plan(
                         cfg, self._predicted_order()))
             decoder = decode.StreamingDecoder(cfg, plan)
-            on_result = decoder.fold
+
+            def on_result(w, payload, _d=decoder):
+                self._m_folds.inc()
+                self.obs.instant("fold", round=t, worker=int(w))
+                _d.fold(w, payload)
         pre_s = post_s = 0.0
         if not self.distributed:
             pre_s, post_s = self._sim_charges()
@@ -433,6 +609,7 @@ class ClusterRunner:
             for w in workers:
                 if int(w) not in trace.arrivals:
                     self.monitor.mark_failed(int(w))
+                    self._m_marked_dead.inc()
             raise ClusterDecodeError(
                 f"round {t}: {len(trace.responders)} responses < threshold "
                 f"{cfg.threshold} within {self.round_timeout_s}s")
@@ -496,15 +673,8 @@ class ClusterRunner:
         self._last_order = np.asarray(trace.responders).copy()
         self.traces[t] = trace
         self.records[t] = RoundRecord(
-            round=t, survivors=order.copy(),
-            n_responders=len(trace.responders),
-            dispatched=trace.dispatched.copy(),
-            coded_wait_s=trace.coded_wait_s, all_wait_s=trace.all_wait_s,
-            replayed=replayed,
-            encode_s=trace.encode_s, decode_s=trace.decode_s,
-            prefetched=ctx is not None, streamed=streamed,
-            tx_bytes=trace.tx_bytes, rx_bytes=trace.rx_bytes,
-            tx_frames=trace.tx_frames, rx_frames=trace.rx_frames)
+            round=t, trace=trace, survivors=order.copy(), replayed=replayed,
+            prefetched=ctx is not None, streamed=streamed)
         return trace
 
     # ------------------------------------------------------------------

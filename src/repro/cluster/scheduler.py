@@ -58,6 +58,7 @@ from repro.cluster.messages import (
     worker_endpoint,
 )
 from repro.cluster.transport import InProcessTransport, Transport
+from repro.obs.trace import NULL_RECORDER
 
 
 class ClusterDecodeError(RuntimeError):
@@ -147,6 +148,10 @@ class RoundTrace:
     rx_bytes: int = 0
     tx_frames: int = 0
     rx_frames: int = 0
+    # worker-shipped observability spans (DESIGN.md §11): worker ->
+    # [name, start, end] triples on THAT worker's monotonic clock, present
+    # only when the master asked for tracing and the peer speaks wire v2
+    worker_traces: dict[int, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def coded_wait_s(self) -> float:
@@ -181,6 +186,9 @@ class MPCRoundTrace:
                                     # (unobservable master-side on a real
                                     # transport: empty)
     payloads: dict[int, Any] = dataclasses.field(default_factory=dict)
+    worker_traces: dict[int, Any] = dataclasses.field(default_factory=dict)
+                                    # worker-clock span triples incl. the
+                                    # BGW barrier phases (wire v2 + tracing)
 
     @property
     def mpc_wait_s(self) -> float:
@@ -195,12 +203,16 @@ class EventScheduler:
     def __init__(self, n_workers: int, latency: LatencyModel | None = None,
                  transport: Transport | None = None,
                  heartbeat_delay_s: float = 1e-3,
-                 master_overhead_s: float = 0.0):
+                 master_overhead_s: float = 0.0,
+                 recorder=None):
         self.n = n_workers
         self.latency = latency
         self.transport = transport or InProcessTransport()
         self.heartbeat_delay_s = heartbeat_delay_s
         self.master_overhead_s = master_overhead_s
+        # flight recorder (DESIGN.md §11): the default NullRecorder makes
+        # every span call a constant no-op, so tracing costs nothing off
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         if self.transport.real:
             assert latency is None, (
                 "a real transport's workers produce their own latencies; "
@@ -223,7 +235,9 @@ class EventScheduler:
                            responders: list[int],
                            payloads: dict[int, Any],
                            result_type: type = WorkerResult,
-                           on_result=None) -> None:
+                           on_result=None,
+                           worker_traces: dict[int, Any] | None = None
+                           ) -> None:
         for at, msg in self.transport.recv(MASTER, now):
             if isinstance(msg, Heartbeat):
                 if monitor is not None:
@@ -247,6 +261,9 @@ class EventScheduler:
                     latencies[msg.worker] = msg.compute_s
                     responders.append(msg.worker)
                     payloads[msg.worker] = msg.payload
+                    if (worker_traces is not None
+                            and getattr(msg, "trace", None) is not None):
+                        worker_traces[msg.worker] = msg.trace
                     if on_result is not None:
                         # streaming decode: fold this share into the
                         # reconstruction NOW, while later shares are still
@@ -266,7 +283,8 @@ class EventScheduler:
 
     def _collect(self, round: int, threshold: int, dispatched: set[int],
                  monitor, deadline: float, collect_all: bool,
-                 result_type: type, on_result=None
+                 result_type: type, on_result=None,
+                 worker_traces: dict[int, Any] | None = None
                  ) -> tuple[dict[int, float],
                             dict[int, float], list[int],
                             dict[int, Any]]:
@@ -306,7 +324,7 @@ class EventScheduler:
             self._deliver_to_master(self.time.now(), round, monitor,
                                     dispatched, arrivals, latencies,
                                     responders, payloads, result_type,
-                                    on_result)
+                                    on_result, worker_traces)
         return arrivals, latencies, responders, payloads
 
     @staticmethod
@@ -390,14 +408,26 @@ class EventScheduler:
         wire0 = (self.transport.wire_totals()
                  if hasattr(self.transport, "wire_totals") else None)
         t0 = self.time.now()
-        sampled = self._send_round(round, workers, t0, payloads)
+        with self.obs.span("dispatch", round=round, workers=len(workers)):
+            sampled = self._send_round(round, workers, t0, payloads)
 
         dispatched = {int(w) for w in workers}
         deadline = t0 + timeout_s
-        arrivals, latencies, responders, round_payloads = self._collect(
-            round, threshold, dispatched, monitor, deadline,
-            collect_all=collect_all, result_type=WorkerResult,
-            on_result=on_result)
+        worker_traces: dict[int, Any] = {}
+        with self.obs.span("collect", round=round):
+            arrivals, latencies, responders, round_payloads = self._collect(
+                round, threshold, dispatched, monitor, deadline,
+                collect_all=collect_all, result_type=WorkerResult,
+                on_result=on_result, worker_traces=worker_traces)
+        if self.obs.enabled:
+            # per-worker flight lanes in the MASTER clock domain: dispatch
+            # instant -> result arrival.  This is the cross-worker surface a
+            # straggler shows up on (worker-shipped spans ride their own
+            # clocks and are never compared across processes, §11).
+            for w, at in sorted(arrivals.items()):
+                self.obs.add_span("flight", t0, at, track=f"worker/{w}",
+                                  round=round, worker=w,
+                                  compute_s=latencies.get(w))
 
         got_R = len(responders) >= threshold
         # the decode instant is the threshold-th ARRIVAL, which (under
@@ -426,7 +456,8 @@ class EventScheduler:
             responders=np.asarray(responders, dtype=np.int64),
             arrivals=arrivals, latencies=latencies,
             t_first_R=t_first_R, t_all=t_all, payloads=round_payloads,
-            encode_s=pre_s, decode_s=post_s, t_ready=t_ready, **wire_d)
+            encode_s=pre_s, decode_s=post_s, t_ready=t_ready,
+            worker_traces=worker_traces, **wire_d)
 
     # ------------------------------------------------------------------
     # Multi-phase MPC rounds (DESIGN.md §7: "MPC on the cluster runtime")
@@ -460,27 +491,48 @@ class EventScheduler:
         t0 = self.time.now()
         dispatched = {int(w) for w in workers}
         barriers: list[float] = []
-        if self.latency is None:                      # real worker processes
-            assert phase_models is None, (
-                "a real transport's workers pace their own phases")
-            for w in workers:
-                w = int(w)
-                payload = None if payloads is None else payloads.get(w)
-                self.transport.send(worker_endpoint(w),
-                                    EncodeShare(round, w, payload), at=t0)
-            sampled: dict[int, float] = {}
-        else:
-            assert phase_models, (
-                "the in-process simulation needs one latency model per "
-                "reshare phase plus the final send")
-            sampled = self._enact_mpc_phases(round, workers, t0,
-                                             phase_models, barriers,
-                                             payloads)
+        with self.obs.span("dispatch", round=round, workers=len(workers)):
+            if self.latency is None:                  # real worker processes
+                assert phase_models is None, (
+                    "a real transport's workers pace their own phases")
+                for w in workers:
+                    w = int(w)
+                    payload = None if payloads is None else payloads.get(w)
+                    self.transport.send(worker_endpoint(w),
+                                        EncodeShare(round, w, payload),
+                                        at=t0)
+                sampled: dict[int, float] = {}
+            else:
+                assert phase_models, (
+                    "the in-process simulation needs one latency model per "
+                    "reshare phase plus the final send")
+                sampled = self._enact_mpc_phases(round, workers, t0,
+                                                 phase_models, barriers,
+                                                 payloads)
+        if self.obs.enabled and barriers:
+            # simulated reshare barriers become spans: the wait-for-ALL
+            # structure the showdown hinges on, visible per phase.  (On a
+            # real transport the master cannot observe the barriers — the
+            # workers ship their own barrier spans over the wire instead.)
+            prev = t0
+            for j, b in enumerate(barriers):
+                if math.isfinite(b):
+                    self.obs.add_span("barrier", prev, b, round=round,
+                                      phase=j)
+                    prev = b
 
         deadline = t0 + timeout_s
-        arrivals, latencies, responders, round_payloads = self._collect(
-            round, collect_threshold, dispatched, monitor, deadline,
-            collect_all=False, result_type=CombineResult)
+        worker_traces: dict[int, Any] = {}
+        with self.obs.span("collect", round=round):
+            arrivals, latencies, responders, round_payloads = self._collect(
+                round, collect_threshold, dispatched, monitor, deadline,
+                collect_all=False, result_type=CombineResult,
+                worker_traces=worker_traces)
+        if self.obs.enabled:
+            for w, at in sorted(arrivals.items()):
+                self.obs.add_span("flight", t0, at, track=f"worker/{w}",
+                                  round=round, worker=w,
+                                  compute_s=latencies.get(w))
 
         got = len(responders) >= collect_threshold
         t_done = (arrivals[responders[collect_threshold - 1]] if got
@@ -500,7 +552,7 @@ class EventScheduler:
             responders=np.asarray(responders, dtype=np.int64),
             arrivals=arrivals, latencies=latencies,
             t_done=t_done, t_all=t_all, barriers=barriers,
-            payloads=round_payloads)
+            payloads=round_payloads, worker_traces=worker_traces)
 
     def _enact_mpc_phases(self, round: int, workers: np.ndarray, t0: float,
                           phase_models: list[LatencyModel],

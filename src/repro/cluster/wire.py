@@ -39,6 +39,11 @@ to its v1 twin:
   * HELLO2 (frame tag): HELLO plus the sender's wire version, the
     negotiation handshake.  A v1 peer sends plain HELLO and is spoken to in
     v1 forever; a v2 master acks HELLO2 so both sides upgrade.
+  * TRACED RESULT (frame tags): a WorkerResult/CombineResult whose optional
+    ``trace`` field (worker-side observability spans, DESIGN.md §11) is
+    non-None ships it appended to the classic field layout.  Serializing at
+    v1 silently DROPS the trace and emits the classic frame — a v1 fleet
+    round-trips with worker traces simply absent, never with an error.
 
 Encoders take an explicit ``version`` and NEVER emit v2 tags below
 ``WIRE_V2``; decoders take the version negotiated for the stream and reject
@@ -84,6 +89,8 @@ _FRAME_SUB_SHARE = 0x16
 _FRAME_COMBINE_RESULT = 0x17
 _FRAME_HELLO2 = 0x18             # v2: HELLO + sender wire version
 _FRAME_ROUND = 0x19              # v2: coalesced (worker, round) EncodeShare
+_FRAME_WORKER_RESULT_T = 0x1A    # v2: WorkerResult + piggy-backed TRACE
+_FRAME_COMBINE_RESULT_T = 0x1B   # v2: CombineResult + piggy-backed TRACE
 
 # value tags
 _T_NONE = 0x00
@@ -377,11 +384,18 @@ def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
             _enc_value(msg.worker, out)
             _enc_value(msg.payload, out, version)
     elif isinstance(msg, WorkerResult):
-        out.append(bytes([_FRAME_WORKER_RESULT]))
+        # TRACE rides a v2-only frame; at v1 the field is dropped and the
+        # receiver sees a classic result — the same "older peers simply
+        # never see the new field" negotiation shape as HELLO2 (§11)
+        traced = version >= WIRE_V2 and msg.trace is not None
+        out.append(bytes([_FRAME_WORKER_RESULT_T if traced
+                          else _FRAME_WORKER_RESULT]))
         _enc_value(msg.round, out)
         _enc_value(msg.worker, out)
         _enc_value(msg.compute_s, out)
         _enc_value(msg.payload, out, version)
+        if traced:
+            _enc_value(msg.trace, out, version)
     elif isinstance(msg, SubShare):
         out.append(bytes([_FRAME_SUB_SHARE]))
         _enc_value(msg.round, out)
@@ -390,11 +404,15 @@ def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
         _enc_value(msg.dst, out)
         _enc_value(msg.payload, out, version)
     elif isinstance(msg, CombineResult):
-        out.append(bytes([_FRAME_COMBINE_RESULT]))
+        traced = version >= WIRE_V2 and msg.trace is not None
+        out.append(bytes([_FRAME_COMBINE_RESULT_T if traced
+                          else _FRAME_COMBINE_RESULT]))
         _enc_value(msg.round, out)
         _enc_value(msg.worker, out)
         _enc_value(msg.compute_s, out)
         _enc_value(msg.payload, out, version)
+        if traced:
+            _enc_value(msg.trace, out, version)
     elif isinstance(msg, Heartbeat):
         out.append(bytes([_FRAME_HEARTBEAT]))
         _enc_value(msg.worker, out)
@@ -470,6 +488,13 @@ def _decode_body(body, version: int = WIRE_VERSION) -> Any:
     elif tag == _FRAME_WORKER_RESULT:
         msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
                            compute_s=_dec_value(r), payload=_dec_value(r))
+    elif tag == _FRAME_WORKER_RESULT_T:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 traced result on a v1 stream)")
+        msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
+                           compute_s=_dec_value(r), payload=_dec_value(r),
+                           trace=_dec_value(r))
     elif tag == _FRAME_SUB_SHARE:
         msg = SubShare(round=_dec_value(r), phase=_dec_value(r),
                        src=_dec_value(r), dst=_dec_value(r),
@@ -477,6 +502,13 @@ def _decode_body(body, version: int = WIRE_VERSION) -> Any:
     elif tag == _FRAME_COMBINE_RESULT:
         msg = CombineResult(round=_dec_value(r), worker=_dec_value(r),
                             compute_s=_dec_value(r), payload=_dec_value(r))
+    elif tag == _FRAME_COMBINE_RESULT_T:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 traced result on a v1 stream)")
+        msg = CombineResult(round=_dec_value(r), worker=_dec_value(r),
+                            compute_s=_dec_value(r), payload=_dec_value(r),
+                            trace=_dec_value(r))
     elif tag == _FRAME_HEARTBEAT:
         msg = Heartbeat(worker=_dec_value(r), sent_at=_dec_value(r))
     elif tag == _FRAME_FORWARD:

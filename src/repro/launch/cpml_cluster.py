@@ -11,6 +11,8 @@
     python -m repro.launch.cpml_cluster --protocol mpc --latency lognormal
     python -m repro.launch.cpml_cluster --protocol mpc --transport socket \\
         --workers 5 --privacy 2 --straggle-worker 4
+    python -m repro.launch.cpml_cluster --transport socket --straggle-worker 3 \\
+        --trace-out run.trace.json --metrics-out metrics.prom
 
 Runs CodedPrivateML training through the cluster runtime (repro.cluster):
 per-round dispatch to N workers, decode at the fastest-`threshold`
@@ -128,6 +130,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "(socket only)")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--json-out", type=str, default=None)
+    # flight recorder (DESIGN.md §11) — off unless asked for: the recorder
+    # costs nothing when absent (NullRecorder no-ops on every hot-path site)
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="record a flight trace and write Perfetto/Chrome "
+                         "trace-event JSON here (load at ui.perfetto.dev or "
+                         "chrome://tracing); also prints a terminal "
+                         "waterfall + straggler attribution post-run")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the run's metrics registry here: a *.json "
+                         "path gets the JSON snapshot, anything else the "
+                         "Prometheus textfile format")
     return ap
 
 
@@ -185,6 +198,33 @@ def local_socket_cluster(n_workers: int, *, port: int = 0,
                 p.wait()
 
 
+def _recorder_for(args):
+    """A live Recorder when --trace-out asked for one, else None (the
+    runners fall back to the no-op NullRecorder)."""
+    if args.trace_out is None:
+        return None
+    from repro.obs.trace import Recorder
+    return Recorder()
+
+
+def _emit_obs(args, runner, threshold: int) -> None:
+    """Post-run observability outputs: Perfetto trace file, terminal
+    waterfall, straggler attribution, metrics registry dump."""
+    if args.trace_out:
+        from repro.obs.export import (straggler_report, waterfall,
+                                      write_chrome_trace)
+        obj = write_chrome_trace(runner.obs, args.trace_out)
+        pids = {e.get("pid") for e in obj["traceEvents"]}
+        print(f"trace: {len(obj['traceEvents'])} events / {len(pids)} "
+              f"process(es) -> {args.trace_out} (load at ui.perfetto.dev)")
+        print(waterfall(runner.obs))
+        text, _ = straggler_report(runner.traces, threshold)
+        print(text)
+    if args.metrics_out:
+        runner.metrics.write(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+
+
 def _run_socket(args, cfg, key, x, y) -> tuple:
     """--transport socket: N real worker processes, wire frames, wall clock."""
     import numpy as np
@@ -206,7 +246,8 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
                                round_timeout_s=timeout,
                                heartbeat_timeout_s=args.heartbeat_timeout,
                                collect_all=args.collect_all,
-                               pipeline=args.pipeline)
+                               pipeline=args.pipeline,
+                               recorder=_recorder_for(args))
         runner.provision()
         t0 = time.monotonic()
         w = runner.run(args.iters)
@@ -291,7 +332,8 @@ def _run_mpc(args) -> int:
             runner = MPCClusterRunner(
                 cfg, key, x, y, None, transport=tr,
                 round_timeout_s=timeout,
-                heartbeat_timeout_s=args.heartbeat_timeout)
+                heartbeat_timeout_s=args.heartbeat_timeout,
+                recorder=_recorder_for(args))
             runner.provision()
             t0 = time.monotonic()
             w = runner.run(args.iters)
@@ -307,8 +349,10 @@ def _run_mpc(args) -> int:
         if args.latency == "dead" and math.isinf(timeout):
             timeout = 60.0
         runner = MPCClusterRunner(cfg, key, x, y, models,
-                                  round_timeout_s=timeout)
+                                  round_timeout_s=timeout,
+                                  recorder=_recorder_for(args))
         w = runner.run(args.iters)
+    _emit_obs(args, runner, runner.collect_threshold)
     stats = runner.wait_stats()
     word = "wall" if args.transport == "socket" else "simulated"
     print(f"per-round MPC wait (dispatch -> 2T+1 reconstruct): "
@@ -388,7 +432,8 @@ def main(argv: list[str] | None = None) -> int:
                                round_timeout_s=timeout,
                                pipeline=args.pipeline,
                                encode_cost_s=args.encode_cost_s,
-                               decode_cost_s=args.decode_cost_s)
+                               decode_cost_s=args.decode_cost_s,
+                               recorder=_recorder_for(args))
         if args.resilient:
             from repro.checkpoint.manager import CheckpointManager
             with tempfile.TemporaryDirectory() as ckdir:
@@ -399,6 +444,7 @@ def main(argv: list[str] | None = None) -> int:
         else:
             w = runner.run(args.iters)
 
+    _emit_obs(args, runner, cfg.threshold)
     stats = runner.wait_stats()
     coded, allw = stats["coded_T"], stats["wait_all"]
     print(f"per-round wait  coded-T: mean {coded['mean']:.2f}s  "
@@ -412,7 +458,9 @@ def main(argv: list[str] | None = None) -> int:
               f"({int(stats['rounds']['prefetched'])} prefetched, "
               f"{int(stats['rounds']['streamed'])} streamed rounds)")
     unobserved = int(stats["rounds"]["dead_rounds"])
-    if math.isfinite(allw["mean"]):
+    # an UNOBSERVED wait-for-all series is all-zero (wait_summary zeroes an
+    # empty input), so gate on total > 0 rather than finiteness
+    if allw["total"] > 0:
         print(f"per-round wait wait-all: mean {allw['mean']:.2f}s  "
               f"p50 {allw['p50']:.2f}s  p95 {allw['p95']:.2f}s")
     if unobserved and args.transport == "socket" and not args.collect_all:

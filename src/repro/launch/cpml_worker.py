@@ -92,13 +92,14 @@ def serve(args) -> int:
 
     def drain() -> None:
         """Pull everything off the wire: SubShares into the reshare buffer,
-        EncodeShares into the pending work queue."""
-        for _, msg in tr.recv(me, math.inf):
+        EncodeShares into the pending work queue (with their local arrival
+        stamp, so a traced round's "recv" span covers wire + queue wait)."""
+        for at, msg in tr.recv(me, math.inf):
             if isinstance(msg, SubShare):
                 subshares.setdefault((msg.round, msg.phase),
                                      {})[msg.src] = msg.payload
             elif isinstance(msg, EncodeShare):
-                pending.append(msg)
+                pending.append((at, msg))
 
     def reshare_barrier(cfg, t: int, phase: int, kphase, value):
         """One BGW degree reduction from this worker's seat: re-share,
@@ -131,34 +132,69 @@ def serve(args) -> int:
                                jnp.int32)
         return mpc.combine_subshares(cfg, gathered)
 
-    def mpc_round(msg) -> None:
+    def mpc_round(at: float, msg) -> None:
         cfg, x_share, cbar = state["cfg"], state["x_share"], state["cbar"]
         t = msg.round
         t0 = time.monotonic()
+        # worker-side flight-recorder spans (DESIGN.md §11): [name, start,
+        # end] triples on THIS process's monotonic clock, piggy-backed on
+        # the CombineResult over a v2 wire.  Each reshare barrier becomes
+        # its own span, so the trace shows which phase a stall happened in.
+        spans = state.pop("carry", []) if state.get("trace") else None
+        if spans is not None:
+            spans.append(["recv", at, t0])
         w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)  # (d, r)
         kred = np.asarray(msg.payload["kred"])                    # (r+1, 2)
         z = mpc.worker_mul(cfg, x_share, w_share)                 # (m, r)
+        t1 = time.monotonic()
+        if spans is not None:
+            spans.append(["compute", t0, t1])
         z = reshare_barrier(cfg, t, 0, jnp.asarray(kred[0]), z)
+        if spans is not None:
+            spans.append(["barrier", t1, time.monotonic()])
         prod = z[..., 0]
         s = mpc.s_init(cfg, cbar, prod)
         for i in range(2, cfg.r + 1):
             prod = field.mulmod(prod, z[..., i - 1], cfg.p)
+            b0 = time.monotonic()
             prod = reshare_barrier(cfg, t, i - 1, jnp.asarray(kred[i - 1]),
                                    prod)
+            if spans is not None:
+                spans.append(["barrier", b0, time.monotonic()])
             s = mpc.s_accum(cfg, cbar[i], s, prod)
         if args.sleep_s > 0:
             time.sleep(args.sleep_s)
+        t2 = time.monotonic()
         g = np.asarray(mpc.worker_final(cfg, x_share, s), np.int32)
+        t3 = time.monotonic()
+        if spans is not None:
+            spans.append(["serialize", t2, t3])
         tr.send(MASTER, CombineResult(t, args.worker,
-                                      time.monotonic() - t0, g))
+                                      time.monotonic() - t0, g,
+                                      trace=spans))
+        if spans is not None:
+            # the socket write can only be timed AFTER the message is built;
+            # it rides the NEXT traced round (one-round lag, like the
+            # provisioning warm-compile span)
+            state["carry"] = [["send", t3, time.monotonic()]]
         # reshare traffic for finished rounds can never be consumed again
         for key in [k for k in subshares if k[0] <= t]:
             del subshares[key]
 
-    def cpml_round(msg) -> None:
+    def cpml_round(at: float, msg) -> None:
         t0 = time.monotonic()
+        # spans: [name, start, end] on this process's clock, shipped with
+        # the result over a v2 wire (DESIGN.md §11).  "recv" covers wire +
+        # queue wait (arrival stamp -> processing start); an injected
+        # straggler sleep gets its own honest span.
+        spans = state.pop("carry", []) if state.get("trace") else None
+        if spans is not None:
+            spans.append(["recv", at, t0])
         if args.sleep_s > 0:
             time.sleep(args.sleep_s)
+            if spans is not None:
+                spans.append(["straggle", t0, time.monotonic()])
+        t1 = time.monotonic()
         w_share = jnp.asarray(msg.payload["w_share"], jnp.int32)
         batch = msg.payload.get("batch")
         x_share = state["x_share"]
@@ -171,11 +207,23 @@ def serve(args) -> int:
             xb = cached[1]
         else:
             xb = jnp.take(x_share, jnp.asarray(batch, jnp.int32), axis=0)
-        result = np.asarray(state["f"](xb, w_share), dtype=np.int32)
+        r = state["f"](xb, w_share)
+        r.block_until_ready()
+        t2 = time.monotonic()
+        if spans is not None:
+            spans.append(["compute", t1, t2])
+        result = np.asarray(r, dtype=np.int32)
+        t3 = time.monotonic()
+        if spans is not None:
+            spans.append(["serialize", t2, t3])   # device->host materialize
         tr.send(MASTER,
                 WorkerResult(msg.round, args.worker,
                              compute_s=time.monotonic() - t0,
-                             payload=result))
+                             payload=result, trace=spans))
+        if spans is not None:
+            # socket-write wall is only known after the message is built; it
+            # rides the NEXT traced round, like the warm-compile span
+            state["carry"] = [["send", t3, time.monotonic()]]
         nxt = msg.payload.get("next_batch")
         if nxt is not None:
             # W-independent worker-side prefetch: slice round t+1's coded
@@ -193,11 +241,15 @@ def serve(args) -> int:
                     continue
                 drain()
                 continue
-            msg = pending.popleft()
+            at, msg = pending.popleft()
             if msg.round == SHUTDOWN_ROUND:
                 return 0
             if msg.round == PROVISION_ROUND:
                 p = msg.payload
+                # master opts this worker into span recording (DESIGN.md
+                # §11); the spans only reach it over a v2 wire — a v1
+                # serialization silently drops the trace field
+                state["trace"] = bool(p.get("trace"))
                 if p.get("protocol") == "mpc":
                     state["protocol"] = "mpc"
                     state["cfg"] = mpc.MPCConfig(**p["cfg"])
@@ -227,7 +279,14 @@ def serve(args) -> int:
                     xw = x_share[jnp.zeros(rows, jnp.int32)]
                     ww = jnp.zeros((x_share.shape[1], cfg.c, cfg.r),
                                    jnp.int32)
+                    t_c0 = time.monotonic()
                     state["f"](xw, ww).block_until_ready()
+                    if state["trace"]:
+                        # ships with the first traced result: the warmup
+                        # the provisioning barrier absorbed (the master's
+                        # cpml_xla_warm_compile_seconds gauge reads it)
+                        state["carry"] = [
+                            ["warm_compile", t_c0, time.monotonic()]]
                 tr.send(MASTER, Heartbeat(args.worker, time.monotonic()))
                 continue
             if args.die_at_round is not None \
@@ -239,9 +298,9 @@ def serve(args) -> int:
                     f"{me}: round {msg.round} share arrived before "
                     f"provisioning")
             if state["protocol"] == "mpc":
-                mpc_round(msg)
+                mpc_round(at, msg)
             else:
-                cpml_round(msg)
+                cpml_round(at, msg)
         return 0
     finally:
         tr.close()

@@ -345,3 +345,66 @@ def test_v2_truncation_and_corruption_parity_with_v1():
     bad[6] = 9                              # itemsize must be 1..3
     with pytest.raises(wire.WireError, match="itemsize"):
         wire.deserialize(bytes(bad))
+
+
+# ---------------------------------------------------------------------------
+# Traced results: the optional TRACE field (DESIGN.md §11) is v2-only
+# ---------------------------------------------------------------------------
+
+def _spans():
+    return [["recv", 0.001, 0.002], ["compute", 0.002, 0.075],
+            ["serialize", 0.075, 0.080]]
+
+
+def test_traced_worker_result_v2_roundtrip():
+    payload = np.arange(12, dtype=np.int32).reshape(4, 3)
+    msg = WorkerResult(3, 1, 0.5, payload, trace=_spans())
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    assert frame[4] == 0x1A                  # the traced-result tag
+    out = wire.deserialize(frame)
+    assert wire.messages_equal(out, msg)
+    assert out.trace == _spans()
+
+
+def test_traced_combine_result_v2_roundtrip():
+    msg = CombineResult(2, 4, 0.25, np.arange(7, dtype=np.int32),
+                        trace=_spans() + [["barrier", 0.08, 0.3]])
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    assert frame[4] == 0x1B
+    out = wire.deserialize(frame)
+    assert wire.messages_equal(out, msg)
+    assert out.trace[-1] == ["barrier", 0.08, 0.3]
+
+
+def test_v1_serialization_silently_drops_trace():
+    """A v1 peer's wire cannot express the trace field: serializing at v1
+    produces the CLASSIC result frame with the trace absent — this is what
+    makes a mixed v1 fleet round-trip with worker traces silently missing
+    instead of failing (same negotiation shape as HELLO2)."""
+    traced = WorkerResult(3, 1, 0.5, np.arange(4, dtype=np.int32),
+                          trace=_spans())
+    bare = WorkerResult(3, 1, 0.5, np.arange(4, dtype=np.int32))
+    f1 = wire.serialize(traced, wire.WIRE_V1)
+    assert f1 == wire.serialize(bare, wire.WIRE_V1)
+    out = wire.deserialize(f1)
+    assert out.trace is None
+    # same for the MPC result
+    tc = CombineResult(0, 0, 0.0, None, trace=_spans())
+    assert wire.deserialize(wire.serialize(tc, wire.WIRE_V1)).trace is None
+    # and a trace-less message stays a classic frame even at v2
+    assert wire.serialize(bare, wire.WIRE_V2)[4] != 0x1A
+
+
+def test_traced_frame_rejected_on_v1_stream():
+    frame = wire.serialize(WorkerResult(0, 0, 0.0, None, trace=_spans()),
+                           wire.WIRE_V2)
+    with pytest.raises(wire.WireError, match="v1 stream"):
+        wire.deserialize(frame, wire.WIRE_V1)
+
+
+def test_traced_iovec_matches_serialize():
+    msg = WorkerResult(1, 2, 0.5, np.arange(30, dtype=np.int32),
+                       trace=_spans())
+    for version in (wire.WIRE_V1, wire.WIRE_V2):
+        bufs = wire.serialize_iovec(msg, version)
+        assert b"".join(bufs) == wire.serialize(msg, version)
