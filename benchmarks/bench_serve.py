@@ -1,0 +1,223 @@
+"""Serving-plane benchmark: coded private inference under open-loop load.
+
+Three questions about the prediction service (cluster/serve.py):
+
+  1. THROUGHPUT CEILING — closed-loop clients (one full-batch query in
+     flight at a time) on the simulated backend: how many queries/s and
+     rows/s does a flush pipeline of encode -> N shares -> first-threshold
+     decode sustain when the queue never goes idle?
+  2. TAIL LATENCY UNDER A STRAGGLER — open-loop Poisson arrivals with one
+     worker sleeping a fixed extra delay before every reply.  Two legs on
+     the SAME arrival schedule: (A) the deployed first-threshold policy
+     (each flush decoded at the fastest ``2(K+T-1)+1`` responders, the
+     sleeper never on the critical path), and (B) the wait-for-all
+     counterfactual (``collect_all`` keeps every flush open until the
+     sleeper replies, so its delay lands on every query AND compounds
+     through the queue).  The acceptance gate is the paper's serving
+     claim: leg A's p99 stays bounded while leg B's p99 absorbs the
+     straggler — ``p99(A, first-threshold) < p99(B, wait-all)``.
+  3. LIVE BIT-IDENTITY — the same two legs over real TCP worker processes
+     (launch/cpml_worker.py in its ``serve`` protocol mode) with a worker
+     that REALLY sleeps: served predictions must be bit-identical to the
+     uncoded plaintext oracle on both backends and both legs.  A fast
+     wrong answer is worthless; exact interpolation of the quantized
+     product is the contract (DESIGN.md §12).
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
+
+Writes BENCH_serve.json; CI runs --smoke and uploads the artifact
+alongside BENCH_protocol.json / BENCH_socket.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from common import emit
+
+from repro.cluster import DeterministicLatency
+from repro.cluster.latency import SleepyStragglerLatency
+from repro.cluster.serve import (PredictionServer, ServeConfig,
+                                 open_loop_queries)
+from repro.launch.cpml_cluster import local_socket_cluster
+
+
+def _weights(d: int, classes: int):
+    return 0.5 * jax.random.normal(jax.random.PRNGKey(11), (d, classes))
+
+
+def _entry(srv: PredictionServer, wall_s: float | None = None) -> dict:
+    s = srv.stats()
+    return {
+        "queries": s["queries"],
+        "rejected": s["rejected"],
+        "rounds": s["rounds"],
+        "queries_per_s": s["queries_per_s"],
+        "rows_per_s": s["rows_per_s"],
+        "lat_first": s["latency_first"],
+        "lat_all": s["latency_all"],
+        "bit_identical": bool(s["oracle"]["bit_identical"]
+                              and s["oracle"]["checked"]),
+        "oracle_flushes": s["oracle"]["checked"],
+        "wall_s": wall_s,
+    }
+
+
+def bench_sim_closed(cfg: ServeConfig, d: int, classes: int,
+                     n_queries: int) -> dict:
+    """Throughput ceiling: saturated full-batch queries, no arrival gaps."""
+    srv = PredictionServer(cfg, _weights(d, classes), jax.random.PRNGKey(3),
+                           latency=DeterministicLatency(base=1e-3, skew=0.1),
+                           verify=True)
+    qs = open_loop_queries(n_queries, rows=cfg.max_batch, d=d,
+                           rate_qps=0.0, seed=5)
+    srv.run_closed_loop(qs)
+    e = _entry(srv)
+    emit("serve/sim_closed_qps", 1e6 / max(e["queries_per_s"], 1e-9),
+         f"{e['queries_per_s']:.1f} queries/s, {e['rows_per_s']:.0f} rows/s "
+         f"(simulated), bit_identical={e['bit_identical']}")
+    return e
+
+
+def bench_sim_straggler(cfg: ServeConfig, d: int, classes: int,
+                        n_queries: int, rows: int, rate_qps: float,
+                        sleep_s: float) -> dict:
+    """Legs A/B of question 2 on the simulated clock: identical arrivals,
+    identical latency draws, only the wait policy differs.  Straggler
+    exclusion is OFF in both legs so every flush dispatches to all N and
+    the comparison isolates decode-at-threshold vs wait-for-all."""
+    legs = {}
+    for name, collect_all in (("first_threshold", False), ("wait_all", True)):
+        lat = SleepyStragglerLatency(
+            DeterministicLatency(base=1e-3, skew=0.1),
+            {cfg.N - 1: sleep_s})
+        srv = PredictionServer(cfg, _weights(d, classes),
+                               jax.random.PRNGKey(3), latency=lat,
+                               collect_all=collect_all,
+                               exclude_stragglers=False, verify=True)
+        srv.run(open_loop_queries(n_queries, rows=rows, d=d,
+                                  rate_qps=rate_qps, seed=5))
+        legs[name] = _entry(srv)
+    a, b = legs["first_threshold"], legs["wait_all"]
+    emit("serve/sim_straggler_p99", a["lat_first"]["p99"] * 1e6,
+         f"first-T p99 vs wait-all p99 {b['lat_all']['p99']:.3f}s "
+         f"(sleep {sleep_s}s)")
+    return {"sleep_s": sleep_s, "rate_qps": rate_qps, **{
+        "first_threshold": a, "wait_all": b}}
+
+
+def bench_socket_straggler(cfg: ServeConfig, d: int, classes: int,
+                           n_queries: int, rows: int, rate_qps: float,
+                           sleep_s: float) -> dict:
+    """The same two legs over real TCP worker processes: the straggler
+    process really time.sleep()s before each reply."""
+    legs = {}
+    for name, collect_all in (("first_threshold", False), ("wait_all", True)):
+        with local_socket_cluster(cfg.N,
+                                  sleep_s={cfg.N - 1: sleep_s}) as tr:
+            srv = PredictionServer(cfg, _weights(d, classes),
+                                   jax.random.PRNGKey(3), transport=tr,
+                                   round_timeout_s=300.0,
+                                   collect_all=collect_all,
+                                   exclude_stragglers=False, verify=True)
+            srv.provision()
+            t0 = time.perf_counter()
+            srv.run(open_loop_queries(n_queries, rows=rows, d=d,
+                                      rate_qps=rate_qps, seed=5))
+            wall = time.perf_counter() - t0
+            srv.shutdown_workers()
+        legs[name] = _entry(srv, wall_s=wall)
+    a, b = legs["first_threshold"], legs["wait_all"]
+    emit("serve/socket_straggler_p99", a["lat_first"]["p99"] * 1e6,
+         f"first-T p99 vs wait-all p99 {b['lat_all']['p99']:.3f}s "
+         f"over TCP (sleep {sleep_s}s), "
+         f"bit_identical={a['bit_identical'] and b['bit_identical']}")
+    return {"sleep_s": sleep_s, "rate_qps": rate_qps, **{
+        "first_threshold": a, "wait_all": b}}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + few queries (CI)")
+    ap.add_argument("--sleep-s", type=float, default=0.3,
+                    help="injected straggler sleep per flush (> 0)")
+    args = ap.parse_args(argv)
+    if args.sleep_s <= 0:
+        ap.error("--sleep-s must be > 0: the straggler comparison is the "
+                 "point of this benchmark")
+
+    if args.smoke:
+        n, k, t = 6, 2, 1
+        d, classes = 16, 6
+        max_batch, rows = 8, 4
+        n_queries, sock_queries, rate = 24, 16, 150.0
+    else:
+        n, k, t = 8, 2, 1
+        d, classes = 64, 10
+        max_batch, rows = 32, 4
+        n_queries, sock_queries, rate = 96, 32, 400.0
+    cfg = ServeConfig(N=n, K=k, T=t, max_batch=max_batch, max_wait_s=0.02)
+
+    closed = bench_sim_closed(cfg, d, classes, n_queries=n_queries)
+    sim = bench_sim_straggler(cfg, d, classes, n_queries=n_queries,
+                              rows=rows, rate_qps=rate,
+                              sleep_s=args.sleep_s)
+    sock = bench_socket_straggler(cfg, d, classes, n_queries=sock_queries,
+                                  rows=rows, rate_qps=rate,
+                                  sleep_s=args.sleep_s)
+
+    report = {
+        "device": jax.default_backend(),
+        "shapes": {"N": n, "K": k, "T": t, "threshold": cfg.threshold,
+                   "d": d, "classes": classes, "max_batch": max_batch,
+                   "rows_per_query": rows},
+        "smoke": args.smoke,
+        "straggler_sleep_s": args.sleep_s,
+        "sim_closed_loop": closed,
+        "sim_open_loop_straggler": sim,
+        "socket_open_loop_straggler": sock,
+        "acceptance": {
+            # the serving claim: under the same straggled open-loop load,
+            # first-threshold decode keeps p99 bounded while wait-for-all
+            # absorbs the sleeper's delay on every query
+            "sim_p99_first_below_wait_all": bool(
+                sim["first_threshold"]["lat_first"]["p99"]
+                < sim["wait_all"]["lat_all"]["p99"]),
+            "socket_p99_first_below_wait_all": bool(
+                sock["first_threshold"]["lat_first"]["p99"]
+                < sock["wait_all"]["lat_all"]["p99"]),
+            # exact interpolation of the quantized product — every flush,
+            # every leg, both backends
+            "sim_bit_identical": bool(
+                closed["bit_identical"]
+                and sim["first_threshold"]["bit_identical"]
+                and sim["wait_all"]["bit_identical"]),
+            "socket_bit_identical": bool(
+                sock["first_threshold"]["bit_identical"]
+                and sock["wait_all"]["bit_identical"]),
+            # the bounded queue never rejected: the load is sized so the
+            # first-threshold service keeps up with the offered rate
+            "sim_no_rejections": bool(
+                sim["first_threshold"]["rejected"] == 0),
+        },
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    ok = all(report["acceptance"].values())
+    print(f"wrote {out}  acceptance={report['acceptance']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

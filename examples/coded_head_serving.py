@@ -6,20 +6,24 @@ decoded logits are bit-identical — straggler-tolerant tensor parallelism
 built from the paper's coding machinery (core/coded_linear.py).
 
     PYTHONPATH=src python examples/coded_head_serving.py
+
+Exits nonzero if either serving run fails, so CI can smoke it honestly.
 """
 from repro.launch import serve
 
 
-def main():
+def main() -> int:
     print("=== coded LM head, no failures ===")
-    serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
-                "--prompt-len", "16", "--coded-head", "--coded-k", "4",
-                "--coded-t", "1", "--coded-n", "6"])
+    rc = serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+                     "--prompt-len", "16", "--gen", "4", "--coded-head",
+                     "--coded-k", "4", "--coded-t", "1", "--coded-n", "6"])
     print("\n=== coded LM head, shard 2 killed ===")
-    serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
-                "--prompt-len", "16", "--coded-head", "--coded-k", "4",
-                "--coded-t", "1", "--coded-n", "6", "--kill-shard", "2"])
+    rc2 = serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+                      "--prompt-len", "16", "--gen", "4", "--coded-head",
+                      "--coded-k", "4", "--coded-t", "1", "--coded-n", "6",
+                      "--kill-shard", "2"])
+    return rc or rc2
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

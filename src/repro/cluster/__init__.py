@@ -41,6 +41,12 @@ Modules:
                        peer traffic), reconstruction at the first 2T+1
                        CombineResults, bit-identical to the
                        core/mpc_baseline single-host oracle
+  serve.py             prediction serving plane (DESIGN.md §12): model
+                       shares provisioned once, client Query batches
+                       admitted into a bounded queue, flushed under a
+                       max-batch/max-wait policy, decoded at the first
+                       2(K+T-1)+1 responders, bit-identical to the
+                       uncoded plaintext oracle
 
 Numerics stay in core/protocol: the runner feeds its observed responder
 order into the exact round/update functions train()/train_reference() use,
@@ -54,6 +60,7 @@ from repro.cluster.latency import (
     DeterministicLatency,
     LatencyModel,
     LognormalTailLatency,
+    SleepyStragglerLatency,
     make_latency,
 )
 from repro.cluster.messages import (
@@ -63,9 +70,17 @@ from repro.cluster.messages import (
     CombineResult,
     EncodeShare,
     Heartbeat,
+    Prediction,
+    Query,
     SubShare,
     WorkerResult,
     worker_endpoint,
+)
+from repro.cluster.serve import (
+    BatchingPolicy,
+    PredictionServer,
+    ServeConfig,
+    open_loop_queries,
 )
 from repro.cluster.mpc_runner import MPCClusterRunner, mpc_phase_models
 from repro.cluster.pipeline import (
@@ -90,6 +105,7 @@ __all__ = [
     "MASTER",
     "PROVISION_ROUND",
     "SHUTDOWN_ROUND",
+    "BatchingPolicy",
     "BurstyStragglerLatency",
     "Clock",
     "ClusterDecodeError",
@@ -106,11 +122,16 @@ __all__ = [
     "MPCClusterRunner",
     "MPCRoundTrace",
     "PIPELINE_MODES",
+    "Prediction",
+    "PredictionServer",
+    "Query",
     "RoundContext",
     "RoundPrefetcher",
     "RoundRecord",
     "RoundTrace",
+    "ServeConfig",
     "SimClock",
+    "SleepyStragglerLatency",
     "SocketTransport",
     "SubShare",
     "Transport",
@@ -118,6 +139,7 @@ __all__ = [
     "WorkerResult",
     "make_latency",
     "mpc_phase_models",
+    "open_loop_queries",
     "wait_summary",
     "worker_endpoint",
 ]

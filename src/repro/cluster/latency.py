@@ -105,6 +105,24 @@ class BurstyStragglerLatency(LatencyModel):
         return lat
 
 
+class SleepyStragglerLatency(LatencyModel):
+    """Wraps another model and adds a fixed sleep to chosen workers —
+    the simulation analog of cpml_worker's ``--sleep-s`` injection
+    (``sleeps={worker: seconds}``), so sim and socket benchmarks inject
+    the SAME deterministic straggler shape.
+    """
+
+    def __init__(self, inner: LatencyModel, sleeps: dict[int, float]):
+        self.inner = inner
+        self.sleeps = dict(sleeps)
+
+    def sample(self, round: int, worker: int) -> float:
+        return self.inner.sample(round, worker) + self.sleeps.get(worker, 0.0)
+
+    def revive(self, worker: int, at_round: int) -> None:
+        self.inner.revive(worker, at_round)
+
+
 class DeadWorkerLatency(LatencyModel):
     """Wraps another model and kills chosen workers at chosen rounds.
 

@@ -99,6 +99,35 @@ class CombineResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class Query:
+    """Client -> master: one prediction request for the serving plane
+    (cluster/serve.py).
+
+    ``sent_at`` is the client-clock submission time — the open-loop load
+    generator stamps the arrival schedule here, and every served latency
+    (queue wait + batching + dispatch + decode) is measured from it.
+    """
+    qid: int
+    client: str
+    sent_at: float               # client submission time (latency epoch)
+    x: Any = None                # (rows, d) feature block / serialized array
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """Master -> client: the decoded logits answering one Query.
+
+    Decoded at the first `deg_f*(K+T-1)+1` responders of the query's coded
+    flush — exact Lagrange interpolation, so ``y`` is bit-identical to the
+    uncoded plaintext evaluation regardless of WHICH workers responded.
+    """
+    qid: int
+    client: str
+    y: Any = None                # (rows, c) real logits
+    latency_s: float = 0.0       # sent_at -> decode completion
+
+
+@dataclasses.dataclass(frozen=True)
 class Heartbeat:
     """Worker -> master liveness ack, sent on receipt of an EncodeShare.
 

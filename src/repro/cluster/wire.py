@@ -68,6 +68,8 @@ from repro.cluster.messages import (
     CombineResult,
     EncodeShare,
     Heartbeat,
+    Prediction,
+    Query,
     SubShare,
     WorkerResult,
 )
@@ -91,6 +93,8 @@ _FRAME_HELLO2 = 0x18             # v2: HELLO + sender wire version
 _FRAME_ROUND = 0x19              # v2: coalesced (worker, round) EncodeShare
 _FRAME_WORKER_RESULT_T = 0x1A    # v2: WorkerResult + piggy-backed TRACE
 _FRAME_COMBINE_RESULT_T = 0x1B   # v2: CombineResult + piggy-backed TRACE
+_FRAME_QUERY = 0x1C              # serving plane: client -> master request
+_FRAME_PREDICTION = 0x1D         # serving plane: master -> client answer
 
 # value tags
 _T_NONE = 0x00
@@ -413,6 +417,20 @@ def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
         _enc_value(msg.payload, out, version)
         if traced:
             _enc_value(msg.trace, out, version)
+    elif isinstance(msg, Query):
+        # version-agnostic like SubShare: the frame layout never changes,
+        # only the payload's value encoding upgrades (PACKED under v2)
+        out.append(bytes([_FRAME_QUERY]))
+        _enc_value(msg.qid, out)
+        _enc_value(msg.client, out)
+        _enc_value(msg.sent_at, out)
+        _enc_value(msg.x, out, version)
+    elif isinstance(msg, Prediction):
+        out.append(bytes([_FRAME_PREDICTION]))
+        _enc_value(msg.qid, out)
+        _enc_value(msg.client, out)
+        _enc_value(msg.y, out, version)
+        _enc_value(msg.latency_s, out)
     elif isinstance(msg, Heartbeat):
         out.append(bytes([_FRAME_HEARTBEAT]))
         _enc_value(msg.worker, out)
@@ -509,6 +527,12 @@ def _decode_body(body, version: int = WIRE_VERSION) -> Any:
         msg = CombineResult(round=_dec_value(r), worker=_dec_value(r),
                             compute_s=_dec_value(r), payload=_dec_value(r),
                             trace=_dec_value(r))
+    elif tag == _FRAME_QUERY:
+        msg = Query(qid=_dec_value(r), client=_dec_value(r),
+                    sent_at=_dec_value(r), x=_dec_value(r))
+    elif tag == _FRAME_PREDICTION:
+        msg = Prediction(qid=_dec_value(r), client=_dec_value(r),
+                         y=_dec_value(r), latency_s=_dec_value(r))
     elif tag == _FRAME_HEARTBEAT:
         msg = Heartbeat(worker=_dec_value(r), sent_at=_dec_value(r))
     elif tag == _FRAME_FORWARD:

@@ -9,8 +9,12 @@ message protocol (DESIGN.md §7):
   1. PROVISION — an EncodeShare with ``round == PROVISION_ROUND`` carrying
      {cfg kwargs, the worker's coded dataset share X̃_i, sigmoid-surrogate
      coefficients c̄}.  A ``"protocol": "mpc"`` key selects the BGW serve
-     mode (the share is then a FULL-dataset Shamir share).  The worker acks
-     with a Heartbeat once loaded.
+     mode (the share is then a FULL-dataset Shamir share); a
+     ``"protocol": "serve"`` key selects the prediction-serving plane
+     (cluster/serve.py) — the payload carries the model share W̃_i held
+     for the deployment's lifetime, and each later round ships a query
+     share X̃_i answered with the bilinear evaluation X̃_i·W̃_i.  The
+     worker acks with a Heartbeat once loaded.
   2. ROUNDS    — CPML: each EncodeShare(t, i, {"w_share", "batch"}) is
      acked with an immediate Heartbeat (liveness), then answered with
      WorkerResult(t, i, compute_s, payload=f(X̃_i, W̃_i)).  A pipelined
@@ -234,6 +238,37 @@ def serve(args) -> int:
         else:
             state["xb_cache"] = None
 
+    def serve_round(at: float, msg) -> None:
+        """One coded prediction flush (cluster/serve.py): a query share
+        X̃_i arrives, reply with the bilinear evaluation X̃_i·W̃_i.  Same
+        span shape as cpml_round so the master's per-query waterfall and
+        the training waterfall read identically."""
+        t0 = time.monotonic()
+        spans = state.pop("carry", []) if state.get("trace") else None
+        if spans is not None:
+            spans.append(["recv", at, t0])
+        if args.sleep_s > 0:
+            time.sleep(args.sleep_s)
+            if spans is not None:
+                spans.append(["straggle", t0, time.monotonic()])
+        t1 = time.monotonic()
+        xb = jnp.asarray(msg.payload["x_share"], jnp.int32)
+        r = state["f"](xb, state["w_share"])
+        r.block_until_ready()
+        t2 = time.monotonic()
+        if spans is not None:
+            spans.append(["compute", t1, t2])
+        result = np.asarray(r, dtype=np.int32)
+        t3 = time.monotonic()
+        if spans is not None:
+            spans.append(["serialize", t2, t3])
+        tr.send(MASTER,
+                WorkerResult(msg.round, args.worker,
+                             compute_s=time.monotonic() - t0,
+                             payload=result, trace=spans))
+        if spans is not None:
+            state["carry"] = [["send", t3, time.monotonic()]]
+
     try:
         while not tr.peer_closed:
             if not pending:
@@ -254,6 +289,16 @@ def serve(args) -> int:
                     state["protocol"] = "mpc"
                     state["cfg"] = mpc.MPCConfig(**p["cfg"])
                     state["cbar"] = jnp.asarray(p["cbar"], jnp.int32)
+                elif p.get("protocol") == "serve":
+                    # serving plane (cluster/serve.py): hold the model share
+                    # W̃_i for the deployment's lifetime; every flush ships
+                    # a query share X̃_i and the round function is one
+                    # bilinear field matmul X̃_i·W̃_i.
+                    state["protocol"] = "serve"
+                    prime = int(p["p"])
+                    state["w_share"] = jnp.asarray(p["w_share"], jnp.int32)
+                    state["f"] = jax.jit(
+                        lambda xb, ws, _p=prime: field.matmul(xb, ws, _p))
                 else:
                     # worker compute never needs the sharded backend or the
                     # Pallas kernel: the jnp reference path is the exact
@@ -267,7 +312,20 @@ def serve(args) -> int:
                     # exact int32 field math either way (DESIGN.md §4).
                     state["f"] = jax.jit(compute.worker_fn(
                         cfg, jnp.asarray(p["cbar"], jnp.int32)))
-                state["x_share"] = jnp.asarray(p["x_share"], jnp.int32)
+                if state["protocol"] != "serve":
+                    state["x_share"] = jnp.asarray(p["x_share"], jnp.int32)
+                if state["protocol"] == "serve":
+                    # serve flushes are padded to a FIXED (rows, d) shape
+                    # (cluster/serve.py), so this one compile covers every
+                    # future flush — no mid-service recompile p99 spikes.
+                    rows = int(p["rows"])
+                    xw = jnp.zeros((rows, state["w_share"].shape[0]),
+                                   jnp.int32)
+                    t_c0 = time.monotonic()
+                    state["f"](xw, state["w_share"]).block_until_ready()
+                    if state["trace"]:
+                        state["carry"] = [
+                            ["warm_compile", t_c0, time.monotonic()]]
                 if state["protocol"] == "cpml":
                     # compile BEFORE acking: provisioning is the documented
                     # warmup window (rounds start only after every ack, so
@@ -299,6 +357,8 @@ def serve(args) -> int:
                     f"provisioning")
             if state["protocol"] == "mpc":
                 mpc_round(at, msg)
+            elif state["protocol"] == "serve":
+                serve_round(at, msg)
             else:
                 cpml_round(at, msg)
         return 0

@@ -24,21 +24,23 @@ from repro.models import model as M
 def greedy_decode(cfg, rc, params, prompt, steps, coded=None, survivors=None):
     """prompt: (B, S) tokens. Returns (B, steps) generated tokens."""
     B, S = prompt.shape
-    logits, cache = M.prefill(cfg, rc, params, {"tokens": prompt},
-                              cache_len=S + steps)
+    logits, cache, h = M.prefill(cfg, rc, params, {"tokens": prompt},
+                                 cache_len=S + steps, return_hidden=True)
     outs = []
-    decode = jax.jit(lambda p, c, b: M.decode_step(cfg, rc, p, c, b))
+    decode = jax.jit(lambda p, c, b: M.decode_step(cfg, rc, p, c, b,
+                                                   return_hidden=True))
     for _ in range(steps):
         if coded is not None:
-            # replace the head projection with the coded path
-            h = logits["hidden"]
-            lg = CL.coded_head_apply(coded["cfg"], h[:, -1], coded["shares"],
-                                     survivors=survivors)
+            # coded path: project the REAL post-final-norm hidden state
+            # through the Lagrange-coded head instead of lm_head
+            lg = CL.coded_head_apply(coded["cfg"],
+                                     h[:, -1].astype(jnp.float32),
+                                     coded["shares"], survivors=survivors)
             tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
         else:
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         outs.append(tok)
-        logits, cache = decode(params, cache, {"tokens": tok})
+        logits, cache, h = decode(params, cache, {"tokens": tok})
     return jnp.concatenate(outs, axis=1)
 
 
@@ -69,7 +71,8 @@ def main(argv=None):
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size, dtype=jnp.int32)
 
-    t0 = time.time()
+    coded = None
+    survivors = None
     if args.coded_head:
         # vocab must divide K: pad config choice onto the reduced vocab
         ccfg = CL.CodedLinearConfig(N=args.coded_n, K=args.coded_k,
@@ -79,14 +82,13 @@ def main(argv=None):
         v = w.shape[1] - (w.shape[1] % args.coded_k)
         w = w[:, :v]
         shares = CL.encode_weights(ccfg, jax.random.PRNGKey(2), w)
-        survivors = None
         if args.kill_shard >= 0:
             survivors = np.array([i for i in range(ccfg.N)
                                   if i != args.kill_shard])
             print(f"killed shard {args.kill_shard}; decoding from "
                   f"{len(survivors)} survivors (threshold {ccfg.threshold})")
-        # coded head needs hidden states: run uncoded backbone, coded head
-        B, S = prompt.shape
+        # one-shot accuracy check on the prompt's hidden states before
+        # generating: coded head vs the uncoded projection
         h, _ = M.backbone(cfg, rc, params, {"tokens": prompt})
         lg = CL.coded_head_apply(ccfg, h[:, -1].astype(jnp.float32), shares,
                                  survivors=survivors)
@@ -97,8 +99,10 @@ def main(argv=None):
         agree = float((tok_coded == tok_ref).mean())
         print(f"coded head: rel err {err:.4f}, argmax agreement {agree:.2%}, "
               f"useful fraction K/N = {args.coded_k}/{args.coded_n}")
-        return 0
-    toks = greedy_decode(cfg, rc, params, prompt, args.gen)
+        coded = {"cfg": ccfg, "shares": shares}
+    t0 = time.time()
+    toks = greedy_decode(cfg, rc, params, prompt, args.gen, coded=coded,
+                         survivors=survivors)
     dt = time.time() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")

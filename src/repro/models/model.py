@@ -344,8 +344,13 @@ def loss_fn(cfg: ModelConfig, rc: RunConfig, params: Params,
 
 
 def prefill(cfg: ModelConfig, rc: RunConfig, params: Params, batch: dict,
-            cache_len: int):
-    """Prefill: returns (last-position logits, decode cache)."""
+            cache_len: int, return_hidden: bool = False):
+    """Prefill: returns (last-position logits, decode cache).
+
+    ``return_hidden=True`` appends the last-position post-final-norm
+    hidden state (B, 1, D) — the input an alternative head (e.g. the
+    Lagrange-coded head, core/coded_linear) projects instead of lm_head.
+    """
     h, caches = backbone(cfg, rc, params, batch, collect_cache=True)
     S = h.shape[1]
     logits = lm_head(cfg, params, h[:, -1:])
@@ -368,6 +373,8 @@ def prefill(cfg: ModelConfig, rc: RunConfig, params: Params, batch: dict,
             dst["ssm"] = src["ssm"].astype(jnp.float32)
             dst["conv"] = src["conv"]
     cache["index"] = jnp.int32(S)
+    if return_hidden:
+        return logits, cache, h[:, -1:]
     return logits, cache
 
 
@@ -468,8 +475,12 @@ def decode_block(cfg: ModelConfig, rc: RunConfig, kind: str, p: Params,
 
 
 def decode_step(cfg: ModelConfig, rc: RunConfig, params: Params,
-                cache: dict, batch: dict):
-    """One decode step: batch {'tokens': (B,1)} -> (logits (B,1,V), cache)."""
+                cache: dict, batch: dict, return_hidden: bool = False):
+    """One decode step: batch {'tokens': (B,1)} -> (logits (B,1,V), cache).
+
+    ``return_hidden=True`` appends the post-final-norm hidden state
+    (B, 1, D), mirroring ``prefill`` — what a coded head consumes.
+    """
     x = embed_input(cfg, params, batch)
     index = cache["index"]
     enc_out = batch.get("enc_out")
@@ -494,4 +505,6 @@ def decode_step(cfg: ModelConfig, rc: RunConfig, params: Params,
             new_cache[f"seg{si}"] = ncs
     x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(cfg, params, x)
+    if return_hidden:
+        return logits, new_cache, x
     return logits, new_cache

@@ -13,9 +13,11 @@ import sys
 
 import pytest
 
-from repro.launch import cpml_cluster, cpml_train, cpml_worker
+from repro.launch import cpml_cluster, cpml_serve, cpml_train, cpml_worker
 
 TINY = ["--m", "96", "--d", "12", "--iters", "3"]
+SERVE_TINY = ["-N", "6", "-K", "2", "-T", "1", "--d", "12", "--classes", "5",
+              "--max-batch", "8"]
 
 
 def test_cpml_train_smoke(tmp_path):
@@ -54,6 +56,97 @@ def test_cpml_cluster_dead_resilient_smoke():
     assert rc == 0
 
 
+def test_cpml_serve_inprocess_smoke(tmp_path):
+    out = tmp_path / "serve.json"
+    rc = cpml_serve.main(SERVE_TINY + ["--queries", "8", "--rows", "3",
+                                       "--rate", "300",
+                                       "--json-out", str(out)])
+    assert rc == 0
+    blob = json.loads(out.read_text())
+    assert blob["config"]["threshold"] == 5
+    assert blob["stats"]["queries"] == 8
+    assert blob["stats"]["oracle"]["bit_identical"] is True
+    assert blob["stats"]["latency_first"]["p99"] >= 0.0
+
+
+def test_cpml_serve_closed_loop_straggler_smoke(tmp_path):
+    # closed loop + simulated sleeper + collect_all: both wait policies
+    # measured, predictions still bit-identical to the oracle
+    rc = cpml_serve.main(SERVE_TINY + ["--mode", "closed", "--queries", "3",
+                                       "--straggle-worker", "5",
+                                       "--straggle-sleep", "0.2",
+                                       "--collect-all",
+                                       "--trace-out",
+                                       str(tmp_path / "serve.trace.json"),
+                                       "--metrics-out",
+                                       str(tmp_path / "serve.prom")])
+    assert rc == 0
+    assert (tmp_path / "serve.trace.json").exists()
+    assert "serve_rounds_total" in (tmp_path / "serve.prom").read_text()
+
+
+# ---------------------------------------------------------------------------
+# regressions: the coded-head decode path in launch/serve.py (both bugs
+# shipped in the seed — these fail there)
+# ---------------------------------------------------------------------------
+
+def test_serve_coded_head_runs_decode_loop(capsys):
+    """Regression: ``--coded-head`` used to return after the one-shot
+    accuracy check, silently ignoring ``--gen`` — generation must run,
+    with the coded head projecting every step's real hidden state."""
+    from repro.launch import serve
+    rc = serve.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "1",
+                     "--prompt-len", "8", "--gen", "2", "--coded-head",
+                     "--coded-k", "4", "--coded-t", "1", "--coded-n", "6"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "coded head: rel err" in out
+    assert "generated (1, 2)" in out       # the seed returned before this
+
+
+def test_greedy_decode_coded_path_returns_tokens():
+    """Regression: greedy_decode's coded branch indexed ``logits`` like a
+    dict of activations (TypeError on a jax array) — it must consume the
+    post-final-norm hidden state and return (B, steps) tokens."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.configs.base import RunConfig
+    from repro.core import coded_linear as CL
+    from repro.launch import serve
+    from repro.models import model as M
+
+    cfg = registry.reduced_config(registry.get_config("tinyllama-1.1b"))
+    rc = RunConfig(q_block=8, kv_block=8, scan_chunk=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    ccfg = CL.CodedLinearConfig(N=6, K=4, T=1)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(jnp.float32)
+    w = w[:, : w.shape[1] - (w.shape[1] % 4)]
+    shares = CL.encode_weights(ccfg, jax.random.PRNGKey(2), w)
+    toks = serve.greedy_decode(cfg, rc, params, prompt, 2,
+                               coded={"cfg": ccfg, "shares": shares})
+    assert toks.shape == (1, 2)
+    assert int(toks.max()) < cfg.vocab_size
+
+
+def test_example_coded_head_serving_propagates_failure(monkeypatch):
+    """Regression: the example swallowed serve.main's return code, so CI
+    smoked it green even when serving failed."""
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "coded_head_serving.py")
+    spec = importlib.util.spec_from_file_location("coded_head_serving", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    monkeypatch.setattr(mod.serve, "main", lambda argv: 17)
+    assert mod.main() == 17
+
+
 def test_cpml_worker_parser_and_unreachable_master():
     # parser contract
     args = cpml_worker.build_parser().parse_args(
@@ -65,6 +158,29 @@ def test_cpml_worker_parser_and_unreachable_master():
     rc = cpml_worker.main(["--host", "127.0.0.1", "--port", "1",
                            "--worker", "0", "--connect-timeout", "2"])
     assert rc == 1
+
+
+@pytest.mark.slow
+def test_cpml_serve_socket_cli_end_to_end(tmp_path):
+    """The serving CLI's multi-process path: N real workers provisioned
+    with model shares, open-loop queries over TCP, one worker killed
+    mid-service, predictions verified against the plaintext oracle."""
+    out = tmp_path / "serve.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cpml_serve",
+         "--transport", "socket", "-N", "6", "-K", "2", "-T", "1",
+         "--d", "12", "--classes", "5", "--max-batch", "8",
+         "--queries", "8", "--rows", "4", "--rate", "100",
+         "--kill-worker", "5", "--kill-at-round", "1",
+         "--round-timeout", "120", "--json-out", str(out)],
+        capture_output=True, text=True, timeout=600,
+        env=_env_with_src())
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "bit-identical to the uncoded plaintext oracle: True" \
+        in proc.stdout
+    blob = json.loads(out.read_text())
+    assert blob["config"]["transport"] == "socket"
+    assert blob["stats"]["queries"] == 8
 
 
 @pytest.mark.slow

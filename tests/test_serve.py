@@ -1,0 +1,223 @@
+"""Serving-plane acceptance (DESIGN.md §12, cluster/serve.py).
+
+The load-bearing invariant mirrors the training plane's: the serving
+runtime decides WHEN queries are batched and WHICH workers' shares are
+decoded, never WHAT is computed — every served prediction must be
+bit-identical to the uncoded plaintext oracle (quantize -> field matmul
+-> dequantize on the master, no coding at all), on the simulated backend
+and over real TCP worker processes, including with a worker killed
+mid-service.  Around that: batching-policy units (size- vs deadline-
+triggered flushes), bounded-queue admission control, Query/Prediction
+wire round-trips, and the first-threshold vs wait-for-all tail claim.
+
+Socket tests spawn subprocesses and are marked ``slow`` (DESIGN.md §8).
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import wire
+from repro.cluster.latency import (DeterministicLatency,
+                                   SleepyStragglerLatency)
+from repro.cluster.messages import Prediction, Query
+from repro.cluster.serve import (BatchingPolicy, PredictionServer,
+                                 ServeConfig, open_loop_queries)
+
+
+def tiny_cfg(**kw):
+    kw.setdefault("N", 6)
+    kw.setdefault("K", 2)
+    kw.setdefault("T", 1)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_wait_s", 0.02)
+    return ServeConfig(**kw)
+
+
+def tiny_server(cfg=None, d=12, classes=5, **kw):
+    cfg = cfg or tiny_cfg()
+    w = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (d, classes))
+    kw.setdefault("latency", DeterministicLatency(base=1e-3, skew=0.1))
+    kw.setdefault("verify", True)
+    return PredictionServer(cfg, w, jax.random.PRNGKey(2), **kw)
+
+
+# ---------------------------------------------------------------------------
+# batching policy + config validation
+# ---------------------------------------------------------------------------
+
+def test_policy_flushes_on_size():
+    pol = BatchingPolicy(max_batch=8, max_wait_s=10.0)
+    assert not pol.should_flush(7, oldest_age_s=0.0)
+    assert pol.should_flush(8, oldest_age_s=0.0)
+    assert pol.should_flush(9, oldest_age_s=0.0)
+
+
+def test_policy_flushes_on_deadline():
+    pol = BatchingPolicy(max_batch=8, max_wait_s=0.05)
+    assert not pol.should_flush(1, oldest_age_s=0.049)
+    assert pol.should_flush(1, oldest_age_s=0.05)
+    assert pol.deadline(oldest_admitted_at=2.0) == pytest.approx(2.05)
+
+
+def test_policy_never_flushes_empty_queue():
+    pol = BatchingPolicy(max_batch=8, max_wait_s=0.0)
+    # max_wait 0 means flush immediately — but only if there ARE rows
+    assert not pol.should_flush(0, oldest_age_s=math.inf)
+    assert pol.should_flush(1, oldest_age_s=0.0)
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        tiny_cfg(max_batch=7)                  # K=2 must divide max_batch
+    with pytest.raises(AssertionError):
+        tiny_cfg(N=4)                          # N below 2(K+T-1)+1 = 5
+    cfg = tiny_cfg()
+    assert cfg.threshold == 5 and cfg.rows_per_part == 4
+
+
+# ---------------------------------------------------------------------------
+# admission control: the bounded queue rejects, never blocks or drops
+# ---------------------------------------------------------------------------
+
+def test_queue_full_rejects_at_submission():
+    srv = tiny_server(tiny_cfg(queue_cap=3))
+    qs = open_loop_queries(5, rows=1, d=12, rate_qps=0.0)
+    accepted = [srv.submit(q, now=0.0) for q in qs]
+    assert accepted == [True, True, True, False, False]
+    assert srv.rejected == [3, 4]
+    assert int(srv.metrics.counter("serve_rejected_total").value) == 2
+
+
+def test_oversized_and_empty_queries_rejected():
+    srv = tiny_server()                        # max_batch = 8
+    big = Query(qid=0, client="c", sent_at=0.0,
+                x=np.zeros((9, 12), np.float32))
+    empty = Query(qid=1, client="c", sent_at=0.0,
+                  x=np.zeros((0, 12), np.float32))
+    assert not srv.submit(big, now=0.0)
+    assert not srv.submit(empty, now=0.0)
+    assert srv.rejected == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the uncoded plaintext oracle (simulated backend)
+# ---------------------------------------------------------------------------
+
+def test_open_loop_served_predictions_bit_identical():
+    srv = tiny_server()
+    qs = open_loop_queries(12, rows=3, d=12, rate_qps=500.0, seed=9)
+    srv.run(qs)
+    assert len(srv.results) == 12 and not srv.rejected
+    stats = srv.stats()
+    assert stats["oracle"]["checked"] >= 1
+    assert stats["oracle"]["bit_identical"]
+    for q in qs:
+        pred = srv.results[q.qid]
+        assert isinstance(pred, Prediction) and pred.client == q.client
+        assert np.array_equal(np.asarray(pred.y), srv.oracle_logits(q.x))
+        assert math.isfinite(pred.latency_s) and pred.latency_s >= 0.0
+
+
+def test_closed_loop_full_batches_bit_identical():
+    srv = tiny_server()
+    qs = open_loop_queries(4, rows=8, d=12, rate_qps=0.0, seed=3)
+    srv.run_closed_loop(qs)
+    assert len(srv.results) == 4
+    assert srv.stats()["rounds"] == 4          # one flush per full batch
+    for q in qs:
+        assert np.array_equal(np.asarray(srv.results[q.qid].y),
+                              srv.oracle_logits(q.x))
+
+
+def test_deadline_flush_serves_partial_batch():
+    """A lone query never fills max_batch; the deadline must flush it."""
+    srv = tiny_server()
+    q = open_loop_queries(1, rows=2, d=12, rate_qps=0.0)[0]
+    srv.run([q])
+    assert len(srv.results) == 1
+    assert np.array_equal(np.asarray(srv.results[q.qid].y),
+                          srv.oracle_logits(q.x))
+
+
+def test_straggler_first_threshold_beats_wait_all():
+    """The serving claim on the simulated clock: same arrivals, same
+    latency draws, the sleeper's delay lands on wait-all but not on the
+    first-threshold service."""
+    lats = {}
+    for collect_all in (False, True):
+        srv = tiny_server(
+            latency=SleepyStragglerLatency(
+                DeterministicLatency(base=1e-3, skew=0.1), {5: 0.5}),
+            collect_all=collect_all, exclude_stragglers=False)
+        srv.run(open_loop_queries(8, rows=4, d=12, rate_qps=200.0, seed=4))
+        stats = srv.stats()
+        assert stats["oracle"]["bit_identical"]
+        lats[collect_all] = stats
+    first = lats[False]["latency_first"]["p99"]
+    wait_all = lats[True]["latency_all"]["p99"]
+    assert wait_all >= 0.5                     # every flush paid the sleep
+    assert first < 0.1 < wait_all
+
+
+def test_weight_shares_encoded_once_and_reused():
+    """The provisioned model shares are fixed per provision; only query
+    masks are fresh per flush (the privacy accounting in DESIGN.md §12)."""
+    srv = tiny_server()
+    before = np.asarray(srv.w_shares).copy()
+    srv.run(open_loop_queries(6, rows=4, d=12, rate_qps=300.0, seed=2))
+    assert np.array_equal(np.asarray(srv.w_shares), before)
+
+
+# ---------------------------------------------------------------------------
+# Query / Prediction wire frames (v1 + v2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("version", [wire.WIRE_V1, wire.WIRE_V2])
+def test_query_roundtrip(version):
+    msg = Query(qid=41, client="client3", sent_at=1.25,
+                x=np.arange(12, dtype=np.float32).reshape(3, 4))
+    out = wire.deserialize(wire.serialize(msg, version))
+    assert wire.messages_equal(out, msg), f"{out!r} != {msg!r}"
+
+
+@pytest.mark.parametrize("version", [wire.WIRE_V1, wire.WIRE_V2])
+def test_prediction_roundtrip(version):
+    msg = Prediction(qid=41, client="client3", latency_s=0.031,
+                     y=np.linspace(-2, 2, 10).reshape(2, 5))
+    out = wire.deserialize(wire.serialize(msg, version))
+    assert wire.messages_equal(out, msg), f"{out!r} != {msg!r}"
+
+
+# ---------------------------------------------------------------------------
+# live TCP serving: worker processes in "serve" protocol mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_socket_serving_bit_identical_with_worker_killed_mid_run():
+    """THE serving acceptance on real infrastructure: N=6 worker processes
+    provisioned once with model shares, open-loop queries over TCP, one
+    worker crashing mid-service (N drops to exactly the threshold) — and
+    every served prediction stays bit-identical to the plaintext oracle."""
+    from repro.launch.cpml_cluster import local_socket_cluster
+    cfg = tiny_cfg()
+    w = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (12, 5))
+    qs = open_loop_queries(10, rows=4, d=12, rate_qps=100.0, seed=6)
+    with local_socket_cluster(cfg.N, die_at_round={4: 2}) as tr:
+        srv = PredictionServer(cfg, w, jax.random.PRNGKey(2), transport=tr,
+                               round_timeout_s=120.0, verify=True)
+        srv.provision()
+        srv.run(qs)
+        srv.shutdown_workers()
+    assert len(srv.results) == 10
+    stats = srv.stats()
+    assert stats["rounds"] >= 3                # the kill round was mid-run
+    assert stats["oracle"]["bit_identical"] and stats["oracle"]["checked"]
+    for q in qs:
+        assert np.array_equal(np.asarray(srv.results[q.qid].y),
+                              srv.oracle_logits(q.x))
+    # the dead worker really dropped out of later decode sets
+    late = max(srv.traces)
+    assert 4 not in srv.traces[late].responders
