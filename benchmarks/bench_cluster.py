@@ -205,6 +205,90 @@ def bench_trace_overhead(cfg, x, y, iters: int, seed: int) -> dict:
     return entry
 
 
+def bench_sharded_masters(smoke: bool) -> dict:
+    """Master-group scaling at large d (DESIGN.md §13): per-master
+    critical-path coding seconds for S=1 vs S=2 over the same rounds.
+
+    The walls are per-thread CPU seconds, so the numbers model the
+    deployment (one master per machine) honestly even on a small CI box
+    where the S executor threads timeslice one core.  Acceptance: the S=2
+    critical path (max over the two masters of encode+decode) must be
+    <= 0.75x the single master's — the d-sharding actually halves each
+    master's serial coding work, minus the unsharded full-shape
+    quantize/mask draws both sizes pay identically.
+    """
+    from repro.cluster.master_group import MasterGroup
+    from repro.core.protocol import decode as _decode
+
+    d, m, rounds = (512, 128, 2) if smoke else (4096, 512, 4)
+    cfg = protocol.CPMLConfig(N=N_WORKERS, K=2, T=1, r=1)
+    x, _ = synthetic.mnist_like(jax.random.PRNGKey(2), m=m, d=d)
+    rng = np.random.default_rng(0)
+    results = {w: rng.integers(0, cfg.p, size=(d, cfg.c)).astype(np.int32)
+               for w in range(cfg.N)}
+    order = np.arange(cfg.N)
+    w2 = np.zeros((d, cfg.c), np.float32)
+    sizes: dict[str, dict] = {}
+    for size in (1, 2):
+        with MasterGroup(cfg, size) as grp:
+            grp.encode_dataset(cfg, jax.random.PRNGKey(0), x)
+            for t in range(rounds):
+                grp.encode_round_shares(
+                    jax.random.fold_in(jax.random.PRNGKey(1), t), w2)
+                dec = grp.make_decoder(
+                    _decode.prefix_decode_plan(cfg, order), d)
+                for w in order[: cfg.threshold]:
+                    dec.fold(w, results[w])
+                dec.finish(order)
+            sizes[f"S{size}"] = grp.group_stats()
+    ratio = (sizes["S2"]["critical_path_s"]
+             / sizes["S1"]["critical_path_s"])
+    entry = {"d": d, "m": m, "rounds": rounds, **sizes,
+             "critical_path_ratio_S2_over_S1": float(ratio)}
+    emit("cluster_masters/critical_path_S2",
+         sizes["S2"]["critical_path_s"] * 1e6,
+         f"vs S1 {sizes['S1']['critical_path_s']:.3f}s "
+         f"(ratio {ratio:.3f}, d={d})")
+    return entry
+
+
+def bench_membership(x, y, seed: int) -> dict:
+    """Elastic membership through the flight recorder (DESIGN.md §13): a
+    member dies (LEAVE at a fence), the spare slot replaces it (JOIN), and
+    the run must stay bit-identical to the reference on the spare-extended
+    config — with the membership transitions visible as spans in the
+    Perfetto-exportable trace."""
+    from repro.cluster import DeadWorkerLatency, DeterministicLatency
+    from repro.obs.trace import Recorder
+
+    iters = 16
+    cfg = protocol.CPMLConfig(N=N_WORKERS, K=2, T=1, r=1)
+    rec = Recorder()
+    runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                           DeadWorkerLatency(
+                               DeterministicLatency(base=1.0, skew=0.1),
+                               deaths={2: 3}),
+                           heartbeat_timeout_s=4.0, round_timeout_s=60.0,
+                           spares=1, recorder=rec)
+    w = np.asarray(runner.run(iters))
+    w_ref, _ = protocol.train_reference(runner.cfg, jax.random.PRNGKey(7),
+                                        x, y, iters=iters,
+                                        survivor_fn=runner.survivor_fn())
+    stats = runner.wait_stats()["membership"]
+    spans = [s for s in rec.spans if s.name == "membership_transition"]
+    entry = {
+        **stats,
+        "transition_spans": len(spans),
+        "transition_rounds": sorted({int(s.args["round"]) for s in spans}),
+        "bit_identical": bool((w == np.asarray(w_ref)).all()),
+    }
+    emit("cluster_membership/transitions", float(len(spans)) or 1.0,
+         f"epoch {stats['epoch']:.0f}, joins {stats['joins']:.0f}, "
+         f"leaves {stats['leaves']:.0f}, "
+         f"bit_identical={entry['bit_identical']}")
+    return entry
+
+
 def bench_compute(cfg, mpc_cfg, x, y) -> dict:
     """On-device wall time: one coded round vs one BGW MPC step."""
     key = jax.random.PRNGKey(0)
@@ -252,6 +336,8 @@ def main(argv=None) -> int:
         "smoke": args.smoke,
         "models": models,
         "trace_overhead": bench_trace_overhead(cfg, x, y, iters, args.seed),
+        "sharded_masters": bench_sharded_masters(args.smoke),
+        "membership": bench_membership(x, y, args.seed),
         "compute_us": bench_compute(cfg, mpc_cfg, x, y),
         # the paper's Fig. 5 effect: under heavy-tailed latency the
         # first-T policy must beat waiting for everyone, strictly — and
@@ -286,6 +372,15 @@ def main(argv=None) -> int:
         report["trace_overhead"]["sim_critical_path_ratio"] <= 1.05)
     report["acceptance"]["trace_bit_identical"] = bool(
         report["trace_overhead"]["bit_identical"])
+    # DESIGN.md §13: sharding the master over d must actually shorten each
+    # master's serial coding path, and an elastic run (leave + spare join)
+    # must stay bit-identical with its transitions on the trace
+    report["acceptance"]["sharded_masters_critical_path"] = bool(
+        report["sharded_masters"]["critical_path_ratio_S2_over_S1"] <= 0.75)
+    report["acceptance"]["membership_bit_identical"] = bool(
+        report["membership"]["bit_identical"])
+    report["acceptance"]["membership_transitions_traced"] = bool(
+        report["membership"]["transition_spans"] >= 1)
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

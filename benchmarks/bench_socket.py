@@ -36,9 +36,10 @@ Two questions about the live backend (DESIGN.md §7):
      frames (DESIGN.md §10) must ship strictly fewer bytes per round while
      both stay bit-identical.  Every socket entry reports bytes-on-wire
      from the scheduler's per-round ``wire_totals()`` deltas.
-  6. SCALE-N (``--scale-n``) — the fleet-size trend: N=16/32 worker
-     processes (64 with ``--full``) on a tiny problem, gated on
-     bit-identity and a sanity ceiling on per-round wall time.
+  6. SCALE-N (``--scale-n``) — the fleet-size trend: N=16/32/64 worker
+     processes on a tiny problem (the 64-point on trimmed iterations
+     unless ``--full``), gated on bit-identity and a sanity ceiling on
+     per-round wall time.
   7. FLIGHT RECORDER ON vs OFF — the straggled run repeated with the span
      recorder enabled (DESIGN.md §11): worker processes ship their
      recv/compute/serialize spans over the v2 TRACE wire field, the
@@ -223,19 +224,22 @@ def bench_socket_mpc(cfg, x, y, iters: int, sleep_s: float) -> dict:
 
 
 def bench_scale_n(full: bool) -> dict:
-    """Fleet-size trend: the same tiny problem on N=16/32 (and 64 with
-    ``--full``) worker processes.  On a contended box per-round wall time
-    grows with N (compute serializes across cores and the master writes N
-    frames), so the gate is not a flat number but SANITY: every scale stays
-    bit-identical and per-round overhead stays within an absolute ceiling —
-    a superlinear blowup (an O(N^2) wire or scheduler regression) blows
-    straight through it."""
-    sizes = [16, 32] + ([64] if full else [])
+    """Fleet-size trend: the same tiny problem on N=16/32/64 worker
+    processes.  The N=64 point always runs (it is the one that catches
+    O(N^2) wire or scheduler regressions) but on TRIMMED iterations so the
+    default pass stays affordable on a contended box; ``--full`` restores
+    the untrimmed count.  Per-round wall time grows with N (compute
+    serializes across cores and the master writes N frames), so the gate is
+    not a flat number but SANITY: every scale stays bit-identical and
+    per-round overhead stays within an absolute ceiling — a superlinear
+    blowup blows straight through it."""
+    sizes = [16, 32, 64]
     points = []
     for n in sizes:
+        iters = 4 if (n < 64 or full) else 3
         cfg = protocol.CPMLConfig(N=n, K=2, T=1, r=1)
         x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=256, d=32)
-        entry = bench_socket(cfg, x, y, iters=4, sleep_s=None,
+        entry = bench_socket(cfg, x, y, iters=iters, sleep_s=None,
                              connect_timeout_s=120.0 + 10.0 * n)
         points.append({
             "N": n,
@@ -246,9 +250,9 @@ def bench_scale_n(full: bool) -> dict:
             "bit_identical": entry["bit_identical"],
         })
         emit(f"socket/scale_n[{n}]", entry["full_round"]["mean"] * 1e6,
-             f"threshold={cfg.threshold} "
+             f"threshold={cfg.threshold} iters={iters} "
              f"bit_identical={entry['bit_identical']}")
-    return {"points": points, "m": 256, "d": 32, "iters": 4}
+    return {"points": points, "m": 256, "d": 32}
 
 
 def main(argv=None) -> int:
@@ -260,10 +264,10 @@ def main(argv=None) -> int:
     ap.add_argument("--sleep-s", type=float, default=0.25,
                     help="injected straggler sleep per round (> 0)")
     ap.add_argument("--scale-n", action="store_true",
-                    help="add the fleet-size trend (N=16/32 tiny-shape "
-                         "runs; N=64 too with --full)")
+                    help="add the fleet-size trend (N=16/32/64 tiny-shape "
+                         "runs; the N=64 point on trimmed iterations)")
     ap.add_argument("--full", action="store_true",
-                    help="include the N=64 point in --scale-n")
+                    help="untrimmed iterations for the N=64 --scale-n point")
     args = ap.parse_args(argv)
     if args.sleep_s <= 0:
         ap.error("--sleep-s must be > 0: the straggler comparison is the "

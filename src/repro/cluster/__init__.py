@@ -20,6 +20,14 @@ Modules:
                        connections, wall-clock arrival stamps
   latency.py           seeded, replayable per-worker latency models
                        (deterministic / lognormal-tail / bursty / dead)
+  membership.py        elastic fleet membership (DESIGN.md §13): an epoch-
+                       numbered MembershipView state machine — JOINs admit
+                       pre-encoded spare Lagrange slots, LEAVEs retire dead
+                       members permanently; every round derives its
+                       dispatch set + decode plan from one epoch snapshot
+  master_group.py      d-sharded master group (DESIGN.md §13): S masters
+                       each encode + stream-decode a contiguous 1/S slice
+                       of the model dimension, bit-identical to one master
   scheduler.py         the event loop on either clock: dispatch round ->
                        advance/await the next arrival -> decode at the
                        threshold-th result; records first-T vs wait-all
@@ -63,13 +71,21 @@ from repro.cluster.latency import (
     SleepyStragglerLatency,
     make_latency,
 )
+from repro.cluster.master_group import MasterGroup, ShardedStreamingDecoder
+from repro.cluster.membership import (
+    ClusterMembership,
+    MembershipView,
+    Transition,
+)
 from repro.cluster.messages import (
     MASTER,
     PROVISION_ROUND,
     SHUTDOWN_ROUND,
     CombineResult,
     EncodeShare,
+    Epoch,
     Heartbeat,
+    Join,
     Prediction,
     Query,
     SubShare,
@@ -109,18 +125,23 @@ __all__ = [
     "BurstyStragglerLatency",
     "Clock",
     "ClusterDecodeError",
+    "ClusterMembership",
     "ClusterRunner",
     "CombineResult",
     "DeadWorkerLatency",
     "DeterministicLatency",
     "EncodeShare",
+    "Epoch",
     "EventScheduler",
     "Heartbeat",
     "InProcessTransport",
+    "Join",
     "LatencyModel",
     "LognormalTailLatency",
     "MPCClusterRunner",
     "MPCRoundTrace",
+    "MasterGroup",
+    "MembershipView",
     "PIPELINE_MODES",
     "Prediction",
     "PredictionServer",
@@ -130,10 +151,12 @@ __all__ = [
     "RoundRecord",
     "RoundTrace",
     "ServeConfig",
+    "ShardedStreamingDecoder",
     "SimClock",
     "SleepyStragglerLatency",
     "SocketTransport",
     "SubShare",
+    "Transition",
     "Transport",
     "WallClock",
     "WorkerResult",

@@ -1,0 +1,273 @@
+"""Sharded master group: split the master's Lagrange coding over d.
+
+The master serializes all encode/decode work for the full model dimension
+d each round; past a few thousand features that serial coding — not the
+workers — caps round throughput.  The protocol math shards trivially: the
+Lagrange encode (U^T applied along the K+T axis) and the streaming decode
+fold are ELEMENTWISE-LINEAR across d, so a master group of size S can each
+own a contiguous d-slice and run encode_dataset / the per-round weight
+encode / the StreamingDecoder fold on 1/S of the columns, bit-identically
+(DESIGN.md §13).
+
+The ONE rule that keeps sharding bit-identical: ALL RANDOMNESS IS DRAWN AT
+FULL SHAPE.  jax PRNG draws are shape-dependent — quantize_weights(kq,
+w[shard]) is NOT quantize_weights(kq, w)[shard] — so the stochastic
+quantization and the T privacy masks are generated once for the whole
+model, and only the deterministic linear algebra (encode matmul, addmod,
+decode folds) runs per shard.  Privacy is unchanged for the same reason:
+the group holds exactly the masks a single master would hold.
+
+Shard placement reuses the parallel/rules.py + launch/mesh.py machinery:
+``make_local_mesh(model=S)`` + ``spec_for`` decide whether the model axis
+genuinely shards d on this host's devices (divisible-or-replicate policy);
+the group always runs S logical masters regardless — one single-thread
+executor per master models S master processes, with per-master wall clocks.
+On a box with >= S cores the numpy field arithmetic (which releases the
+GIL) genuinely overlaps.  The per-master walls are PER-THREAD CPU seconds
+(``time.thread_time`` on each master's own executor thread), so even on
+fewer cores — where the threads timeslice and any wall clock would charge
+each master for the others' turns — each wall still measures exactly that
+master's 1/S share, and ``group_stats``'s critical path (max over masters)
+estimates the group's deployment wall-clock, where the S masters are
+separate processes on separate machines.
+"""
+from __future__ import annotations
+
+import time as _time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import lagrange, quantize
+from repro.core.protocol import decode, encode
+from repro.core.protocol.config import CPMLConfig
+from repro.launch.mesh import make_local_mesh
+from repro.parallel import rules
+
+
+def _host_encode_rows(u_rows: np.ndarray, stacked: np.ndarray, p: int
+                      ) -> np.ndarray:
+    """Exact mod-p U^T-apply on the host: (rows, N)^T @ (rows, M) -> (N, M).
+
+    Reduced after every row so int64 never overflows (each product < p^2 <
+    2^60, accumulator < 2^61) — the same discipline as the streaming
+    decoder's fold, valid for both the 24-bit P and the 30-bit P30.
+    """
+    acc = np.zeros((u_rows.shape[1], stacked.shape[1]), np.int64)
+    for k in range(u_rows.shape[0]):
+        acc = (acc + u_rows[k][:, None] * stacked[k][None, :]) % p
+    return acc
+
+
+def d_shard_slices(cfg: CPMLConfig, d: int, size: int) -> list[slice]:
+    """Contiguous d-slices for a master group of ``size``.
+
+    Placement policy comes from the dormant sharding machinery: a local
+    mesh with a model axis of (up to) ``size`` devices and the
+    divisible-or-replicate rules decide whether d shards EVENLY over the
+    model axis ('inner' is a model-sharded logical axis).  When it does,
+    the slices are the exact equal blocks GSPMD would place; otherwise
+    np.array_split's balanced blocks (sizes differ by at most one) keep
+    every master's share within one column of 1/S.
+    """
+    size = max(1, min(int(size), d))
+    mesh = make_local_mesh(model=size)
+    spec = rules.spec_for(mesh, (d, cfg.c), ("inner", None))
+    model_n = int(mesh.shape["model"])
+    if spec and spec[0] == "model" and model_n == size and d % size == 0:
+        step = d // size
+        return [slice(i * step, (i + 1) * step) for i in range(size)]
+    bounds = np.cumsum([0] + [len(a) for a in
+                              np.array_split(np.arange(d), size)])
+    return [slice(int(bounds[i]), int(bounds[i + 1])) for i in range(size)]
+
+
+class ShardedStreamingDecoder:
+    """S per-shard StreamingDecoders behind the one-decoder interface.
+
+    Each shard's decoder runs on its master's single-thread executor, so
+    same-shard folds keep arrival order while shards overlap each other
+    (and the collect loop).  The DecodePlan is shared: its coefficient
+    columns are (K,) per worker — d-independent — so every shard predicts
+    and hits identically, and ``streamed`` agrees across shards.
+    """
+
+    def __init__(self, cfg: CPMLConfig, plan, slices: list[slice],
+                 pools: list[ThreadPoolExecutor], walls: list[dict]):
+        self.cfg = cfg
+        self._slices = slices
+        self._pools = pools
+        self._walls = walls
+        self._decs = [decode.StreamingDecoder(cfg, plan) for _ in slices]
+        self._futs: list = []
+        self.streamed = False
+
+    def _timed(self, s: int, fn, *args):
+        # thread_time: this master's own CPU seconds (see MasterGroup)
+        t0 = _time.thread_time()
+        try:
+            return fn(*args)
+        finally:
+            self._walls[s]["decode_s"] += _time.thread_time() - t0
+
+    def fold(self, worker: int, result) -> None:
+        h = np.asarray(result, dtype=np.int32)
+        self._futs = [
+            pool.submit(self._timed, s, self._decs[s].fold, worker, h[sl])
+            for s, (sl, pool) in enumerate(zip(self._slices, self._pools))]
+
+    def finish(self, order: np.ndarray) -> np.ndarray:
+        for f in self._futs:            # last fold must land before finish
+            f.result()
+        futs = [pool.submit(self._timed, s, self._decs[s].finish, order)
+                for s, pool in enumerate(self._pools)]
+        parts = [f.result() for f in futs]
+        self.streamed = all(d.streamed for d in self._decs)
+        return np.concatenate(parts, axis=1)        # (K, d, c) along d
+
+
+class MasterGroup:
+    """S logical masters, each owning a contiguous 1/S slice of d.
+
+    Drop-in provider for the master-side coding surfaces the runner uses:
+    ``encode_dataset`` (provision-time), ``encode_round_shares`` /
+    ``encode_round_shares_split`` (per-round weight encode), and
+    ``streaming_decoder`` (per-round decode).  Everything is bit-identical
+    to the single-master jitted engine path (tests/test_master_group.py):
+    randomness at full shape, linear algebra per shard, exact mod p.
+    """
+
+    def __init__(self, cfg: CPMLConfig, size: int = 1):
+        assert size >= 1, f"master group size {size} < 1"
+        self.cfg = cfg
+        self.size = int(size)
+        self._pools: list[ThreadPoolExecutor] = [
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix=f"master{i}")
+            for i in range(self.size)]
+        # per-master wall-clock accounting (group_stats)
+        self.walls: list[dict[str, float]] = [
+            {"encode_s": 0.0, "decode_s": 0.0} for _ in range(self.size)]
+        self._u = np.asarray(cfg.scheme.encode_matrix, np.int64)  # (K+T, N)
+
+    # -- plumbing -------------------------------------------------------
+
+    def close(self) -> None:
+        for p in self._pools:
+            p.shutdown(wait=True)
+
+    def __enter__(self) -> "MasterGroup":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _encode_sharded(self, stacked: np.ndarray, axis: int,
+                        mask_shares: np.ndarray | None = None) -> np.ndarray:
+        """Apply U^T (all rows, or just the K data rows + given encoded mask
+        contribution) per d-shard; ``axis`` is stacked's d axis (excluding
+        the leading rows axis handled by the matmul)."""
+        cfg = self.cfg
+        d = stacked.shape[axis]
+        slices = d_shard_slices(cfg, d, self.size)
+        u_rows = self._u if mask_shares is None else self._u[: cfg.K]
+
+        def one(s: int, sl: slice) -> np.ndarray:
+            t0 = _time.thread_time()
+            try:
+                sub = np.take(stacked, np.arange(sl.start, sl.stop),
+                              axis=axis)
+                flat = sub.reshape(sub.shape[0], -1).astype(np.int64)
+                out = _host_encode_rows(u_rows, flat, cfg.p)  # (N, M)
+                out = out.reshape(cfg.N, *sub.shape[1:])
+                if mask_shares is not None:
+                    msub = np.take(mask_shares,
+                                   np.arange(sl.start, sl.stop), axis=axis)
+                    out = (out + msub.astype(np.int64)) % cfg.p
+                return out.astype(np.int32)
+            finally:
+                self.walls[s]["encode_s"] += _time.thread_time() - t0
+
+        futs = [pool.submit(one, s, sl)
+                for s, (sl, pool) in enumerate(zip(slices,
+                                                   self._pools[: len(slices)]))]
+        return np.concatenate([f.result() for f in futs], axis=axis)
+
+    # -- provision-time dataset encode ----------------------------------
+
+    def encode_dataset(self, cfg: CPMLConfig, key: jax.Array, x: jax.Array
+                       ) -> tuple[np.ndarray, dict[str, Any]]:
+        """Sharded twin of encode.encode_dataset (same signature, so it
+        plugs into engine.setup's ``dataset_encoder`` hook).  Quantization
+        and the T masks are full-shape; only the (K+T)-row encode matmul
+        runs per d-shard."""
+        xq = quantize.quantize_data(x, cfg.lx, cfg.p)
+        xq = encode.pad_rows(xq, cfg.K)
+        mk = xq.shape[0] // cfg.K
+        parts = np.asarray(xq.reshape(cfg.K, mk, xq.shape[-1]))
+        masks = np.asarray(
+            lagrange.draw_masks(key, cfg.T, parts.shape[1:], cfg.p))
+        stacked = (np.concatenate([parts, masks], axis=0) if cfg.T
+                   else parts)                       # (K+T, mk, d)
+        shares = self._encode_sharded(stacked, axis=2)
+        return shares, {"xq": xq, "m_padded": int(xq.shape[0])}
+
+    # -- per-round weight encode ----------------------------------------
+
+    def encode_round_shares(self, key: jax.Array, w2) -> np.ndarray:
+        """Sharded twin of engine.encode_round_shares: same key split, same
+        full-shape quantize + masks, per-shard encode.  (N, d, c, r)."""
+        cfg = self.cfg
+        kq, km = jax.random.split(key)
+        wbar = np.asarray(
+            quantize.quantize_weights(kq, w2, cfg.lw, cfg.r, cfg.p))
+        masks = np.asarray(
+            lagrange.draw_masks(km, cfg.T, wbar.shape, cfg.p))
+        parts = np.broadcast_to(wbar[None], (cfg.K, *wbar.shape))
+        stacked = (np.concatenate([parts, masks], axis=0) if cfg.T
+                   else np.ascontiguousarray(parts))  # (K+T, d, c, r)
+        return self._encode_sharded(stacked, axis=1)
+
+    def encode_round_shares_split(self, kq: jax.Array, mask_shares,
+                                  w2) -> np.ndarray:
+        """Sharded twin of engine.encode_round_shares_split: the
+        W-dependent finish only — quantize at full shape, then per shard
+        the K-row data encode plus the prefetched mask contribution."""
+        cfg = self.cfg
+        wbar = np.asarray(
+            quantize.quantize_weights(kq, w2, cfg.lw, cfg.r, cfg.p))
+        parts = np.ascontiguousarray(
+            np.broadcast_to(wbar[None], (cfg.K, *wbar.shape)))
+        return self._encode_sharded(parts, axis=1,
+                                    mask_shares=np.asarray(mask_shares))
+
+    # -- per-round decode ------------------------------------------------
+
+    def make_decoder(self, plan, d: int) -> ShardedStreamingDecoder:
+        """A sharded streaming decoder over this group's executors."""
+        slices = d_shard_slices(self.cfg, d, self.size)
+        return ShardedStreamingDecoder(self.cfg, plan, slices,
+                                       self._pools[: len(slices)],
+                                       self.walls)
+
+    # -- accounting ------------------------------------------------------
+
+    def group_stats(self) -> dict[str, Any]:
+        """Per-master encode/decode walls + the group critical path.
+
+        ``critical_path_s`` is the max over masters of (encode + decode)
+        per-thread CPU wall — the group's deployment wall-clock, where the
+        S masters run as separate processes.  Matches the measured wall
+        when this host has >= S cores (numpy field ops release the GIL);
+        on fewer cores it is the honest estimate a wall clock cannot give."""
+        per = [dict(w) for w in self.walls]
+        return {
+            "size": self.size,
+            "per_master": per,
+            "encode_total_s": float(sum(w["encode_s"] for w in per)),
+            "decode_total_s": float(sum(w["decode_s"] for w in per)),
+            "critical_path_s": float(max(
+                w["encode_s"] + w["decode_s"] for w in per)),
+        }

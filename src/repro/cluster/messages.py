@@ -128,6 +128,39 @@ class Prediction:
 
 
 @dataclasses.dataclass(frozen=True)
+class Join:
+    """Worker -> master: a late worker asks to enter the fleet (elastic
+    membership, DESIGN.md §13).
+
+    Sent right after the transport HELLO by a worker started with
+    ``--join-at-round``: ``worker`` is the spare slot it answers for,
+    ``at_round`` the first round fence it wants to be dispatched from.  The
+    master stashes the request and admits the worker at the fence —
+    provisioning its pre-encoded spare share, bumping the membership epoch,
+    and broadcasting the new Epoch.  Wire v2 only: a v1 fleet has no JOIN
+    frame and keeps fixed-fleet semantics bit-identically.
+    """
+    worker: int
+    at_round: int
+    sent_at: float = 0.0             # worker-clock request time
+
+
+@dataclasses.dataclass(frozen=True)
+class Epoch:
+    """Master -> workers: the membership epoch changed (join/leave).
+
+    Informational fan-out so workers can stamp their spans/metrics with the
+    fleet generation they computed under; the master's own round math never
+    depends on a worker having seen it (the epoch fence lives master-side).
+    Wire v2 only — the master skips v1 peers, whose byte stream stays
+    bit-identical to the fixed-fleet protocol.
+    """
+    epoch: int
+    members: Any = None              # tuple of active slots (int32-able)
+    round: int = 0                   # fence round the transition landed at
+
+
+@dataclasses.dataclass(frozen=True)
 class Heartbeat:
     """Worker -> master liveness ack, sent on receipt of an EncodeShare.
 

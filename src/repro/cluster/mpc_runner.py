@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.latency import LatencyModel, make_latency
+from repro.cluster.membership import ClusterMembership
 from repro.cluster.messages import (
     PROVISION_ROUND,
     SHUTDOWN_ROUND,
@@ -123,6 +124,14 @@ class MPCClusterRunner:
             self.round_timeout_s = 300.0   # real silence must be detectable
         self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
                                         now=self.scheduler.clock)
+        # BGW's fleet is a MembershipView too (DESIGN.md §13), but a FIXED
+        # one: N is baked into every reshare polynomial, so there are no
+        # spare evaluation points to join on and a permanent leave is
+        # terminal — the membership still owns the worker set so the
+        # scheduler never reads a frozen int
+        self.membership = ClusterMembership(range(cfg.N),
+                                            monitor=self.monitor)
+        self.scheduler.bind_membership(self.membership)
         self.w = self.state.w
         self.traces: dict[int, MPCRoundTrace] = {}
         self._encode = jax.jit(
@@ -152,7 +161,8 @@ class MPCClusterRunner:
                   "lx": self.cfg.lx, "lw": self.cfg.lw, "lc": self.cfg.lc,
                   "p": self.cfg.p}
         now = self.scheduler.clock
-        for w in range(self.cfg.N):
+        members = list(self.membership.view().members)
+        for w in members:
             tr.send(worker_endpoint(w),
                     EncodeShare(PROVISION_ROUND, w,
                                 {"protocol": "mpc", "cfg": cfg_kw,
@@ -160,13 +170,13 @@ class MPCClusterRunner:
                                  "cbar": mpc.poly_coeffs(self.cfg),
                                  "trace": bool(self.obs.enabled)}),
                     at=now)
-        await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
+        await_worker_acks(tr, lambda: self.scheduler.clock, set(members),
                           self.monitor, timeout_s)
 
     def shutdown_workers(self) -> None:
         assert self.distributed
         now = self.scheduler.clock
-        for w in range(self.cfg.N):
+        for w in self.membership.view().members:
             self.scheduler.transport.send(
                 worker_endpoint(w), EncodeShare(SHUTDOWN_ROUND, w), at=now)
 

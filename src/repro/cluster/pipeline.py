@@ -52,6 +52,12 @@ class RoundContext:
                                      # round t+1's batch indices, shipped to
                                      # workers so they pre-slice while idle
                                      # (drawn here, off the critical path)
+    epoch: int = 0                   # membership epoch the context was built
+                                     # under; a fence that bumped the epoch
+                                     # invalidates only the PLAN (its
+                                     # predicted responders referenced the
+                                     # old fleet) — kq/masks/batch are pure
+                                     # functions of (kloop, t), epoch-free
 
 
 class RoundPrefetcher:

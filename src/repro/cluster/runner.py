@@ -40,16 +40,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.latency import LatencyModel
+from repro.cluster.master_group import MasterGroup
+from repro.cluster.membership import ClusterMembership, MembershipView
 from repro.cluster.messages import (
     MASTER,
     PROVISION_ROUND,
     SHUTDOWN_ROUND,
     EncodeShare,
+    Epoch,
     Heartbeat,
+    Join,
     worker_endpoint,
 )
 from repro.cluster.pipeline import PIPELINE_MODES, RoundContext, RoundPrefetcher
 from repro.cluster.scheduler import ClusterDecodeError, EventScheduler, RoundTrace
+from repro.cluster.wire import WIRE_V2
 from repro.cluster.transport import Transport
 from repro.core.protocol import decode, engine
 from repro.core.protocol.config import CPMLConfig
@@ -73,26 +78,39 @@ def wait_summary(a) -> dict[str, float]:
             "p95": float(np.percentile(a, 95)), "total": float(a.sum())}
 
 
-def await_worker_acks(transport: Transport, clock_fn, n_workers: int,
-                      monitor, timeout_s: float) -> None:
-    """Block until every worker process has acked provisioning with a
+def await_worker_acks(transport: Transport, clock_fn, expect,
+                      monitor, timeout_s: float,
+                      control: list | None = None) -> None:
+    """Block until every worker in ``expect`` has acked provisioning with a
     Heartbeat (shared by ClusterRunner and MPCClusterRunner, so both
-    protocols start their wall clocks after worker warmup)."""
+    protocols start their wall clocks after worker warmup).
+
+    ``expect`` is an int (the historical contract: workers 0..n-1) or an
+    explicit set of slots — elastic provisioning waits on exactly the
+    subset it just shipped shares to, e.g. a single mid-run joiner.
+    ``control`` (when given) collects JOIN frames drained off the master
+    inbox here instead of dropping them — a late joiner may announce itself
+    while the initial fleet is still acking.
+    """
+    expect = (set(range(expect)) if isinstance(expect, int)
+              else {int(w) for w in expect})
     deadline = clock_fn() + timeout_s
     acked: set[int] = set()
-    while len(acked) < n_workers:
+    while not expect <= acked:
         nxt = transport.next_delivery(MASTER)
         if nxt is None:
             if clock_fn() >= deadline:
                 raise TimeoutError(
                     f"workers never acked provisioning: "
-                    f"{sorted(set(range(n_workers)) - acked)}")
+                    f"{sorted(expect - acked)}")
             continue
         for at, msg in transport.recv(MASTER, nxt):
             if isinstance(msg, Heartbeat):
                 if monitor is not None:
                     monitor.heartbeat(msg.worker, now=at)
                 acked.add(msg.worker)
+            elif isinstance(msg, Join) and control is not None:
+                control.append((at, msg))
 
 
 @dataclasses.dataclass
@@ -214,7 +232,10 @@ class ClusterRunner:
                  encode_cost_s: float = 0.0,
                  decode_cost_s: float = 0.0,
                  recorder=None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 spares: int = 0,
+                 masters: int = 1,
+                 join_schedule: dict[int, int] | None = None):
         # heartbeat_timeout_s defaults to inf: in the simulation, true
         # deaths surface as round starvation (-> mark_failed) and slowness
         # as the EWMA straggler stat; a finite timeout models a gossip-style
@@ -222,9 +243,32 @@ class ClusterRunner:
         # single long round makes healthy-but-quiet workers look dead.
         assert pipeline in PIPELINE_MODES, (
             f"pipeline={pipeline!r} not in {PIPELINE_MODES}")
+        # Elastic membership (DESIGN.md §13): ``spares`` extra Lagrange
+        # evaluation points are encoded up front — the coding scheme's
+        # points are consecutive, so extending N to N+spares leaves shares
+        # 0..N-1 and every decode over them bit-identical to the fixed-N
+        # scheme.  A spare slot carries no live worker until a JOIN (late
+        # Join frame over the wire, or ``join_schedule={slot: round}`` in
+        # simulation) or a LEAVE replacement admits it.  spares == 0 and no
+        # join schedule keeps today's fixed-fleet behavior exactly.
+        self.base_n = cfg.N
+        if spares:
+            cfg = dataclasses.replace(cfg, N=cfg.N + spares)
         self.cfg = cfg
+        self.elastic = spares > 0 or bool(join_schedule)
+        # Sharded master group (DESIGN.md §13): S > 1 splits the master's
+        # per-round encode + streaming-decode over contiguous d-slices.
+        # Bit-identical (randomness at full shape); used on the distributed
+        # paths — the in-process simulation traces the whole round as one
+        # jitted function, where sharding the master has nothing to shard.
+        self.masters = int(masters)
+        self.master_group = (MasterGroup(cfg, self.masters)
+                             if self.masters > 1 else None)
         ksetup, self.kloop = jax.random.split(key)
-        self.state = engine.setup(cfg, ksetup, x, y)
+        self.state = engine.setup(
+            cfg, ksetup, x, y,
+            dataset_encoder=(self.master_group.encode_dataset
+                             if self.master_group is not None else None))
         self.eta = (engine.lipschitz_eta(self.state.xq_real)
                     if eta is None else eta)
         self._round = engine.round_fn(cfg, self.state, self.eta)
@@ -258,9 +302,19 @@ class ClusterRunner:
         if self.distributed and math.isinf(round_timeout_s):
             # a real cluster must be able to give up on silence
             self.round_timeout_s = 300.0
-        self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
+        self.monitor = HeartbeatMonitor(self.base_n,
+                                        timeout_s=heartbeat_timeout_s,
                                         straggler_factor=straggler_factor,
                                         now=self.scheduler.clock)
+        # membership starts as the base fleet; the spare slots (base_n..N-1)
+        # hold pre-encoded shares awaiting admission.  The scheduler reads
+        # its default worker set off the live membership from here on.
+        self.membership = ClusterMembership(
+            range(self.base_n), monitor=self.monitor,
+            spares=range(self.base_n, cfg.N))
+        self.scheduler.bind_membership(self.membership)
+        for w, at_round in (join_schedule or {}).items():
+            self.membership.schedule_join(w, at_round)
         self.w2 = engine._w_internal(cfg, self.state.w)
         self.records: dict[int, RoundRecord] = {}
         self.traces: dict[int, RoundTrace] = {}
@@ -308,6 +362,14 @@ class ClusterRunner:
             "encode + wait + decode, per round")
         self._m_alive = m.gauge(
             "cpml_workers_alive", "dispatchable workers at last round")
+        self._m_epoch = m.gauge(
+            "cpml_epoch", "membership epoch at the last round fence")
+        self._m_members = m.gauge(
+            "cpml_members_alive", "member slots at the last round fence")
+        self._m_joins = m.counter(
+            "cpml_member_joins_total", "workers admitted mid-run")
+        self._m_leaves = m.counter(
+            "cpml_member_leaves_total", "members permanently retired")
         self._m_warm = m.gauge(
             "cpml_xla_warm_compile_seconds",
             "max worker-reported XLA warm-compile wall (needs tracing + v2 "
@@ -392,9 +454,12 @@ class ClusterRunner:
                     cfg, self.kloop, iters, self.state.mk, t + 1))
         plan = (decode.prefix_decode_plan(cfg, self._predicted_order())
                 if self.streaming else None)
+        # racy epoch read (prefetch thread): a transition between build and
+        # use is caught at the fence, which invalidates only the plan
         return RoundContext(t=t, kq=kq,
                             mask_shares=np.asarray(mask_shares),
-                            batch_idx=bidx, plan=plan, next_batch=next_np)
+                            batch_idx=bidx, plan=plan, next_batch=next_np,
+                            epoch=self.membership.epoch)
 
     def _pipeline_scope(self, iters: int):
         """Context manager owning the prefetch thread for one training run."""
@@ -432,17 +497,25 @@ class ClusterRunner:
     # Distributed-mode provisioning: one-time worker state over the wire
     # ------------------------------------------------------------------
 
-    def provision(self, timeout_s: float = 60.0) -> None:
+    def provision(self, workers=None, timeout_s: float = 60.0) -> None:
         """Ship each worker its coded dataset share + static round context.
 
         Sent as an EncodeShare with ``round == PROVISION_ROUND``; the worker
         acks with a Heartbeat once its share is loaded, and rounds only
         start after every dispatched worker has acked (so round-0 timing
         does not absorb worker warmup).
+
+        ``workers=None`` provisions the current members (the historical
+        whole-fleet call); an explicit subset provisions exactly those
+        slots — a mid-run joiner picking up its pre-encoded spare share, or
+        a resilient-restore respawn reprovisioning one dead slot.
         """
         assert self.distributed, "provision() is for real transports only"
+        if workers is None:
+            workers = list(self.membership.view().members)
+        workers = [int(w) for w in workers]
         wall0 = _time.perf_counter()
-        with self.obs.span("provision", workers=self.cfg.N):
+        with self.obs.span("provision", workers=len(workers)):
             tr = self.scheduler.transport
             x_shares = np.asarray(self.state.x_shares)
             cbar = engine.poly_coeffs(self.cfg)
@@ -451,7 +524,7 @@ class ClusterRunner:
                       "lw": self.cfg.lw, "lc": self.cfg.lc, "p": self.cfg.p,
                       "batch_rows": self.cfg.batch_rows}
             now = self.scheduler.clock
-            for w in range(self.cfg.N):
+            for w in workers:
                 tr.send(worker_endpoint(w),
                         EncodeShare(PROVISION_ROUND, w,
                                     {"cfg": cfg_kw, "x_share": x_shares[w],
@@ -461,8 +534,9 @@ class ClusterRunner:
                                      # only; a v1 peer drops the field)
                                      "trace": bool(self.obs.enabled)}),
                         at=now)
-            await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
-                              self.monitor, timeout_s)
+            await_worker_acks(tr, lambda: self.scheduler.clock, set(workers),
+                              self.monitor, timeout_s,
+                              control=self.scheduler.control_inbox)
         self.metrics.gauge(
             "cpml_provision_seconds",
             "wall seconds from provisioning dispatch to the last worker "
@@ -470,12 +544,100 @@ class ClusterRunner:
                 _time.perf_counter() - wall0)
 
     def shutdown_workers(self) -> None:
-        """Ask every worker process to exit its serve loop."""
+        """Ask every live member's process to exit its serve loop (departed
+        slots' processes are already dead; never-admitted spares have no
+        process to stop)."""
         assert self.distributed
         now = self.scheduler.clock
-        for w in range(self.cfg.N):
+        for w in self.membership.view().members:
             self.scheduler.transport.send(
                 worker_endpoint(w), EncodeShare(SHUTDOWN_ROUND, w), at=now)
+
+    # ------------------------------------------------------------------
+    # Elastic membership: the per-round epoch fence (DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def _broadcast_epoch(self, view: MembershipView, t: int) -> None:
+        """Fan the new epoch out to the live members (informational — the
+        fence is master-side).  Epoch is a wire v2 frame; v1 peers are
+        skipped so their byte stream stays bit-identical to fixed-fleet."""
+        if not self.distributed:
+            return
+        tr = self.scheduler.transport
+        peer_version = getattr(tr, "peer_version", None)
+        now = self.scheduler.clock
+        for w in view.members:
+            ep = worker_endpoint(w)
+            if peer_version is not None and peer_version(ep) < WIRE_V2:
+                continue
+            tr.send(ep, Epoch(view.epoch, view.members, t), at=now)
+
+    def _admit(self, worker: int, t: int) -> None:
+        """Admit one slot at the fence: distributed mode first provisions
+        the joiner's pre-encoded spare share and waits for its ack, so a
+        member is never dispatched before it can answer."""
+        if self.distributed:
+            t0 = self.scheduler.clock
+            self.provision(workers=[worker], timeout_s=60.0)
+            # the ack barrier (it includes the joiner's XLA warmup) stalls
+            # round dispatch — credit the live fleet, whose only heartbeat
+            # source is the per-round acks the stall suspended
+            self.monitor.credit_stall(self.scheduler.clock - t0,
+                                      now=self.scheduler.clock)
+        now = self.scheduler.clock
+        self.membership.admit(worker, t, now=now)
+        self._m_joins.inc()
+        self.obs.instant("member_join", round=t, worker=int(worker),
+                         epoch=self.membership.epoch)
+
+    def _membership_fence(self, t: int) -> MembershipView:
+        """The round fence: apply every due membership transition, then
+        snapshot.  Round t's dispatch set, decode matrix and DecodePlan all
+        derive from the ONE view returned here — a transition can never mix
+        two fleets inside a round.  Non-elastic runs take the no-transition
+        fast path and keep the historical per-round speculative exclusion
+        semantics bit-identically."""
+        if self.elastic:
+            now = self.scheduler.clock
+            # JOIN requests drained off the wire (socket: late HELLO+Join)
+            for _, msg in self.scheduler.control_inbox:
+                self.membership.schedule_join(msg.worker, msg.at_round)
+            self.scheduler.control_inbox.clear()
+            span = None
+            pre_epoch = self.membership.epoch
+            # LEAVE: a member the failure detector declared dead is retired
+            # for good (not re-excluded every round); in simulation a spare
+            # immediately replaces it (the scheduler enacts the new slot) —
+            # on a real transport replacements arrive as JOINs from actual
+            # late worker processes.
+            for w in list(self.membership.view().members):
+                if w in self.monitor.workers and self.monitor.is_dead(
+                        w, now=now):
+                    if span is None:
+                        span = self.obs.begin("membership_transition",
+                                              round=t)
+                    self.membership.leave(w, t, now=now)
+                    self._m_leaves.inc()
+                    self.obs.instant("member_leave", round=t, worker=int(w),
+                                     epoch=self.membership.epoch)
+                    if not self.distributed:
+                        spare = self.membership.take_spare()
+                        if spare is not None:
+                            self._admit(spare, t)
+            for w in self.membership.due_joins(t):
+                if span is None:
+                    span = self.obs.begin("membership_transition", round=t)
+                self._admit(w, t)
+            view = self.membership.view()
+            if view.epoch != pre_epoch:
+                self._broadcast_epoch(view, t)
+            if span is not None:
+                self.obs.end(span)
+        else:
+            view = self.membership.view()
+        self._m_epoch.set(view.epoch)
+        self._m_members.set(len(view))
+        return view
 
     # ------------------------------------------------------------------
     # Dispatch-set policy: monitor-alive workers, minus known stragglers
@@ -488,11 +650,20 @@ class ClusterRunner:
              if not self.monitor.is_dead(i, now=now)],
             dtype=np.int64)
 
-    def dispatch_set(self) -> np.ndarray:
+    def dispatch_set(self, view: MembershipView | None = None) -> np.ndarray:
         now = self.scheduler.clock
         alive = self._alive(now)
+        if view is not None:
+            # epoch fence: only this round's membership snapshot dispatches
+            # (the monitor tracks members exactly, so this is a no-op guard
+            # against a transition racing between fence and dispatch)
+            alive = np.asarray([w for w in alive if w in view],
+                               dtype=np.int64)
         if self.exclude_stragglers:
             fast = self.monitor.survivors(now=now)
+            if view is not None:
+                fast = np.asarray([w for w in fast if w in view],
+                                  dtype=np.int64)
             # STRICTLY more than threshold: speculative exclusion must leave
             # slack, because the fast set can still contain an undetected
             # dead worker — dispatching exactly `threshold` workers means a
@@ -528,13 +699,24 @@ class ClusterRunner:
     def _step_round_inner(self, t: int, iters: int, replayed: bool = False
                           ) -> RoundTrace:
         cfg = self.cfg
-        workers = self.dispatch_set()
+        view = self._membership_fence(t)
+        workers = self.dispatch_set(view)
         if len(workers) < cfg.threshold:
             raise ClusterDecodeError(
                 f"round {t}: only {len(workers)} dispatchable workers < "
                 f"recovery threshold {cfg.threshold}")
         ctx = (self._prefetcher.get(t)
                if self._prefetcher is not None else None)
+        if ctx is not None and ctx.epoch != view.epoch:
+            # the context was prefetched under an older fleet: only its
+            # DecodePlan referenced that fleet (predicted responders) — the
+            # key split, masks and batch are pure functions of (kloop, t)
+            # and stay valid.  Drop the plan; the decode falls back to the
+            # observed-order path (a performance miss, never a wrong decode)
+            ctx.plan = None
+            ctx.epoch = view.epoch
+            self.obs.instant("prefetch_epoch_invalidated", round=t,
+                             epoch=view.epoch)
         key_t = None if ctx is not None else engine.round_key(self.kloop, t)
         # the subset the streaming decode would fold against this round
         # (ctx.plan when prefetched — possibly one round staler — else the
@@ -563,7 +745,15 @@ class ClusterRunner:
             # receives is bit-identical to the one the in-process round
             # would have traced from the same key.  With a prefetched ctx
             # only the W-dependent half runs here (DESIGN.md §9).
-            if ctx is not None:
+            if self.master_group is not None:
+                # sharded masters: each of the S masters encodes its own
+                # contiguous d-slice (bit-identical: randomness full-shape)
+                w_shares = (self.master_group.encode_round_shares_split(
+                                ctx.kq, ctx.mask_shares, self.w2)
+                            if ctx is not None else
+                            self.master_group.encode_round_shares(
+                                key_t, self.w2))       # (N, d, c, r)
+            elif ctx is not None:
                 w_shares = np.asarray(engine.encode_round_shares_split(
                     cfg, ctx.kq, ctx.mask_shares, self.w2))  # (N, d, c, r)
             else:
@@ -583,10 +773,13 @@ class ClusterRunner:
         decoder = None
         on_result = None
         if self.streaming and self.distributed:
-            plan = (ctx.plan if ctx is not None
+            plan = (ctx.plan if ctx is not None and ctx.plan is not None
                     else decode.prefix_decode_plan(
                         cfg, self._predicted_order()))
-            decoder = decode.StreamingDecoder(cfg, plan)
+            decoder = (self.master_group.make_decoder(plan,
+                                                      self._w_shape[0])
+                       if self.master_group is not None
+                       else decode.StreamingDecoder(cfg, plan))
 
             def on_result(w, payload, _d=decoder):
                 self._m_folds.inc()
@@ -690,9 +883,18 @@ class ClusterRunner:
         return engine._w_public(self.cfg, self.w2)
 
     def run_resilient(self, iters: int, ckpt_manager,
-                      checkpoint_every: int = 5, max_retries: int = 3):
+                      checkpoint_every: int = 5, max_retries: int = 3,
+                      respawn: Callable[[int, int], None] | None = None):
         """Checkpointed run: a starved round restores the last checkpoint,
-        reprovisions dead workers, and replays."""
+        reprovisions dead workers, and replays.
+
+        ``respawn(worker, step)`` is the real-transport replacement hook:
+        called for each dead slot after a restore, it must start a fresh
+        worker process for that slot (the caller owns process management);
+        the runner then reprovisions the slot over the wire and waits for
+        its ack before replaying.  In simulation the latency model's
+        ``revive`` plays the same role and ``respawn`` is unused.
+        """
         self._reset()
         replaying = {"flag": False}
 
@@ -703,12 +905,23 @@ class ClusterRunner:
 
         def on_restore(step):
             replaying["flag"] = True
-            now = self.scheduler.clock
-            for i, ws in self.monitor.workers.items():
+            t0 = self.scheduler.clock
+            for i, ws in list(self.monitor.workers.items()):
                 if not ws.alive:
                     if self.latency is not None:
                         self.latency.revive(i, at_round=step)
-                    self.monitor.revive(i, now=now)
+                    elif respawn is not None:
+                        # real transport: spawn a fresh process for the dead
+                        # slot, re-ship its share, and only revive the slot
+                        # once the new process acked provisioning
+                        respawn(i, step)
+                        self.provision(workers=[i], timeout_s=60.0)
+                    self.monitor.revive(i, now=self.scheduler.clock)
+            # respawn + reprovision blocked dispatch; credit the healthy
+            # fleet the stall so the replay's first fence doesn't read
+            # their barrier-long silence as death
+            self.monitor.credit_stall(self.scheduler.clock - t0,
+                                      now=self.scheduler.clock)
 
         loop = ResilientLoop(ckpt_manager, checkpoint_every=checkpoint_every,
                              max_retries=max_retries, on_restore=on_restore)
@@ -775,4 +988,16 @@ class ClusterRunner:
             # and heartbeats that landed between rounds
             stats["wire_totals"] = {k: float(v)
                                     for k, v in wire_totals().items()}
+        # elastic membership summary (BENCH_cluster.json rides these):
+        # epoch 0 / joins 0 / leaves 0 on a fixed-membership run
+        trans = self.membership.transitions
+        stats["membership"] = {
+            "epoch": float(self.membership.epoch),
+            "members": float(len(self.membership)),
+            "spares_left": float(len(self.membership.spares)),
+            "joins": float(sum(tr.kind == "join" for tr in trans)),
+            "leaves": float(sum(tr.kind == "leave" for tr in trans)),
+        }
+        if self.master_group is not None:
+            stats["masters"] = self.master_group.group_stats()
         return stats

@@ -53,6 +53,7 @@ from repro.cluster.messages import (
     CombineResult,
     EncodeShare,
     Heartbeat,
+    Join,
     SubShare,
     WorkerResult,
     worker_endpoint,
@@ -200,12 +201,25 @@ class MPCRoundTrace:
 
 
 class EventScheduler:
-    def __init__(self, n_workers: int, latency: LatencyModel | None = None,
+    def __init__(self, n_workers, latency: LatencyModel | None = None,
                  transport: Transport | None = None,
                  heartbeat_delay_s: float = 1e-3,
                  master_overhead_s: float = 0.0,
                  recorder=None):
-        self.n = n_workers
+        # ``n_workers`` is an int (fixed fleet, the historical contract) or
+        # a cluster.membership.ClusterMembership — then the fleet is ELASTIC
+        # and every default worker set is read off the live membership at
+        # dispatch time (the runner fences on a view() snapshot per round).
+        if isinstance(n_workers, (int, np.integer)):
+            self.membership = None
+            self._n = int(n_workers)
+        else:
+            self.membership = n_workers
+            self._n = None
+        # JOIN (and any future control traffic) arrives on the same master
+        # inbox as results; the collect loop stashes it here instead of
+        # dropping it, and the runner drains the stash at each round fence.
+        self.control_inbox: list[tuple[float, Any]] = []
         self.latency = latency
         self.transport = transport or InProcessTransport()
         self.heartbeat_delay_s = heartbeat_delay_s
@@ -223,6 +237,27 @@ class EventScheduler:
                 "the in-process simulation needs a latency model to enact "
                 "its workers")
             self.time = SimClock()
+
+    def bind_membership(self, membership) -> None:
+        """Switch an int-constructed scheduler onto a live membership (the
+        runner builds its ClusterMembership after the scheduler, because
+        the membership needs the monitor and the monitor needs this
+        scheduler's clock)."""
+        self.membership = membership
+        self._n = None
+
+    @property
+    def n(self) -> int:
+        """Current fleet size (elastic: tracks the live membership)."""
+        return self._n if self.membership is None else len(self.membership)
+
+    def default_workers(self) -> np.ndarray:
+        """The default dispatch set: all slots (fixed) or the current
+        members (elastic).  Elastic callers normally pass an explicit set
+        derived from their round's epoch snapshot instead."""
+        if self.membership is None:
+            return np.arange(self._n)
+        return np.asarray(self.membership.view().members, dtype=np.int64)
 
     @property
     def clock(self) -> float:
@@ -242,6 +277,11 @@ class EventScheduler:
             if isinstance(msg, Heartbeat):
                 if monitor is not None:
                     monitor.heartbeat(msg.worker, now=at)
+            elif isinstance(msg, Join):
+                # elastic membership: a late worker's JOIN rides the same
+                # master inbox as results; stash it for the runner's next
+                # round fence (dropping it would strand the joiner forever)
+                self.control_inbox.append((at, msg))
             elif isinstance(msg, (WorkerResult, CombineResult)):
                 if monitor is not None:
                     # late results of past rounds still count as liveness +
@@ -400,7 +440,8 @@ class EventScheduler:
         arrival of THIS round, in arrival order — the streaming decoder's
         fold point.
         """
-        workers = np.arange(self.n) if workers is None else np.asarray(workers)
+        workers = (self.default_workers() if workers is None
+                   else np.asarray(workers))
         real = self.transport.real
         self._check_exitable(real, collect_all, timeout_s, monitor)
         if pre_s:
@@ -487,7 +528,8 @@ class EventScheduler:
         serve mode) and the reshare traffic relays through the master's
         transport; only dispatch + final collect are enacted here.
         """
-        workers = np.arange(self.n) if workers is None else np.asarray(workers)
+        workers = (self.default_workers() if workers is None
+                   else np.asarray(workers))
         t0 = self.time.now()
         dispatched = {int(w) for w in workers}
         barriers: list[float] = []

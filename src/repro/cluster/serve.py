@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.latency import LatencyModel
+from repro.cluster.membership import ClusterMembership
 from repro.cluster.messages import (
     PROVISION_ROUND, SHUTDOWN_ROUND, EncodeShare, Prediction, Query,
     worker_endpoint)
@@ -213,6 +214,14 @@ class PredictionServer:
         self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
                                         straggler_factor=straggler_factor,
                                         now=self.scheduler.clock)
+        # the serving fleet is a MembershipView like training's (DESIGN.md
+        # §13) — fixed here (model shares are provisioned ONCE and reused
+        # for every flush, so an elastic join would need a share ship, not
+        # just an epoch bump), but the scheduler reads its worker set off
+        # the membership rather than a frozen int either way
+        self.membership = ClusterMembership(range(cfg.N),
+                                            monitor=self.monitor)
+        self.scheduler.bind_membership(self.membership)
         self.policy = BatchingPolicy(cfg.max_batch, cfg.max_wait_s)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._init_metrics()
@@ -271,10 +280,11 @@ class PredictionServer:
         block until all N ack (worker warm-compiles its fixed-shape field
         matmul before acking, so no flush ever absorbs an XLA compile)."""
         assert self.distributed, "provision() is for real transports only"
-        with self.obs.span("provision", workers=self.cfg.N):
+        members = list(self.membership.view().members)
+        with self.obs.span("provision", workers=len(members)):
             tr = self.scheduler.transport
             now = self.scheduler.clock
-            for w in range(self.cfg.N):
+            for w in members:
                 tr.send(worker_endpoint(w),
                         EncodeShare(PROVISION_ROUND, w,
                                     {"protocol": "serve",
@@ -283,13 +293,13 @@ class PredictionServer:
                                      "rows": self.cfg.rows_per_part,
                                      "trace": bool(self.obs.enabled)}),
                         at=now)
-            await_worker_acks(tr, lambda: self.scheduler.clock, self.cfg.N,
+            await_worker_acks(tr, lambda: self.scheduler.clock, set(members),
                               self.monitor, timeout_s)
 
     def shutdown_workers(self) -> None:
         assert self.distributed
         now = self.scheduler.clock
-        for w in range(self.cfg.N):
+        for w in self.membership.view().members:
             self.scheduler.transport.send(
                 worker_endpoint(w), EncodeShare(SHUTDOWN_ROUND, w), at=now)
 

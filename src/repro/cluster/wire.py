@@ -67,7 +67,9 @@ from repro.cluster.messages import (
     ROUND_PAYLOAD_KEYS,
     CombineResult,
     EncodeShare,
+    Epoch,
     Heartbeat,
+    Join,
     Prediction,
     Query,
     SubShare,
@@ -95,6 +97,8 @@ _FRAME_WORKER_RESULT_T = 0x1A    # v2: WorkerResult + piggy-backed TRACE
 _FRAME_COMBINE_RESULT_T = 0x1B   # v2: CombineResult + piggy-backed TRACE
 _FRAME_QUERY = 0x1C              # serving plane: client -> master request
 _FRAME_PREDICTION = 0x1D         # serving plane: master -> client answer
+_FRAME_JOIN = 0x1E               # v2: elastic membership join request
+_FRAME_EPOCH = 0x1F              # v2: membership epoch fan-out
 
 # value tags
 _T_NONE = 0x00
@@ -431,6 +435,26 @@ def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
         _enc_value(msg.client, out)
         _enc_value(msg.y, out, version)
         _enc_value(msg.latency_s, out)
+    elif isinstance(msg, Join):
+        # elastic membership is a v2 protocol: a v1 fleet has no JOIN frame
+        # (fixed-fleet semantics stay bit-identical), so serializing one at
+        # v1 is a caller bug — fail loud instead of inventing a downgrade
+        if version < WIRE_V2:
+            raise WireError("Join is a wire v2 frame; a v1 fleet has no "
+                            "elastic membership")
+        out.append(bytes([_FRAME_JOIN]))
+        _enc_value(msg.worker, out)
+        _enc_value(msg.at_round, out)
+        _enc_value(msg.sent_at, out)
+    elif isinstance(msg, Epoch):
+        if version < WIRE_V2:
+            raise WireError("Epoch is a wire v2 frame; the master must skip "
+                            "v1 peers when broadcasting membership epochs")
+        out.append(bytes([_FRAME_EPOCH]))
+        _enc_value(msg.epoch, out)
+        _enc_value(None if msg.members is None
+                   else tuple(int(w) for w in msg.members), out)
+        _enc_value(msg.round, out)
     elif isinstance(msg, Heartbeat):
         out.append(bytes([_FRAME_HEARTBEAT]))
         _enc_value(msg.worker, out)
@@ -533,6 +557,18 @@ def _decode_body(body, version: int = WIRE_VERSION) -> Any:
     elif tag == _FRAME_PREDICTION:
         msg = Prediction(qid=_dec_value(r), client=_dec_value(r),
                          y=_dec_value(r), latency_s=_dec_value(r))
+    elif tag == _FRAME_JOIN:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 JOIN on a v1 stream)")
+        msg = Join(worker=_dec_value(r), at_round=_dec_value(r),
+                   sent_at=_dec_value(r))
+    elif tag == _FRAME_EPOCH:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 EPOCH on a v1 stream)")
+        msg = Epoch(epoch=_dec_value(r), members=_dec_value(r),
+                    round=_dec_value(r))
     elif tag == _FRAME_HEARTBEAT:
         msg = Heartbeat(worker=_dec_value(r), sent_at=_dec_value(r))
     elif tag == _FRAME_FORWARD:

@@ -57,13 +57,18 @@ def _targets(cfg: CPMLConfig, y: jax.Array) -> jax.Array:
 
 
 def setup(cfg: CPMLConfig, key: jax.Array, x: jax.Array, y: jax.Array,
-          w0: jax.Array | None = None) -> CPMLState:
+          w0: jax.Array | None = None, dataset_encoder=None) -> CPMLState:
     """Encode the dataset + precompute all master-side cleartext context.
 
     y: (m,) float 0/1 labels when cfg.c == 1, integer class ids otherwise.
+    ``dataset_encoder`` (same signature as encode.encode_dataset) lets a
+    sharded master group own the encode (cluster/master_group.py) — it must
+    be bit-identical to the default, which the group guarantees by drawing
+    all randomness at full shape.
     """
     kx, _ = jax.random.split(key)
-    x_shares, ctx = encode.encode_dataset(cfg, kx, x)
+    encoder = dataset_encoder or encode.encode_dataset
+    x_shares, ctx = encoder(cfg, kx, x)
     xq_real = quantize.dequantize(ctx["xq"], cfg.lx, cfg.p)
     m_padded = ctx["m_padded"]
     mk = m_padded // cfg.K

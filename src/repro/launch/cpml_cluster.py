@@ -8,6 +8,11 @@
     python -m repro.launch.cpml_cluster --transport socket --pipeline full
     python -m repro.launch.cpml_cluster --transport socket --kill-worker 5 \\
         --kill-at-round 4
+    python -m repro.launch.cpml_cluster --transport socket --masters 2 \\
+        --spares 1 --kill-worker 2 --kill-at-round 3 \\
+        --heartbeat-timeout 3 --join-at-round 5
+    python -m repro.launch.cpml_cluster --transport socket --resilient \\
+        --kill-worker 0 --kill-at-round 4
     python -m repro.launch.cpml_cluster --protocol mpc --latency lognormal
     python -m repro.launch.cpml_cluster --protocol mpc --transport socket \\
         --workers 5 --privacy 2 --straggle-worker 4
@@ -30,6 +35,14 @@ bit-identical to ``train_reference`` replaying the observed responder trace
 (DESIGN.md §7: the runtime layer changes when and where rounds execute,
 never what they compute).  ``--kill-worker`` crashes one worker mid-run to
 demo first-T decode riding through a real death.
+
+``--spares``, ``--join-at-round`` and ``--masters`` exercise the elastic
+membership + sharded-master plane (DESIGN.md §13): spare Lagrange
+evaluation points absorb mid-run JOINs and permanent LEAVE replacements
+without re-encoding the dataset, and a master group of S shards the
+per-round encode + streaming decode over contiguous d-slices.  Every
+variant stays bit-identical to ``train_reference`` over the observed
+responder trace.
 
 ``--protocol mpc`` runs the BGW baseline head-to-head over the SAME
 runtime: r+1 all-to-all reshare barriers per iteration (workers exchange
@@ -98,8 +111,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "(required for --latency dead; defaults to 120 "
                          "wall seconds for --transport socket)")
     ap.add_argument("--resilient", action="store_true",
-                    help="checkpoint/restore recovery on starved rounds")
+                    help="checkpoint/restore recovery on starved rounds "
+                         "(socket: a respawned replacement process is "
+                         "reprovisioned over the wire before the replay)")
     ap.add_argument("--checkpoint-every", type=int, default=5)
+    # elastic membership + sharded masters (DESIGN.md §13)
+    ap.add_argument("--masters", type=int, default=1,
+                    help="shard the master role over this many d-slices "
+                         "(DESIGN.md §13): each master of the group encodes "
+                         "and stream-decodes a contiguous 1/S slice of the "
+                         "model dimension — bit-identical to one master, "
+                         "1/S the per-master critical path at large d")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="pre-encode this many spare Lagrange evaluation "
+                         "points beyond N (DESIGN.md §13): the alphas are "
+                         "consecutive, so shares 0..N-1 are unchanged and "
+                         "spare slots absorb elastic JOINs without ever "
+                         "re-encoding the dataset")
+    ap.add_argument("--join-at-round", type=int, default=None,
+                    help="elastic JOIN demo: admit one extra worker at this "
+                         "round's fence (socket: spawns a real late-joiner "
+                         "process that announces itself with a JOIN frame; "
+                         "inprocess: a scheduled join); implies --spares 1")
     # socket-transport options
     ap.add_argument("--port", type=int, default=0,
                     help="master TCP port (0 = ephemeral)")
@@ -144,10 +177,42 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _worker_env() -> dict[str, str]:
+    """Environment for a spawned cpml_worker: this tree on PYTHONPATH,
+    CPU-pinned jax."""
+    src_root = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def spawn_worker(port: int, w: int, *, env: dict[str, str] | None = None,
+                 wire_version: int = 2, die_at_round: int | None = None,
+                 sleep_s: float | None = None,
+                 join_at_round: int | None = None) -> subprocess.Popen:
+    """Start one cpml_worker process for slot ``w`` against the master
+    listening on ``port``.  Also the resilient-restore respawn primitive:
+    a replacement for a dead slot is spawned exactly like the original."""
+    cmd = [sys.executable, "-m", "repro.launch.cpml_worker",
+           "--host", "127.0.0.1", "--port", str(port),
+           "--worker", str(w), "--wire", str(wire_version)]
+    if die_at_round is not None:
+        cmd += ["--die-at-round", str(die_at_round)]
+    if sleep_s is not None:
+        cmd += ["--sleep-s", str(sleep_s)]
+    if join_at_round is not None:
+        cmd += ["--join-at-round", str(join_at_round)]
+    return subprocess.Popen(cmd,
+                            env=env if env is not None else _worker_env())
+
+
 @contextlib.contextmanager
 def local_socket_cluster(n_workers: int, *, port: int = 0,
                          die_at_round: dict[int, int] | None = None,
                          sleep_s: dict[int, float] | None = None,
+                         join_at_round: dict[int, int] | None = None,
                          connect_timeout_s: float = 60.0,
                          poll_interval_s: float = 0.02,
                          wire_version: int = 2):
@@ -159,30 +224,37 @@ def local_socket_cluster(n_workers: int, *, port: int = 0,
     socket tests, so every consumer launches workers the same way.
     ``wire_version=1`` forces the legacy wire format on the master AND every
     spawned worker (the v1 baseline for byte-for-byte comparison).
+
+    ``join_at_round={slot: round}`` additionally spawns elastic late
+    joiners (DESIGN.md §13): each runs with ``--join-at-round`` and is NOT
+    provisioned with the base fleet — it announces a JOIN and waits for the
+    master's fence to admit it.  The yielded transport carries the spawned
+    process list as ``tr.procs`` so a resilient respawn hook can append
+    replacements and have the exit path reap them too.
     """
     from repro.cluster.socket_transport import SocketTransport
     from repro.cluster.messages import worker_endpoint
 
-    src_root = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), "..", ".."))
-    env = dict(os.environ)
-    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
-    env.setdefault("JAX_PLATFORMS", "cpu")
-
+    env = _worker_env()
     tr = SocketTransport.master(port=port, poll_interval_s=poll_interval_s,
                                 wire_version=wire_version)
     procs: list[subprocess.Popen] = []
+    tr.procs = procs
     try:
         for w in range(n_workers):
-            cmd = [sys.executable, "-m", "repro.launch.cpml_worker",
-                   "--host", "127.0.0.1", "--port", str(tr.port),
-                   "--worker", str(w), "--wire", str(wire_version)]
-            if die_at_round and w in die_at_round:
-                cmd += ["--die-at-round", str(die_at_round[w])]
-            if sleep_s and w in sleep_s:
-                cmd += ["--sleep-s", str(sleep_s[w])]
-            procs.append(subprocess.Popen(cmd, env=env))
-        tr.wait_for_endpoints([worker_endpoint(w) for w in range(n_workers)],
+            procs.append(spawn_worker(
+                tr.port, w, env=env, wire_version=wire_version,
+                die_at_round=(die_at_round or {}).get(w),
+                sleep_s=(sleep_s or {}).get(w)))
+        for w, at_round in (join_at_round or {}).items():
+            procs.append(spawn_worker(tr.port, w, env=env,
+                                      wire_version=wire_version,
+                                      join_at_round=at_round))
+        # joiners connect (and JOIN) right away too: waiting for their
+        # HELLO here makes the admission round deterministic for tests —
+        # admission itself still only happens at the master's fence
+        expect = [*range(n_workers), *(join_at_round or {})]
+        tr.wait_for_endpoints([worker_endpoint(w) for w in expect],
                               timeout_s=connect_timeout_s)
         yield tr
     finally:
@@ -239,23 +311,64 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
     timeout = args.round_timeout
     if math.isinf(timeout):
         timeout = 120.0         # real silence must be detectable
+    wv = int(args.wire[1:])
+    spares = args.spares
+    join = None
+    if args.join_at_round is not None:
+        spares = max(spares, 1)
+        join = {cfg.N: args.join_at_round}      # first spare slot
     with local_socket_cluster(cfg.N, port=args.port, die_at_round=die,
-                              sleep_s=sleep,
-                              wire_version=int(args.wire[1:])) as tr:
+                              sleep_s=sleep, join_at_round=join,
+                              wire_version=wv) as tr:
         runner = ClusterRunner(cfg, key, x, y, latency=None, transport=tr,
                                round_timeout_s=timeout,
                                heartbeat_timeout_s=args.heartbeat_timeout,
                                collect_all=args.collect_all,
                                pipeline=args.pipeline,
+                               spares=spares, masters=args.masters,
                                recorder=_recorder_for(args))
         runner.provision()
         t0 = time.monotonic()
-        w = runner.run(args.iters)
+        if args.resilient:
+            from repro.checkpoint.manager import CheckpointManager
+            from repro.cluster.messages import worker_endpoint
+            env = _worker_env()
+
+            def respawn(worker: int, step: int) -> None:
+                # a starved round's restore asks for a fresh process for
+                # each dead slot; the runner reprovisions it over the wire
+                # and waits for its ack before replaying
+                tr.procs.append(spawn_worker(tr.port, worker, env=env,
+                                             wire_version=wv))
+                tr.wait_for_endpoints([worker_endpoint(worker)],
+                                      timeout_s=60.0)
+
+            with tempfile.TemporaryDirectory() as ckdir:
+                mgr = CheckpointManager(ckdir, async_write=False)
+                w = runner.run_resilient(
+                    args.iters, mgr,
+                    checkpoint_every=args.checkpoint_every, respawn=respawn)
+        else:
+            w = runner.run(args.iters)
         wall_s = time.monotonic() - t0
         runner.shutdown_workers()
     print(f"socket run: {args.iters} rounds over TCP in {wall_s:.1f}s "
           f"({wall_s / args.iters * 1e3:.0f} ms/round)")
+    if args.resilient:
+        print(f"resilient socket run: {runner.restarts} restart(s), each "
+              f"respawning + reprovisioning the dead slot over TCP")
     stats = runner.wait_stats()
+    memb = stats["membership"]
+    if memb["joins"] or memb["leaves"]:
+        print(f"membership: epoch {int(memb['epoch'])}, "
+              f"{int(memb['members'])} member(s) "
+              f"({int(memb['joins'])} join(s), {int(memb['leaves'])} "
+              f"leave(s), {int(memb['spares_left'])} spare(s) left)")
+    if args.masters > 1:
+        g = stats["masters"]
+        print(f"sharded masters x{args.masters}: per-master critical path "
+              f"{g['critical_path_s']:.3f}s (group totals: encode "
+              f"{g['encode_total_s']:.3f}s, decode {g['decode_total_s']:.3f}s)")
     if "wire_totals" in stats:
         tot, per = stats["wire_totals"], stats["wire_tx_bytes"]
         print(f"wire [{args.wire}]: {tot['tx_bytes'] / 1e6:.2f} MB tx / "
@@ -271,7 +384,11 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
               f"{args.kill_at_round}: last decoded in round "
               f"{max(late) if late else '-'}; first-T decode rode through")
     if not args.no_verify:
-        w_ref, _ = protocol.train_reference(cfg, key, x, y, iters=args.iters,
+        # runner.cfg is the spare-extended config when elastic (the
+        # reference replays the SAME N+spares scheme over the observed
+        # responder trace — bit-identity is the elastic invariant)
+        w_ref, _ = protocol.train_reference(runner.cfg, key, x, y,
+                                            iters=args.iters,
                                             survivor_fn=runner.survivor_fn())
         same = bool((np.asarray(w) == np.asarray(w_ref)).all())
         print(f"bit-identical to train_reference over the observed "
@@ -309,6 +426,12 @@ def _run_mpc(args) -> int:
               "starves the reshare barrier and ends the run (that is the "
               "paper's point) — use --straggle-worker to slow one instead",
               file=sys.stderr)
+        return 2
+    if args.masters > 1 or args.spares or args.join_at_round is not None:
+        print("--masters/--spares/--join-at-round are coded-protocol "
+              "features: BGW bakes N into every reshare (no spare "
+              "evaluation points to join on) and its master only "
+              "reconstructs", file=sys.stderr)
         return 2
     cfg = mpc_baseline.MPCConfig(N=args.workers, T=args.privacy,
                                  r=args.degree)
@@ -412,9 +535,6 @@ def main(argv: list[str] | None = None) -> int:
 
     rc = 0
     if args.transport == "socket":
-        if args.resilient:
-            print("--resilient is inprocess-only for now", file=sys.stderr)
-            return 2
         runner, w, rc = _run_socket(args, cfg, key, x, y)
     else:
         kw = {}
@@ -428,11 +548,19 @@ def main(argv: list[str] | None = None) -> int:
         timeout = args.round_timeout
         if args.latency == "dead" and math.isinf(timeout):
             timeout = 60.0          # a dead worker must be detectable
+        spares = args.spares
+        join_schedule = None
+        if args.join_at_round is not None:
+            spares = max(spares, 1)
+            join_schedule = {cfg.N: args.join_at_round}  # first spare slot
         runner = ClusterRunner(cfg, key, x, y, latency,
                                round_timeout_s=timeout,
+                               heartbeat_timeout_s=args.heartbeat_timeout,
                                pipeline=args.pipeline,
                                encode_cost_s=args.encode_cost_s,
                                decode_cost_s=args.decode_cost_s,
+                               spares=spares, masters=args.masters,
+                               join_schedule=join_schedule,
                                recorder=_recorder_for(args))
         if args.resilient:
             from repro.checkpoint.manager import CheckpointManager
@@ -446,6 +574,13 @@ def main(argv: list[str] | None = None) -> int:
 
     _emit_obs(args, runner, cfg.threshold)
     stats = runner.wait_stats()
+    memb = stats["membership"]
+    if args.transport != "socket" and (memb["joins"] or memb["leaves"]):
+        # (the socket path already printed its membership line)
+        print(f"membership: epoch {int(memb['epoch'])}, "
+              f"{int(memb['members'])} member(s) "
+              f"({int(memb['joins'])} join(s), {int(memb['leaves'])} "
+              f"leave(s), {int(memb['spares_left'])} spare(s) left)")
     coded, allw = stats["coded_T"], stats["wait_all"]
     print(f"per-round wait  coded-T: mean {coded['mean']:.2f}s  "
           f"p50 {coded['p50']:.2f}s  p95 {coded['p95']:.2f}s")
@@ -490,6 +625,8 @@ def main(argv: list[str] | None = None) -> int:
         with open(args.json_out, "w") as f:
             json.dump(_json_finite({"config": {"N": cfg.N, "K": cfg.K, "T": cfg.T,
                                   "r": cfg.r, "c": cfg.c,
+                                  "masters": args.masters,
+                                  "spares": args.spares,
                                   "transport": args.transport,
                                   "latency": (args.latency
                                               if args.transport == "inprocess"

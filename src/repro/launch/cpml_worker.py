@@ -61,6 +61,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--die-at-round", type=int, default=None,
                     help="crash (exit silently) when this round's share "
                          "arrives — deterministic kill-a-worker injection")
+    ap.add_argument("--join-at-round", type=int, default=None,
+                    help="elastic JOIN (DESIGN.md §13): announce this "
+                         "worker as a late joiner for the given round fence "
+                         "right after HELLO; the master provisions its "
+                         "pre-encoded spare share and admits it at the "
+                         "first fence with t >= this round (wire v2 only)")
     ap.add_argument("--sleep-s", type=float, default=0.0,
                     help="sleep this long before every reply — a real "
                          "injected straggler")
@@ -80,7 +86,7 @@ def serve(args) -> int:
 
     from repro.cluster.messages import (
         MASTER, PROVISION_ROUND, SHUTDOWN_ROUND, CombineResult, EncodeShare,
-        Heartbeat, SubShare, WorkerResult, worker_endpoint)
+        Epoch, Heartbeat, Join, SubShare, WorkerResult, worker_endpoint)
     from repro.cluster.socket_transport import SocketTransport
     from repro.core import field, mpc_baseline as mpc
     from repro.core.protocol import compute
@@ -90,6 +96,25 @@ def serve(args) -> int:
     tr = SocketTransport.connect(args.host, args.port, me,
                                  timeout_s=args.connect_timeout,
                                  wire_version=args.wire)
+    if args.join_at_round is not None:
+        if args.wire < 2:
+            raise SystemExit(
+                f"{me}: --join-at-round needs wire v2 (a v1 fleet has no "
+                f"JOIN frame)")
+        # the negotiated version toward the master stays v1 until its
+        # HELLO2 ack lands — wait for the upgrade, or the JOIN frame (v2
+        # only) would be refused at serialization
+        deadline = time.monotonic() + args.connect_timeout
+        while tr.peer_version(MASTER) < 2:
+            if time.monotonic() > deadline:
+                raise SystemExit(
+                    f"{me}: master never acked HELLO2 — cannot announce "
+                    f"an elastic JOIN to a v1 master")
+            tr.next_delivery(me)
+        # late joiner: announce the slot + target fence; the master stashes
+        # the request and answers with this worker's PROVISION at the fence
+        tr.send(MASTER, Join(args.worker, args.join_at_round,
+                             time.monotonic()))
     pending: collections.deque = collections.deque()
     subshares: dict[tuple[int, int], dict[int, object]] = {}
     state: dict[str, object] = {"protocol": None}
@@ -102,6 +127,11 @@ def serve(args) -> int:
             if isinstance(msg, SubShare):
                 subshares.setdefault((msg.round, msg.phase),
                                      {})[msg.src] = msg.payload
+            elif isinstance(msg, Epoch):
+                # informational membership fan-out: remember the fleet
+                # generation (the master's round math never depends on this
+                # worker having seen it)
+                state["epoch"] = msg.epoch
             elif isinstance(msg, EncodeShare):
                 pending.append((at, msg))
 

@@ -47,10 +47,27 @@ class HeartbeatMonitor:
         self.timeout_s = timeout_s
         self.straggler_factor = straggler_factor
 
+    def add_worker(self, worker: int, now: float | None = None):
+        """Elastic JOIN (cluster/membership.py): start tracking a fresh
+        worker slot on a clean heartbeat/latency slate.  Idempotent — an
+        existing slot is re-initialized, which is exactly revive()."""
+        self.workers[worker] = WorkerState(time.time() if now is None else now)
+
+    def remove_worker(self, worker: int):
+        """Elastic LEAVE: stop tracking a permanently retired slot (the
+        membership layer never dispatches it again, so keeping its state
+        would only skew the straggler median)."""
+        self.workers.pop(worker, None)
+
     def heartbeat(self, worker: int, latency_s: float | None = None,
                   now: float | None = None):
         """latency_s=None is a liveness-only ack (leaves the EWMA alone);
-        pass a measured latency to update the straggler statistic."""
+        pass a measured latency to update the straggler statistic.  A
+        heartbeat from an unknown slot (a joiner's first ack racing its
+        admission, or a retired slot's last in-flight reply) is liveness
+        evidence for nobody and is dropped."""
+        if worker not in self.workers:
+            return
         w = self.workers[worker]
         w.last_heartbeat = time.time() if now is None else now
         if latency_s is not None:
@@ -58,7 +75,8 @@ class HeartbeatMonitor:
         w.alive = True
 
     def mark_failed(self, worker: int):
-        self.workers[worker].alive = False
+        if worker in self.workers:       # a retired slot is already gone
+            self.workers[worker].alive = False
 
     def is_dead(self, worker: int, now: float | None = None) -> bool:
         """The ONE liveness predicate: explicitly failed, or heartbeat-
@@ -72,6 +90,20 @@ class HeartbeatMonitor:
     def revive(self, worker: int, now: float | None = None):
         """Node replacement: fresh worker on a clean latency slate."""
         self.workers[worker] = WorkerState(time.time() if now is None else now)
+
+    def credit_stall(self, stall_s: float, now: float | None = None):
+        """Master-side blocking work (a joiner's provisioning barrier, a
+        checkpoint-restore respawn) stops round dispatch — and with it the
+        per-round acks that are this detector's heartbeat source.  Without
+        credit, a barrier longer than ``timeout_s`` makes the whole healthy
+        fleet look silent-dead.  Shift every worker that was live BEFORE
+        the stall forward by its duration; a worker already past the
+        timeout when the stall began stays dead."""
+        now = time.time() if now is None else now
+        before = now - stall_s
+        for w in self.workers.values():
+            if w.alive and (before - w.last_heartbeat) <= self.timeout_s:
+                w.last_heartbeat = min(now, w.last_heartbeat + stall_s)
 
     def survivors(self, now: float | None = None) -> np.ndarray:
         """Alive + non-straggling workers, fastest first."""

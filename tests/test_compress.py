@@ -1,0 +1,100 @@
+"""Gradient compression (optim/compress.py): round-trip + bit-width edges.
+
+The compressor reuses the paper's Eq. 8 stochastic quantizer on float
+gradients, so the properties under test are the same two that make the
+protocol's quantization sound: bounded per-element error (one level) and
+exact unbiasedness in expectation over the rounding key.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compress import (compress_tree, decompress_tree,
+                                  dequantize_grad, quantize_grad)
+
+
+def test_roundtrip_error_bounded_by_one_level():
+    g = jax.random.normal(jax.random.PRNGKey(0), (64, 7))
+    q, scale = quantize_grad(jax.random.PRNGKey(1), g, bits=8)
+    assert q.dtype == jnp.int32
+    out = dequantize_grad(q, scale)
+    # stochastic rounding moves each element at most one level
+    assert float(jnp.max(jnp.abs(out - g))) <= float(scale) * (1 + 1e-6)
+    # and the levels actually span the 8-bit signed range
+    assert int(jnp.max(jnp.abs(q))) <= 127
+
+
+def test_quantizer_is_unbiased_over_keys():
+    """E[dequantize(quantize(g))] == g: average over many rounding keys
+    converges to the input (the property Theorem 1's rate leans on)."""
+    g = jnp.asarray([[0.3, -0.77, 0.001], [1.0, -1.0, 0.25]])
+    acc = jnp.zeros_like(g)
+    n = 400
+    for i in range(n):
+        q, s = quantize_grad(jax.random.PRNGKey(i), g, bits=4)
+        acc = acc + dequantize_grad(q, s)
+    mean = acc / n
+    # SE of the mean is ~ scale/sqrt(12 n); 4 sigma keeps this deterministic
+    tol = 4 * float(s) / np.sqrt(12 * n)
+    assert float(jnp.max(jnp.abs(mean - g))) < tol
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_bits_edge_widths_roundtrip(bits):
+    """Every width down to 2 bits (levels=1: sign-magnitude ternary) must
+    quantize into range and reconstruct within one level."""
+    g = jax.random.normal(jax.random.PRNGKey(7), (33,))
+    q, scale = quantize_grad(jax.random.PRNGKey(8), g, bits=bits)
+    levels = (1 << (bits - 1)) - 1
+    assert int(jnp.max(jnp.abs(q))) <= levels
+    err = jnp.abs(dequantize_grad(q, scale) - g)
+    assert float(jnp.max(err)) <= float(scale) * (1 + 1e-6)
+    # fewer bits -> coarser scale, monotone in the width
+    assert float(scale) == pytest.approx(
+        float(jnp.max(jnp.abs(g))) / levels, rel=1e-5)
+
+
+def test_zero_gradient_roundtrips_to_zero():
+    """The 1e-12 max-val floor guards the all-zero gradient: no NaNs, no
+    spurious levels, exact zero back."""
+    g = jnp.zeros((5, 3))
+    q, scale = quantize_grad(jax.random.PRNGKey(0), g, bits=8)
+    assert np.isfinite(float(scale))
+    assert (np.asarray(q) == 0).all()
+    assert (np.asarray(dequantize_grad(q, scale)) == 0).all()
+
+
+def test_compress_tree_roundtrip_and_fresh_leaf_keys():
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (16, 4)),
+             "b": jax.random.normal(jax.random.PRNGKey(2), (4,)),
+             "nested": [jnp.ones((3,)), jnp.linspace(-1.0, 1.0, 9)]}
+    q_tree, scales = compress_tree(jax.random.PRNGKey(3), grads, bits=8)
+    out = decompress_tree(q_tree, scales)
+    flat_in, tdef_in = jax.tree.flatten(grads)
+    flat_out, tdef_out = jax.tree.flatten(out)
+    assert tdef_in == tdef_out                        # structure preserved
+    flat_s, _ = jax.tree.flatten(scales)
+    for gi, oi, si in zip(flat_in, flat_out, flat_s):
+        assert oi.shape == gi.shape
+        assert float(jnp.max(jnp.abs(oi - gi))) <= float(si) * (1 + 1e-6)
+    # identical leaves under DIFFERENT per-leaf keys may still round apart:
+    # the per-leaf key split is what de-correlates their rounding noise
+    leaf = jnp.concatenate([jnp.ones((1,)), jnp.full((999,), 0.37)])
+    same = [leaf, leaf]                 # 0.37 * 7 levels = 2.59: stochastic
+    q2, _ = compress_tree(jax.random.PRNGKey(4), same, bits=4)
+    assert not (np.asarray(q2[0]) == np.asarray(q2[1])).all()
+
+
+def test_compress_tree_matches_per_leaf_quantize():
+    """compress_tree is exactly quantize_grad per leaf with the split
+    keys — no hidden coupling across leaves."""
+    grads = [jax.random.normal(jax.random.PRNGKey(5), (8, 2)),
+             jax.random.normal(jax.random.PRNGKey(6), (3,))]
+    key = jax.random.PRNGKey(9)
+    q_tree, scales = compress_tree(key, grads, bits=8)
+    keys = jax.random.split(key, 2)
+    for i in range(2):
+        q_ref, s_ref = quantize_grad(keys[i], grads[i], bits=8)
+        assert (np.asarray(q_tree[i]) == np.asarray(q_ref)).all()
+        assert float(scales[i]) == float(s_ref)

@@ -1,0 +1,191 @@
+"""Sharded master group: bit-identity against the single-master path
+(DESIGN.md §13).
+
+The contract under test is the module's one rule: randomness at FULL
+shape, only the deterministic linear algebra per d-shard.  Every surface
+the runner swaps out — dataset encode, per-round weight encode (whole and
+split), streaming decode — must produce byte-identical field arrays for
+ANY group size, because a deployment choice of S must never change what
+the protocol computes.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cluster.master_group import (MasterGroup, ShardedStreamingDecoder,
+                                        d_shard_slices)
+from repro.core import field, protocol
+from repro.core.protocol import decode, encode, engine
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return protocol.CPMLConfig(N=8, K=2, T=1, r=1, c=3)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return synthetic.multiclass_mnist_like(jax.random.PRNGKey(0), m=96,
+                                           d=22, c=3)
+
+
+# ---------------------------------------------------------------------------
+# Shard placement
+# ---------------------------------------------------------------------------
+
+def test_d_shard_slices_cover_d_exactly_and_balanced(cfg):
+    for d, size in [(24, 2), (24, 3), (22, 2), (22, 3), (7, 4), (5, 1)]:
+        slices = d_shard_slices(cfg, d, size)
+        assert len(slices) == min(size, d)
+        covered = np.concatenate([np.arange(s.start, s.stop) for s in slices])
+        assert (covered == np.arange(d)).all()          # contiguous cover
+        widths = [s.stop - s.start for s in slices]
+        assert max(widths) - min(widths) <= 1           # within one column
+
+
+def test_d_shard_slices_clamp_degenerate_sizes(cfg):
+    assert d_shard_slices(cfg, 6, 0) == [slice(0, 6)]
+    assert len(d_shard_slices(cfg, 3, 10)) == 3         # never empty shards
+
+
+# ---------------------------------------------------------------------------
+# Encode surfaces: bit-identical to the unsharded references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("size", [1, 2, 3])
+def test_encode_dataset_bit_identical(cfg, data, size):
+    x, _ = data
+    key = jax.random.PRNGKey(11)
+    ref_shares, ref_ctx = encode.encode_dataset(cfg, key, x)
+    with MasterGroup(cfg, size) as grp:
+        shares, ctx = grp.encode_dataset(cfg, key, x)
+    assert (np.asarray(shares) == np.asarray(ref_shares)).all()
+    assert (np.asarray(ctx["xq"]) == np.asarray(ref_ctx["xq"])).all()
+    assert ctx["m_padded"] == int(ref_ctx["m_padded"])
+
+
+@pytest.mark.parametrize("size", [2, 3])
+def test_encode_round_shares_bit_identical(cfg, size):
+    key = jax.random.PRNGKey(5)
+    w2 = jax.random.normal(jax.random.PRNGKey(6), (22, cfg.c))
+    ref = engine.encode_round_shares(cfg, key, w2)
+    with MasterGroup(cfg, size) as grp:
+        out = grp.encode_round_shares(key, w2)
+    assert out.shape == np.asarray(ref).shape           # (N, d, c, r)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+@pytest.mark.parametrize("size", [2, 3])
+def test_encode_round_shares_split_bit_identical(cfg, size):
+    """The pipelined half-encode: group split == engine split == whole."""
+    key = jax.random.PRNGKey(9)
+    w2 = jax.random.normal(jax.random.PRNGKey(10), (22, cfg.c))
+    kq, mask_shares = engine.round_mask_context(cfg, key, (22, cfg.c))
+    ref = engine.encode_round_shares_split(cfg, kq, mask_shares, w2)
+    whole = engine.encode_round_shares(cfg, key, w2)
+    with MasterGroup(cfg, size) as grp:
+        out = grp.encode_round_shares_split(kq, mask_shares, w2)
+    assert (np.asarray(ref) == np.asarray(whole)).all()
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_t0_no_mask_encode_bit_identical(data):
+    """T=0 drops the mask rows entirely — the sharded stack must handle
+    the data-only branch too."""
+    cfg0 = protocol.CPMLConfig(N=8, K=2, T=0, r=1)
+    x, _ = data
+    key = jax.random.PRNGKey(3)
+    ref, _ = encode.encode_dataset(cfg0, key, x)
+    with MasterGroup(cfg0, 2) as grp:
+        out, _ = grp.encode_dataset(cfg0, key, x)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+# ---------------------------------------------------------------------------
+# Sharded streaming decode
+# ---------------------------------------------------------------------------
+
+def _fake_results(cfg, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return {w: rng.integers(0, cfg.p, size=(d, cfg.c)).astype(np.int32)
+            for w in range(cfg.N)}
+
+
+@pytest.mark.parametrize("size", [2, 3])
+def test_sharded_decoder_streams_on_plan_hit(cfg, size):
+    d = 22
+    results = _fake_results(cfg, d)
+    order = np.arange(cfg.N)
+    plan = decode.prefix_decode_plan(cfg, order)
+    ref_dec = decode.StreamingDecoder(cfg, plan)
+    with MasterGroup(cfg, size) as grp:
+        dec = grp.make_decoder(plan, d)
+        assert isinstance(dec, ShardedStreamingDecoder)
+        for w in order[: cfg.threshold]:
+            ref_dec.fold(w, results[w])
+            dec.fold(w, results[w])
+        parts = dec.finish(order)
+        ref = ref_dec.finish(order)
+        assert dec.streamed and ref_dec.streamed
+        assert parts.shape == (cfg.K, d, cfg.c)
+        assert (parts == np.asarray(ref)).all()
+        # and both equal the one-shot batch decode over the observed order
+        stacked = np.stack([results[w] for w in order[: cfg.threshold]])
+        dmat = decode.make_decode_matrix(cfg, order)
+        batch = decode.decode_parts(cfg, stacked, dmat)
+        assert (parts == np.asarray(batch)).all()
+
+
+def test_sharded_decoder_fallback_on_plan_miss_matches_batch(cfg):
+    """Arrivals off the predicted subset: every shard falls back to the
+    batch decode over the observed order, still bit-identical."""
+    d = 22
+    results = _fake_results(cfg, d, seed=1)
+    plan = decode.prefix_decode_plan(cfg, np.arange(cfg.N))
+    observed = np.array([7, 6, 5, 4, 3, 2, 1, 0])[: cfg.threshold]
+    with MasterGroup(cfg, 2) as grp:
+        dec = grp.make_decoder(plan, d)
+        for w in observed:
+            dec.fold(w, results[w])
+        parts = dec.finish(observed)
+        assert not dec.streamed
+    stacked = np.stack([results[w] for w in observed])
+    dmat = decode.make_decode_matrix(cfg, observed)
+    batch = decode.decode_parts(cfg, stacked, dmat)
+    assert (parts == np.asarray(batch)).all()
+
+
+def test_group_stats_track_per_master_walls(cfg, data):
+    x, _ = data
+    with MasterGroup(cfg, 2) as grp:
+        grp.encode_dataset(cfg, jax.random.PRNGKey(0), x)
+        plan = decode.prefix_decode_plan(cfg, np.arange(cfg.N))
+        dec = grp.make_decoder(plan, 22)
+        results = _fake_results(cfg, 22)
+        for w in range(cfg.threshold):
+            dec.fold(w, results[w])
+        dec.finish(np.arange(cfg.N))
+        stats = grp.group_stats()
+    assert stats["size"] == 2 and len(stats["per_master"]) == 2
+    assert stats["encode_total_s"] > 0 and stats["decode_total_s"] > 0
+    # the critical path is one master's wall: bounded by the serial total
+    assert stats["critical_path_s"] <= (stats["encode_total_s"]
+                                        + stats["decode_total_s"])
+    assert stats["critical_path_s"] >= max(
+        w["encode_s"] + w["decode_s"] for w in stats["per_master"]) * 0.999
+
+
+def test_host_encode_matches_device_lagrange_for_both_primes(data):
+    """The host int64 mod-p matmul against the device field.matmul for the
+    24-bit P and the 30-bit P30 — the overflow-discipline regression."""
+    from repro.core import lagrange, quantize
+    x, _ = data
+    for p in (field.P, field.P30):
+        cfg_p = protocol.CPMLConfig(N=8, K=2, T=1, r=1, p=p)
+        key = jax.random.PRNGKey(2)
+        ref, _ = encode.encode_dataset(cfg_p, key, x)
+        with MasterGroup(cfg_p, 3) as grp:
+            out, _ = grp.encode_dataset(cfg_p, key, x)
+        assert (np.asarray(out) == np.asarray(ref)).all()

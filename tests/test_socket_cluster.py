@@ -193,3 +193,97 @@ def test_socket_heartbeats_feed_monitor_on_wall_clock(binary_data):
     runner.monitor.timeout_s = (alive_stale_s + stale_s) / 2
     assert 0 not in set(map(int, runner._alive(now)))
     assert set(map(int, runner._alive(now))) == {1, 2, 3, 4}
+
+
+def test_socket_resilient_restore_respawns_dead_workers(binary_data):
+    """Satellite regression for the resilient-restore path over REAL TCP:
+    two workers die in the same round (below the decode threshold — coded
+    tolerance alone cannot ride through), the starved round trips a
+    checkpoint restore, and the ``respawn`` hook spawns replacement
+    processes for the dead slots; the runner reprovisions them over the
+    wire and the replay completes — bit-identical to the reference on the
+    observed responder trace."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.cluster.messages import worker_endpoint
+    from repro.launch.cpml_cluster import _worker_env, spawn_worker
+
+    x, y = binary_data
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)        # threshold 7
+    env = _worker_env()
+    with local_socket_cluster(cfg.N, die_at_round={0: 4, 1: 4}) as tr:
+        runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                               latency=None, transport=tr,
+                               round_timeout_s=6.0)
+        runner.provision()
+
+        def respawn(worker, step):
+            # fresh process for the dead slot; reaped with the others via
+            # the tr.procs list the context manager owns
+            tr.procs.append(spawn_worker(tr.port, worker, env=env))
+            tr.wait_for_endpoints([worker_endpoint(worker)], timeout_s=60.0)
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_write=False)
+            w = runner.run_resilient(10, mgr, checkpoint_every=2,
+                                     respawn=respawn)
+        runner.shutdown_workers()
+
+    assert runner.restarts == 1
+    assert len(runner.records) == 10
+    # the replacements actually answered: post-restore rounds decode at the
+    # full threshold again
+    assert runner.records[9].n_responders >= cfg.threshold
+    w_ref, _ = protocol.train_reference(cfg, jax.random.PRNGKey(7), x, y,
+                                        iters=10,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()
+
+
+def test_socket_elastic_kill_join_sharded_masters_bit_identical():
+    """THE elastic acceptance over real TCP (DESIGN.md §13): one worker
+    killed mid-run (heartbeat death -> LEAVE at a fence), one late worker
+    admitted from the spare evaluation point (Join frame -> JOIN at its
+    fence), the master role sharded S=2 over d — and the weights must be
+    bit-identical to train_reference on the spare-extended config replaying
+    the observed responder trace."""
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(42), m=400, d=32)
+    cfg = protocol.CPMLConfig(N=8, K=2, T=1, r=1)        # threshold 7
+    with local_socket_cluster(cfg.N, die_at_round={2: 2},
+                              join_at_round={8: 4}) as tr:
+        runner = ClusterRunner(cfg, jax.random.PRNGKey(7), x, y,
+                               latency=None, transport=tr,
+                               round_timeout_s=120.0,
+                               heartbeat_timeout_s=0.5,
+                               spares=1, masters=2)
+        runner.provision()
+        w = runner.run(60)
+        runner.shutdown_workers()
+
+    assert runner.cfg.N == 9                 # spare-extended config
+    ms = runner.membership
+    kinds = {(tr_.kind, tr_.worker) for tr_ in ms.transitions}
+    assert ("join", 8) in kinds, "the late worker was never admitted"
+    assert ("leave", 2) in kinds, "the killed worker was never retired"
+    assert ms.epoch == len(ms.transitions) >= 2
+    assert 2 not in ms.view() and 8 in ms.view()
+    # the joiner is dispatched from its fence on; the dead slot never again
+    join_round = next(t.round for t in ms.transitions if t.kind == "join")
+    leave_round = next(t.round for t in ms.transitions if t.kind == "leave")
+    for t, rec in runner.records.items():
+        if t >= join_round:
+            assert 8 in set(map(int, rec.dispatched))
+        if t >= leave_round:
+            assert 2 not in set(map(int, rec.dispatched))
+    # sharded masters actually ran and accounted per-master wall clocks
+    stats = runner.wait_stats()
+    assert stats["masters"]["size"] == 2
+    assert stats["masters"]["critical_path_s"] > 0
+    assert stats["membership"]["joins"] >= 1.0
+    assert stats["membership"]["leaves"] >= 1.0
+
+    w_ref, _ = protocol.train_reference(runner.cfg, jax.random.PRNGKey(7),
+                                        x, y, iters=60,
+                                        survivor_fn=runner.survivor_fn())
+    assert (np.asarray(w) == np.asarray(w_ref)).all()

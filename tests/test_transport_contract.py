@@ -350,6 +350,9 @@ def test_wire_stats_count_both_directions():
     finally:
         w0.close()
         master.close()
+
+
+def test_forward_to_unknown_endpoint_is_lost_not_fatal():
     """A Forward to a never-registered (or dead) endpoint vanishes — the
     same lost-in-the-void semantics as any send to a dead peer — and must
     not wedge or crash the relaying master."""
@@ -366,5 +369,90 @@ def test_wire_stats_count_both_directions():
             got = [m for _, m in master.recv(MASTER, time.monotonic())]
         assert got == ["still alive"]
     finally:
+        w0.close()
+        master.close()
+
+
+# ---------------------------------------------------------------------------
+# Late HELLO: a peer registering AFTER provisioning completed (the elastic
+# JOIN transport prerequisite, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_late_peer_needs_no_registration_inprocess():
+    """The in-process backend has no registration step at all: a slot name
+    first used mid-run delivers both ways — which is exactly why the sim
+    runner can admit a spare at any fence with pure bookkeeping."""
+    from repro.cluster.messages import EncodeShare, Join
+
+    tr = InProcessTransport()
+    # "provisioning": traffic only for the base worker
+    tr.send("worker/0", EncodeShare(-1, 0, None), at=0.0)
+    assert [m for _, m in tr.recv("worker/0", now=0.0)]
+    # a late joiner's first-ever frame arrives with nobody told in advance
+    tr.send(MASTER, Join(worker=8, at_round=3), at=5.0)
+    (got,) = [m for _, m in tr.recv(MASTER, now=5.0)]
+    assert isinstance(got, Join) and (got.worker, got.at_round) == (8, 3)
+    # and the master can immediately dispatch to the new slot
+    tr.send("worker/8", EncodeShare(3, 8, None), at=5.0)
+    (share,) = [m for _, m in tr.recv("worker/8", now=5.0)]
+    assert share.worker == 8
+
+
+def test_late_hello_registers_after_provisioning_socket():
+    """A SocketTransport client that connects after the base fleet finished
+    provisioning: the master's poll loop registers the new endpoint from
+    its HELLO, ``endpoints()``/``wait_for_endpoints`` observe it, the
+    joiner waits for the HELLO2 ack before speaking v2 (the Join frame is
+    v2-only), and traffic then flows both ways — the whole transport-level
+    admission path a ``--join-at-round`` worker exercises."""
+    from repro.cluster.messages import EncodeShare, Join
+
+    master = SocketTransport.master(poll_interval_s=0.02)
+    w0 = SocketTransport.connect("127.0.0.1", master.port, "worker/0",
+                                 poll_interval_s=0.02)
+    late = None
+    try:
+        master.wait_for_endpoints(["worker/0"], timeout_s=WAIT_S)
+        # base-fleet "provisioning" completes first
+        master.send("worker/0", EncodeShare(-1, 0, None))
+        deadline = time.monotonic() + WAIT_S
+        got = []
+        while not got and time.monotonic() < deadline:
+            master.recv(MASTER, time.monotonic())
+            got = [m for _, m in w0.recv("worker/0", time.monotonic())]
+        assert got and got[0].worker == 0
+        assert set(master.endpoints()) == {"worker/0"}
+
+        # NOW a joiner dials in — nothing about it was pre-arranged
+        late = SocketTransport.connect("127.0.0.1", master.port, "worker/8",
+                                       poll_interval_s=0.02)
+        master.wait_for_endpoints(["worker/8"], timeout_s=WAIT_S)
+        assert "worker/8" in master.endpoints()
+        # Join is a v2 frame: the joiner must see the master's HELLO2 ack
+        # before sending it (the race cpml_worker guards against)
+        deadline = time.monotonic() + WAIT_S
+        while (late.peer_version(MASTER) < wire.WIRE_V2
+               and time.monotonic() < deadline):
+            late.next_delivery("worker/8")
+        assert late.peer_version(MASTER) == wire.WIRE_V2
+        late.send(MASTER, Join(worker=8, at_round=5))
+        deadline = time.monotonic() + WAIT_S
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = [m for _, m in master.recv(MASTER, time.monotonic())
+                   if isinstance(m, Join)]
+        assert got and (got[0].worker, got[0].at_round) == (8, 5)
+
+        # admission dispatch: the master can now provision/dispatch to it
+        master.send("worker/8", EncodeShare(5, 8, None))
+        deadline = time.monotonic() + WAIT_S
+        got = []
+        while not got and time.monotonic() < deadline:
+            master.recv(MASTER, time.monotonic())
+            got = [m for _, m in late.recv("worker/8", time.monotonic())]
+        assert got and got[0].round == 5 and got[0].worker == 8
+    finally:
+        if late is not None:
+            late.close()
         w0.close()
         master.close()

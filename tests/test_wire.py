@@ -408,3 +408,41 @@ def test_traced_iovec_matches_serialize():
     for version in (wire.WIRE_V1, wire.WIRE_V2):
         bufs = wire.serialize_iovec(msg, version)
         assert b"".join(bufs) == wire.serialize(msg, version)
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership frames (wire v2 only, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_join_frame_roundtrip_v2():
+    from repro.cluster.messages import Join
+    out = roundtrip_v2(Join(worker=8, at_round=5, sent_at=12.25))
+    assert (out.worker, out.at_round, out.sent_at) == (8, 5, 12.25)
+
+
+def test_epoch_frame_roundtrip_v2():
+    from repro.cluster.messages import Epoch
+    out = roundtrip_v2(Epoch(epoch=3, members=(0, 1, 2, 8), round=7))
+    assert out.epoch == 3 and out.round == 7
+    assert tuple(out.members) == (0, 1, 2, 8)
+    # empty / None member lists survive too (informational fan-out)
+    assert roundtrip_v2(Epoch(epoch=0, members=None)).members is None
+
+
+def test_membership_frames_cannot_be_spoken_at_v1():
+    """Elastic membership is a v2 protocol: serializing either frame for a
+    v1 peer is a caller bug (the master must SKIP v1 peers, whose byte
+    stream stays bit-identical to the fixed fleet) — fail loud, and a v1
+    reader must reject the v2 tags rather than misparse them."""
+    from repro.cluster.messages import Epoch, Join
+    with pytest.raises(wire.WireError, match="v1 fleet"):
+        wire.serialize(Join(0, 1), wire.WIRE_V1)
+    with pytest.raises(wire.WireError, match="v1 peers"):
+        wire.serialize(Epoch(1, (0, 1)), wire.WIRE_V1)
+    for msg in (Join(0, 1), Epoch(1, (0, 1))):
+        frame = wire.serialize(msg, wire.WIRE_V2)
+        with pytest.raises(wire.WireError, match="v1 stream"):
+            wire.deserialize(frame, wire.WIRE_V1)
+        r1 = wire.FrameReader(version=wire.WIRE_V1)
+        with pytest.raises(wire.WireError):
+            r1.feed(frame)
