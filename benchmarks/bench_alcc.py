@@ -1,0 +1,176 @@
+"""ALCC float-engine benchmark: speed parity + convergence gates.
+
+Three acceptance gates, all of which FAIL the job (nonzero exit) when
+violated — CI runs ``--smoke`` on every push (see .github/workflows/ci.yml):
+
+  * SPEED PARITY — the ALCC engine's per-round wall time through the same
+    ClusterRunner + EventScheduler path must be <= 1.25x the exact
+    finite-field engine at EQUAL shapes (same N/K/T/r, same data, same
+    deterministic latency model).  ALCC trades the quantize/field-reduce
+    work of the exact engine for float64 Vandermonde solves at decode; the
+    gate pins down that this trade stays within noise of parity.
+  * LOGISTIC CONVERGENCE — ALCC coded training (train_reference over the
+    same hooks the runner drives) must land within ``W_TOL`` max|dw| of the
+    UNCODED float oracle (same surrogate, same batches, same step sizes),
+    i.e. the masks cancel and decode noise stays at float-roundoff scale.
+  * MLP CONVERGENCE — the two-phase coded MLP (cluster/alcc_mlp.py) must
+    reach within ``ALCC_MLP_LOSS_TOL`` of the plaintext jax.grad oracle's
+    final full-data loss.  The tolerance is on LOSS, not weights: at long
+    horizons SGD chaotically amplifies f32 roundoff into weight drift that
+    is sigma-independent, while the loss surface it lands on is the same
+    (DESIGN.md §14).
+
+    PYTHONPATH=src python benchmarks/bench_alcc.py [--smoke] [--out PATH]
+
+Writes BENCH_alcc.json and uploads it as a CI artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from common import emit
+
+from repro.cluster import ClusterRunner, make_latency
+from repro.cluster.alcc_mlp import ALCCMLPRunner
+from repro.core.protocol import alcc_engine
+from repro.core.protocol.config import CPMLConfig
+from repro.data import synthetic
+from repro.launch.cpml_cluster import ALCC_MLP_LOSS_TOL
+
+SPEED_RATIO_LIMIT = 1.25   # ALCC per-round <= 1.25x exact (ISSUE acceptance)
+W_TOL = 1e-3               # logistic max|w_alcc - w_oracle| ceiling
+N_WORKERS = 8
+
+
+def _time_run(make_runner, iters: int, repeats: int = 3) -> float:
+    """Median wall-microseconds per round.  One throwaway run first so jit
+    compilation (shared per-process cache) is off the clock."""
+    make_runner().run(max(2, iters // 4))
+    times = []
+    for _ in range(repeats):
+        runner = make_runner()
+        t0 = time.perf_counter()
+        runner.run(iters)
+        times.append((time.perf_counter() - t0) / iters)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def bench_speed(m: int, d: int, iters: int) -> dict:
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(0), m=m, d=d)
+    lat = lambda: make_latency("deterministic", seed=11)
+    exact_cfg = CPMLConfig(N=N_WORKERS, K=2, T=1, r=1)
+    alcc_cfg = alcc_engine.ALCCConfig(N=N_WORKERS, K=2, T=1, r=1, sigma=1.0)
+    exact_us = _time_run(
+        lambda: ClusterRunner(exact_cfg, jax.random.PRNGKey(7), x, y, lat()),
+        iters)
+    alcc_us = _time_run(
+        lambda: ClusterRunner(alcc_cfg, jax.random.PRNGKey(7), x, y, lat(),
+                              engine="alcc"),
+        iters)
+    ratio = alcc_us / exact_us
+    ok = ratio <= SPEED_RATIO_LIMIT
+    emit("alcc_round", alcc_us, f"ratio_vs_exact={ratio:.3f}")
+    emit("exact_round", exact_us, "")
+    return {
+        "exact_round_us": exact_us,
+        "alcc_round_us": alcc_us,
+        "ratio": ratio,
+        "limit": SPEED_RATIO_LIMIT,
+        "ok": bool(ok),
+    }
+
+
+def bench_logistic(m: int, d: int, iters: int) -> dict:
+    cfg = alcc_engine.ALCCConfig(N=N_WORKERS, K=2, T=1, r=1, sigma=1.0)
+    key = jax.random.PRNGKey(3)
+    x, y = synthetic.mnist_like(jax.random.PRNGKey(1), m=m, d=d)
+    w, _ = alcc_engine.train_reference(cfg, key, x, y, iters)
+    w_o = alcc_engine.float_oracle(cfg, key, x, y, iters)
+    gap = float(np.max(np.abs(np.asarray(w) - np.asarray(w_o))))
+    _, acc = alcc_engine.loss_and_accuracy(w, x, y)
+    _, acc_o = alcc_engine.loss_and_accuracy(w_o, x, y)
+    ok = gap <= W_TOL
+    emit("alcc_logistic", 0.0, f"max_dw_vs_oracle={gap:.2e}")
+    return {
+        "max_dw_vs_oracle": gap,
+        "tol": W_TOL,
+        "acc_alcc": float(acc),
+        "acc_oracle": float(acc_o),
+        "ok": bool(ok),
+    }
+
+
+def bench_mlp(m: int, d: int, c: int, hidden: int, iters: int, eta: float
+              ) -> dict:
+    cfg = alcc_engine.ALCCConfig(N=N_WORKERS, K=2, T=1, r=1, c=c, sigma=1.0,
+                                 batch_rows=None)
+    key = jax.random.PRNGKey(5)
+    x, y = synthetic.multiclass_mnist_like(jax.random.PRNGKey(2), m=m, d=d,
+                                           c=c)
+    runner = ALCCMLPRunner(cfg, key, x, y, hidden,
+                           make_latency("deterministic", seed=13), eta=eta)
+    t0 = time.perf_counter()
+    w1, w2 = runner.run(iters)
+    per_step_us = (time.perf_counter() - t0) / iters * 1e6
+    loss, acc = runner.metrics_now()
+    w1_o, w2_o = alcc_engine.mlp_oracle(cfg, key, x, y, hidden, iters, eta)
+    loss_o, acc_o = alcc_engine.mlp_metrics(runner.state, w1_o, w2_o)
+    gap = abs(loss - loss_o)
+    ok = gap <= ALCC_MLP_LOSS_TOL
+    emit("alcc_mlp_step", per_step_us, f"dloss_vs_oracle={gap:.2e}")
+    return {
+        "loss_coded": loss,
+        "acc_coded": acc,
+        "loss_oracle": loss_o,
+        "acc_oracle": acc_o,
+        "loss_gap": gap,
+        "tol": ALCC_MLP_LOSS_TOL,
+        "per_step_us": per_step_us,
+        "decode": runner.wait_stats().get("alcc", {}),
+        "ok": bool(ok),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI (same gates)")
+    ap.add_argument("--out", default="BENCH_alcc.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        shapes = dict(m=512, d=16, iters=10, log_iters=25,
+                      mlp=dict(m=384, d=16, c=4, hidden=16, iters=12,
+                               eta=0.1))
+    else:
+        shapes = dict(m=4096, d=64, iters=30, log_iters=60,
+                      mlp=dict(m=1024, d=32, c=4, hidden=32, iters=40,
+                               eta=0.1))
+
+    out = {
+        "smoke": bool(args.smoke),
+        "shapes": shapes,
+        "speed": bench_speed(shapes["m"], shapes["d"], shapes["iters"]),
+        "logistic": bench_logistic(shapes["m"], shapes["d"],
+                                   shapes["log_iters"]),
+        "mlp": bench_mlp(**shapes["mlp"]),
+    }
+    out["ok"] = bool(out["speed"]["ok"] and out["logistic"]["ok"]
+                     and out["mlp"]["ok"])
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}  ok={out['ok']} "
+          f"(speed ratio {out['speed']['ratio']:.3f} <= "
+          f"{SPEED_RATIO_LIMIT}, logistic dw {out['logistic']['max_dw_vs_oracle']:.2e}, "
+          f"mlp dloss {out['mlp']['loss_gap']:.2e})")
+    return 0 if out["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,337 @@
+"""ALCCMLPRunner: coded MLP training over the cluster runtime (DESIGN.md §14).
+
+The exact engine cannot train the seed MLP (models/layers.gelu_mlp): gelu
+and softmax are not field polynomials.  Over the reals they do not need to
+be — only the *coded phases* must be polynomial, and one gradient step of
+the two-layer MLP splits into exactly two BILINEAR coded phases with all
+the nonlinear work on the master in between:
+
+  round 2t   (phase A, forward):  workers compute X̃_i[batch] @ W̃1_i;
+             decoding any ``mlp_threshold`` responses yields the per-part
+             pre-activations Z1_k = X̄_k[batch] @ W1.
+  master     (in the clear):      gelu forward + softmax-CE backward
+             through layer 2 (alcc_engine._mlp_middle) -> the W2 gradient
+             and the layer-1 deltas δ1_k = ∂loss/∂Z1_k.
+  round 2t+1 (phase B, backward): δ1 is ENCODED LIKE DATA (per-part values
+             at the K betas + fresh masks) and workers compute
+             X̃_i[batch]ᵀ @ δ̃1_i; the decode SUM is the W1 gradient
+             Σ_k X̄_kᵀ δ1_k.  Same batch indices ship in both phases.
+
+Both phases are degree-2 in coded inputs, so the per-phase recovery
+threshold 2(K+T-1)+1 is LOWER than the logistic round's (2r+1)(K+T-1)+1 at
+equal (K, T).  Privacy is the same (T, sigma)-analog statement as the
+logistic engine: workers only ever see Lagrange shares of X, W1 and δ1
+(δ1 is a function of the labels, so it is masked like the data — the
+master never reveals it in the clear).
+
+The runner drives the same EventScheduler as ClusterRunner on BOTH
+backends: a latency model simulates the fleet (worker evaluations computed
+master-side in float32, exactly what real workers would return), or a
+SocketTransport dispatches to real cpml_worker processes provisioned with
+``protocol: "alcc_mlp"``.  Verification mirrors the logistic engine's
+two-tier contract: a sim run replays bit-for-bit through
+``train_reference`` below; a socket run replays to within the decode error
+budget; convergence is judged against ``alcc_engine.mlp_oracle``.
+"""
+from __future__ import annotations
+
+import math
+import time as _time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.latency import LatencyModel
+from repro.cluster.messages import (
+    PROVISION_ROUND, SHUTDOWN_ROUND, EncodeShare, worker_endpoint)
+from repro.cluster.runner import await_worker_acks, wait_summary
+from repro.cluster.scheduler import ClusterDecodeError, EventScheduler
+from repro.cluster.transport import Transport
+from repro.core.protocol import alcc_engine
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime.resilience import HeartbeatMonitor
+
+
+class ALCCMLPRunner:
+    """Drives ``iters`` two-phase MLP steps through the event scheduler.
+
+    Knobs (a deliberate subset of ClusterRunner's — the MLP plane is a
+    fixed fleet, no pipeline/elastic/sharded-master machinery):
+
+      * ``latency`` — in-process simulation; ``latency=None`` + a real
+        ``transport`` — socket backend (``provision()`` first).
+      * ``eta`` — step size for both layers (no Lipschitz auto-tune here;
+        the gelu head's curvature is not the logistic bound's).
+      * ``round_timeout_s`` — per-PHASE collect deadline on a real
+        transport (two phases per step, each its own dispatch + decode).
+    """
+
+    def __init__(self, cfg: alcc_engine.ALCCConfig, key, x, y, hidden: int,
+                 latency: LatencyModel | None = None, *,
+                 eta: float = 0.1,
+                 transport: Transport | None = None,
+                 round_timeout_s: float = math.inf,
+                 heartbeat_timeout_s: float = math.inf,
+                 metrics: MetricsRegistry | None = None,
+                 recorder=None):
+        self.cfg = cfg
+        self.hidden = int(hidden)
+        self.eta = float(eta)
+        self.threshold = cfg.mlp_threshold
+        ksetup, self.kloop = jax.random.split(key)
+        self.state = alcc_engine.mlp_setup(cfg, ksetup, x, y, hidden)
+        self.w1 = self.state.w1
+        self.w2 = self.state.w2
+        self.scheduler = EventScheduler(cfg.N, latency, transport,
+                                        recorder=recorder)
+        self.obs = self.scheduler.obs
+        self.obs.bind_clock(self.scheduler.time.now)
+        self.latency = latency
+        self.round_timeout_s = round_timeout_s
+        if self.distributed and math.isinf(round_timeout_s):
+            self.round_timeout_s = 300.0
+        self.monitor = HeartbeatMonitor(cfg.N, timeout_s=heartbeat_timeout_s,
+                                        now=self.scheduler.clock)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_steps = self.metrics.counter(
+            "cpml_mlp_steps_total", "completed MLP training steps")
+        self._m_cond = self.metrics.gauge(
+            "cpml_alcc_decode_cond",
+            "condition number of the last ALCC least-squares decode")
+        self._m_budget = self.metrics.gauge(
+            "cpml_alcc_error_budget",
+            "a-priori absolute decode error bound of the last ALCC round")
+        self._m_fallback = self.metrics.counter(
+            "cpml_alcc_decode_fallbacks_total",
+            "ALCC decodes that took the overdetermined fallback path")
+        self.alcc_info: list[dict] = []
+        self.survivors: dict[int, np.ndarray] = {}      # round id -> order
+        self.history: list[dict[str, float]] = []
+        self._phase_stats: list[dict[str, float]] = []
+
+    @property
+    def distributed(self) -> bool:
+        return self.latency is None
+
+    # ------------------------------------------------------------------
+    # Socket provisioning
+    # ------------------------------------------------------------------
+
+    def provision(self, timeout_s: float = 60.0) -> None:
+        """Ship each worker its float dataset share + the MLP serve mode.
+
+        The worker acks with a Heartbeat after jitting BOTH phase
+        functions (cpml_worker.py), so step-0 timing never absorbs XLA
+        compilation — the same contract as ClusterRunner.provision.
+        """
+        assert self.distributed, "provision() is for real transports only"
+        cfg = self.cfg
+        wall0 = _time.perf_counter()
+        with self.obs.span("provision", workers=cfg.N):
+            tr = self.scheduler.transport
+            cfg_kw = {"N": cfg.N, "K": cfg.K, "T": cfg.T, "r": cfg.r,
+                      "c": cfg.c, "sigma": cfg.sigma,
+                      "batch_rows": cfg.batch_rows}
+            x_shares = np.asarray(self.state.x_shares, np.float32)
+            now = self.scheduler.clock
+            for w in range(cfg.N):
+                tr.send(worker_endpoint(w),
+                        EncodeShare(PROVISION_ROUND, w, {
+                            "protocol": "alcc_mlp", "cfg": cfg_kw,
+                            "hidden": self.hidden, "x_share": x_shares[w],
+                            "trace": bool(self.obs.enabled)}),
+                        at=now)
+            await_worker_acks(tr, lambda: self.scheduler.clock, cfg.N,
+                              self.monitor, timeout_s)
+        self.metrics.gauge(
+            "cpml_provision_seconds",
+            "wall seconds from provisioning dispatch to the last worker "
+            "ack (includes worker XLA warmup)").set(
+                _time.perf_counter() - wall0)
+
+    def shutdown_workers(self) -> None:
+        assert self.distributed
+        now = self.scheduler.clock
+        for w in range(self.cfg.N):
+            self.scheduler.transport.send(
+                worker_endpoint(w), EncodeShare(SHUTDOWN_ROUND, w), at=now)
+
+    # ------------------------------------------------------------------
+    # One coded phase = one scheduler round
+    # ------------------------------------------------------------------
+
+    def _coded_phase(self, rid: int, shares: np.ndarray, batch_np,
+                     phase: int) -> tuple[np.ndarray, np.ndarray]:
+        """Dispatch round ``rid`` with per-worker ``shares`` and return
+        (stacked float32 responses in decode order, order)."""
+        cfg = self.cfg
+        payloads = None
+        enc_t0 = _time.perf_counter()
+        if self.distributed:
+            payloads = {w: {"w_share": shares[w], "batch": batch_np,
+                            "next_batch": None}
+                        for w in range(cfg.N)}
+        trace = self.scheduler.dispatch_round(
+            rid, self.threshold, monitor=self.monitor,
+            timeout_s=self.round_timeout_s, payloads=payloads)
+        if not math.isfinite(trace.t_first_R):
+            raise ClusterDecodeError(
+                f"phase round {rid}: {len(trace.responders)} responses < "
+                f"threshold {self.threshold}")
+        # like the logistic engine, let the least-squares decode pick its
+        # row count: square path reads `threshold` rows, the ill-conditioned
+        # fallback all responders (core/alcc.py)
+        _, info = cfg.scheme.decode_matrix(trace.responders, 2)
+        order = np.asarray(trace.responders[: info["rows"]], np.int64)
+        if self.distributed:
+            fastest = np.stack([np.asarray(trace.payloads[int(w)], np.float32)
+                                for w in order])
+        else:
+            # simulate the worker evaluations in float32, the same ops a
+            # real worker's jitted phase function runs
+            xb = (self.state.x_shares if batch_np is None
+                  else self.state.x_shares[:, batch_np])
+            xs = xb[order].astype(np.float32)
+            ws = shares[order]
+            if phase == 0:
+                fastest = np.einsum("rbd,rdh->rbh", xs, ws)
+            else:
+                fastest = np.einsum("rbd,rbh->rdh", xs, ws)
+            fastest = fastest.astype(np.float32)
+        self._phase_stats.append({
+            "wait_s": trace.t_first_R - trace.t_start,
+            "encode_s": _time.perf_counter() - enc_t0
+            if self.distributed else 0.0})
+        self.survivors[rid] = np.asarray(trace.responders).copy()
+        return fastest, order
+
+    def _track(self, info: dict, rid: int) -> None:
+        self.alcc_info.append(info)
+        self._m_cond.set(float(info["cond"]))
+        self._m_budget.set(float(info["abs_err_budget"]))
+        if info["fallback"]:
+            self._m_fallback.inc()
+        self.obs.instant("alcc_decode", round=rid,
+                         cond=float(info["cond"]),
+                         err_budget=float(info["abs_err_budget"]),
+                         fallback=bool(info["fallback"]))
+
+    def step(self, t: int, iters: int) -> None:
+        """One MLP gradient step = phase A round, master middle, phase B
+        round, then the two-layer update."""
+        cfg = self.cfg
+        with self.obs.span("mlp_step", step=t):
+            bidx = (np.asarray(alcc_engine.draw_batch(
+                        cfg, self.kloop, iters, self.state.mk, t))
+                    if cfg.batch_rows is not None else None)
+            kA = alcc_engine.round_key(self.kloop, 2 * t)
+            kB = alcc_engine.round_key(self.kloop, 2 * t + 1)
+            w1_shares = alcc_engine.mlp_encode_forward(cfg, kA, self.w1)
+            fast, order = self._coded_phase(2 * t, w1_shares, bidx, 0)
+            z1_parts, info = alcc_engine.mlp_decode_forward(cfg, fast, order)
+            self._track(info, 2 * t)
+            gw2, dz1, loss, acc = alcc_engine.mlp_middle(
+                cfg, self.state, z1_parts, bidx)
+            d1_shares = alcc_engine.mlp_encode_backward(cfg, kB, dz1)
+            fast, order = self._coded_phase(2 * t + 1, d1_shares, bidx, 1)
+            gw1, info = alcc_engine.mlp_decode_backward(cfg, fast, order)
+            self._track(info, 2 * t + 1)
+            self.w1 = jnp.asarray(
+                np.asarray(self.w1, np.float64) - self.eta * gw1, jnp.float32)
+            self.w2 = self.w2 - self.eta * gw2
+            self.history.append({"step": t, "loss": float(loss),
+                                 "acc": float(acc)})
+        self._m_steps.inc()
+
+    def run(self, iters: int):
+        """Train for ``iters`` steps from the initial weights; returns
+        (w1, w2)."""
+        self.w1, self.w2 = self.state.w1, self.state.w2
+        self.alcc_info.clear()
+        self.survivors.clear()
+        self.history.clear()
+        self._phase_stats.clear()
+        for t in range(iters):
+            self.step(t, iters)
+        return self.w1, self.w2
+
+    # ------------------------------------------------------------------
+    # Verification + stats
+    # ------------------------------------------------------------------
+
+    def survivor_fn(self) -> Callable[[int], np.ndarray]:
+        """Round-id (2t / 2t+1) -> observed responders, for
+        train_reference replay."""
+        trace = dict(self.survivors)
+        return lambda rid: trace[rid]
+
+    def wait_stats(self) -> dict[str, dict[str, float]]:
+        stats = {
+            "coded_T": wait_summary([p["wait_s"] for p in self._phase_stats]),
+            "encode": wait_summary(
+                [p["encode_s"] for p in self._phase_stats]),
+            "alcc": {
+                "cond": wait_summary([i["cond"] for i in self.alcc_info]),
+                "abs_err_budget": wait_summary(
+                    [i["abs_err_budget"] for i in self.alcc_info]),
+                "fallbacks": {"n": float(sum(
+                    1 for i in self.alcc_info if i["fallback"]))},
+            },
+            "rounds": {"n": float(len(self._phase_stats))},
+        }
+        wire_totals = getattr(self.scheduler.transport, "wire_totals", None)
+        if wire_totals is not None:
+            stats["wire_totals"] = {k: float(v)
+                                    for k, v in wire_totals().items()}
+        return stats
+
+    def metrics_now(self) -> tuple[float, float]:
+        """Full-data (loss, accuracy) of the current weights."""
+        return alcc_engine.mlp_metrics(self.state, self.w1, self.w2)
+
+
+def train_reference(cfg: alcc_engine.ALCCConfig, key, x, y, hidden: int,
+                    iters: int, eta: float,
+                    survivor_fn: Callable[[int], np.ndarray] | None = None):
+    """Schedulerless replay of the two-phase loop over the same hooks.
+
+    With a runner's ``survivor_fn()`` this reproduces a SIMULATED run's
+    weights bit-for-bit and a socket run's to within the decode error
+    budget (cf. the module docstring).  Returns (w1, w2, history).
+    """
+    ksetup, kloop = jax.random.split(jnp.asarray(key))
+    state = alcc_engine.mlp_setup(cfg, ksetup, x, y, hidden)
+    w1, w2 = state.w1, state.w2
+    history = []
+    for t in range(iters):
+        bidx = (np.asarray(alcc_engine.draw_batch(
+                    cfg, kloop, iters, state.mk, t))
+                if cfg.batch_rows is not None else None)
+        surv = [survivor_fn(2 * t) if survivor_fn is not None else None,
+                survivor_fn(2 * t + 1) if survivor_fn is not None else None]
+        orders = []
+        for rid, sv in zip((2 * t, 2 * t + 1), surv):
+            sv = np.arange(cfg.N) if sv is None else np.asarray(sv)
+            _, info = cfg.scheme.decode_matrix(sv, 2)
+            orders.append(np.asarray(sv[: info["rows"]], np.int64))
+        kA = alcc_engine.round_key(kloop, 2 * t)
+        kB = alcc_engine.round_key(kloop, 2 * t + 1)
+        w1_shares = alcc_engine.mlp_encode_forward(cfg, kA, w1)
+        xb = (state.x_shares if bidx is None else state.x_shares[:, bidx])
+        xs = xb[orders[0]].astype(np.float32)
+        fast = np.einsum("rbd,rdh->rbh", xs, w1_shares[orders[0]]
+                         ).astype(np.float32)
+        z1_parts, _ = alcc_engine.mlp_decode_forward(cfg, fast, orders[0])
+        gw2, dz1, loss, acc = alcc_engine.mlp_middle(cfg, state, z1_parts,
+                                                     bidx)
+        d1_shares = alcc_engine.mlp_encode_backward(cfg, kB, dz1)
+        xs = xb[orders[1]].astype(np.float32)
+        fast = np.einsum("rbd,rbh->rdh", xs, d1_shares[orders[1]]
+                         ).astype(np.float32)
+        gw1, _ = alcc_engine.mlp_decode_backward(cfg, fast, orders[1])
+        w1 = jnp.asarray(np.asarray(w1, np.float64) - eta * gw1, jnp.float32)
+        w2 = w2 - eta * gw2
+        history.append({"step": t, "loss": float(loss), "acc": float(acc)})
+    return w1, w2, history

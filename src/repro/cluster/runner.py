@@ -13,6 +13,21 @@ Consequence: a ClusterRunner run — simulated or live — is BIT-IDENTICAL to
 layer can never silently change training semantics, only timing and
 placement.
 
+The ``engine`` knob (DESIGN.md §14) picks the coded-arithmetic backend
+behind those hooks: ``"exact"`` (default) is the quantized field protocol
+above; ``"alcc"`` swaps in ``protocol/alcc_engine`` — real-valued Lagrange
+coding with Gaussian analog masks and a least-squares decode.  The runner
+code is shared; only three things change: weight shares ship as float32
+(v2-only FROUND/FRESULT wire frames on the socket transport), the decode
+hooks take the responder ORDER instead of an int32 decode matrix, and
+every decode's condition number / error budget / fallback flag is
+collected into ``wait_stats()["alcc"]``, the ``cpml_alcc_*`` metrics and
+``alcc_decode`` trace instants.  The replay invariant becomes two-tier:
+sim runs stay bit-identical to ``alcc_engine.train_reference``; socket
+runs agree within the decode error budget (XLA-vs-BLAS float32 summation
+order).  Exact-only machinery — ``pipeline`` modes, ``masters > 1``,
+spares/joins — is refused at construction.
+
 Resilience integration (runtime/resilience.py):
 
   * HeartbeatMonitor — results/acks feed it on the SIMULATED clock; workers
@@ -56,8 +71,13 @@ from repro.cluster.pipeline import PIPELINE_MODES, RoundContext, RoundPrefetcher
 from repro.cluster.scheduler import ClusterDecodeError, EventScheduler, RoundTrace
 from repro.cluster.wire import WIRE_V2
 from repro.cluster.transport import Transport
-from repro.core.protocol import decode, engine
+from repro.core.protocol import alcc_engine, decode, engine
 from repro.core.protocol.config import CPMLConfig
+
+# the runner's engine is pluggable (DESIGN.md §14): "exact" is the field
+# protocol (bit-identical decode), "alcc" the float backend (least-squares
+# decode with a tracked error budget).  Both expose the same hook factories.
+ENGINES = {"exact": engine, "alcc": alcc_engine}
 from repro.obs.metrics import MetricsRegistry
 from repro.runtime.resilience import HeartbeatMonitor, ResilientLoop
 
@@ -216,6 +236,24 @@ class ClusterRunner:
     K/(K+T) data-row fraction of the encode; streaming leaves 1/threshold
     of the decode on rounds whose subset prediction hits, and the FULL
     decode cost on misses (the fallback batch decode a real decoder pays).
+
+    Knobs beyond the common cfg/latency/transport:
+
+      * ``engine`` — ``"exact"`` (field protocol, default) or ``"alcc"``
+        (real-valued coding, DESIGN.md §14; see the module docstring for
+        what changes — and what is refused — under ALCC).
+      * ``eta`` — step size; None auto-tunes 1/L by power iteration.
+      * ``round_timeout_s`` / ``heartbeat_timeout_s`` — starvation and
+        failure-detector walls (sim clock when simulated, wall clock live).
+      * ``straggler_factor`` / ``exclude_stragglers`` — EWMA-based
+        speculative exclusion of known-slow workers while the fast set
+        strictly exceeds the recovery threshold.
+      * ``collect_all`` — hold rounds open past the decode so the
+        wait-for-all counterfactual is measured on the same trace.
+      * ``spares`` / ``masters`` / ``join_schedule`` — elastic membership
+        and the sharded master role (DESIGN.md §13, exact engine only).
+      * ``recorder`` / ``metrics`` — the §11 flight recorder hooks; free
+        when None.
     """
 
     def __init__(self, cfg: CPMLConfig, key, x, y,
@@ -235,7 +273,8 @@ class ClusterRunner:
                  metrics: MetricsRegistry | None = None,
                  spares: int = 0,
                  masters: int = 1,
-                 join_schedule: dict[int, int] | None = None):
+                 join_schedule: dict[int, int] | None = None,
+                 engine: str = "exact"):
         # heartbeat_timeout_s defaults to inf: in the simulation, true
         # deaths surface as round starvation (-> mark_failed) and slowness
         # as the EWMA straggler stat; a finite timeout models a gossip-style
@@ -243,6 +282,16 @@ class ClusterRunner:
         # single long round makes healthy-but-quiet workers look dead.
         assert pipeline in PIPELINE_MODES, (
             f"pipeline={pipeline!r} not in {PIPELINE_MODES}")
+        assert engine in ENGINES, f"engine={engine!r} not in {set(ENGINES)}"
+        self.engine_name = engine
+        self.eng = ENGINES[engine]
+        if engine == "alcc":
+            # the float engine keeps the round loop but not the exact-only
+            # machinery: pipelining splits a FIELD matmul, and the sharded
+            # master / elastic spare points rely on bit-identical re-encode
+            assert pipeline == "off", "pipeline modes are exact-engine only"
+            assert masters == 1 and spares == 0 and not join_schedule, (
+                "sharded masters / elastic membership are exact-engine only")
         # Elastic membership (DESIGN.md §13): ``spares`` extra Lagrange
         # evaluation points are encoded up front — the coding scheme's
         # points are consecutive, so extending N to N+spares leaves shares
@@ -265,17 +314,28 @@ class ClusterRunner:
         self.master_group = (MasterGroup(cfg, self.masters)
                              if self.masters > 1 else None)
         ksetup, self.kloop = jax.random.split(key)
-        self.state = engine.setup(
+        self.state = self.eng.setup(
             cfg, ksetup, x, y,
             dataset_encoder=(self.master_group.encode_dataset
                              if self.master_group is not None else None))
-        self.eta = (engine.lipschitz_eta(self.state.xq_real)
+        self.eta = (self.eng.lipschitz_eta(self.state.xq_real)
                     if eta is None else eta)
-        self._round = engine.round_fn(cfg, self.state, self.eta)
-        self._round_split = engine.round_fn_split(cfg, self.state, self.eta)
-        self._update = engine.update_fn(cfg, self.state, self.eta)
-        self._update_parts = engine.update_from_parts_fn(cfg, self.state,
-                                                         self.eta)
+        if engine == "alcc":
+            # every least-squares decode appends its conditioning / error-
+            # budget info here; wait_stats["alcc"] and the obs instants
+            # read it back per round
+            self.alcc_info: list[dict] = []
+            self._round = self.eng.round_fn(cfg, self.state, self.eta,
+                                            info_sink=self.alcc_info)
+            self._update = self.eng.update_fn(cfg, self.state, self.eta,
+                                              info_sink=self.alcc_info)
+        else:
+            self.alcc_info = None
+            self._round = self.eng.round_fn(cfg, self.state, self.eta)
+            self._update = self.eng.update_fn(cfg, self.state, self.eta)
+        self._round_split = self.eng.round_fn_split(cfg, self.state, self.eta)
+        self._update_parts = self.eng.update_from_parts_fn(cfg, self.state,
+                                                           self.eta)
         self.pipeline = pipeline
         self.encode_cost_s = encode_cost_s
         self.decode_cost_s = decode_cost_s
@@ -315,7 +375,7 @@ class ClusterRunner:
         self.scheduler.bind_membership(self.membership)
         for w, at_round in (join_schedule or {}).items():
             self.membership.schedule_join(w, at_round)
-        self.w2 = engine._w_internal(cfg, self.state.w)
+        self.w2 = self.eng._w_internal(cfg, self.state.w)
         self.records: dict[int, RoundRecord] = {}
         self.traces: dict[int, RoundTrace] = {}
         self.restarts = 0
@@ -374,6 +434,18 @@ class ClusterRunner:
             "cpml_xla_warm_compile_seconds",
             "max worker-reported XLA warm-compile wall (needs tracing + v2 "
             "wire)")
+        if self.engine_name == "alcc":
+            self._m_alcc_cond = m.gauge(
+                "cpml_alcc_decode_cond",
+                "condition number of the last round's least-squares decode")
+            self._m_alcc_budget = m.gauge(
+                "cpml_alcc_error_budget",
+                "a-priori absolute decode-error bound of the last round "
+                "(cond * eps32 * max|evaluation|)")
+            self._m_alcc_fallback = m.counter(
+                "cpml_alcc_decode_fallbacks_total",
+                "rounds decoded by the overdetermined all-responder "
+                "fallback (square system over cond_max)")
 
     def _observe_round(self, t: int, trace: RoundTrace,
                        rec: RoundRecord) -> None:
@@ -400,6 +472,17 @@ class ClusterRunner:
             for w, spans in trace.worker_traces.items():
                 obs.add_process_spans(f"worker{int(w)}", spans, round=t)
         self._m_rounds.inc()
+        if self.alcc_info:
+            # the decode that just ran appended its conditioning info
+            info = self.alcc_info[-1]
+            self._m_alcc_cond.set(float(info["cond"]))
+            self._m_alcc_budget.set(float(info["abs_err_budget"]))
+            if info["fallback"]:
+                self._m_alcc_fallback.inc()
+            self.obs.instant("alcc_decode", round=t,
+                             cond=float(info["cond"]),
+                             err_budget=float(info["abs_err_budget"]),
+                             fallback=bool(info["fallback"]))
         if rec.prefetched:
             self._m_prefetch.inc()
         if rec.streamed:
@@ -441,16 +524,16 @@ class ClusterRunner:
     def _build_ctx(self, t: int, iters: int) -> RoundContext:
         """Round t's W-independent context (runs on the prefetch thread)."""
         cfg = self.cfg
-        key_t = engine.round_key(self.kloop, t)
-        kq, mask_shares = engine.round_mask_context(cfg, key_t, self._w_shape)
+        key_t = self.eng.round_key(self.kloop, t)
+        kq, mask_shares = self.eng.round_mask_context(cfg, key_t, self._w_shape)
         bidx = next_np = None
         if cfg.batch_rows is not None:
-            bidx = engine.draw_batch(cfg, self.kloop, iters,
+            bidx = self.eng.draw_batch(cfg, self.kloop, iters,
                                      self.state.mk, t)
             if self.distributed and t + 1 < iters:
                 # round t+1's indices ride in round t's dispatch so the
                 # workers pre-slice their coded sub-batch while idle
-                next_np = np.asarray(engine.draw_batch(
+                next_np = np.asarray(self.eng.draw_batch(
                     cfg, self.kloop, iters, self.state.mk, t + 1))
         plan = (decode.prefix_decode_plan(cfg, self._predicted_order())
                 if self.streaming else None)
@@ -518,21 +601,31 @@ class ClusterRunner:
         with self.obs.span("provision", workers=len(workers)):
             tr = self.scheduler.transport
             x_shares = np.asarray(self.state.x_shares)
-            cbar = engine.poly_coeffs(self.cfg)
-            cfg_kw = {"N": self.cfg.N, "K": self.cfg.K, "T": self.cfg.T,
-                      "r": self.cfg.r, "c": self.cfg.c, "lx": self.cfg.lx,
-                      "lw": self.cfg.lw, "lc": self.cfg.lc, "p": self.cfg.p,
-                      "batch_rows": self.cfg.batch_rows}
+            cbar = self.eng.poly_coeffs(self.cfg)
+            if self.engine_name == "alcc":
+                # float engine: no quantization scales to ship; the worker
+                # selects its float round fn off the "protocol" marker
+                cfg_kw = {"N": self.cfg.N, "K": self.cfg.K, "T": self.cfg.T,
+                          "r": self.cfg.r, "c": self.cfg.c,
+                          "sigma": self.cfg.sigma,
+                          "batch_rows": self.cfg.batch_rows}
+            else:
+                cfg_kw = {"N": self.cfg.N, "K": self.cfg.K, "T": self.cfg.T,
+                          "r": self.cfg.r, "c": self.cfg.c, "lx": self.cfg.lx,
+                          "lw": self.cfg.lw, "lc": self.cfg.lc, "p": self.cfg.p,
+                          "batch_rows": self.cfg.batch_rows}
             now = self.scheduler.clock
             for w in workers:
+                payload = {"cfg": cfg_kw, "x_share": x_shares[w],
+                           "cbar": cbar,
+                           # ask the workers to record + piggy-back their
+                           # own per-round spans (v2 wire only; a v1 peer
+                           # drops the field)
+                           "trace": bool(self.obs.enabled)}
+                if self.engine_name == "alcc":
+                    payload["protocol"] = "alcc"
                 tr.send(worker_endpoint(w),
-                        EncodeShare(PROVISION_ROUND, w,
-                                    {"cfg": cfg_kw, "x_share": x_shares[w],
-                                     "cbar": cbar,
-                                     # ask the workers to record + piggy-back
-                                     # their own per-round spans (v2 wire
-                                     # only; a v1 peer drops the field)
-                                     "trace": bool(self.obs.enabled)}),
+                        EncodeShare(PROVISION_ROUND, w, payload),
                         at=now)
             await_worker_acks(tr, lambda: self.scheduler.clock, set(workers),
                               self.monitor, timeout_s,
@@ -717,7 +810,7 @@ class ClusterRunner:
             ctx.epoch = view.epoch
             self.obs.instant("prefetch_epoch_invalidated", round=t,
                              epoch=view.epoch)
-        key_t = None if ctx is not None else engine.round_key(self.kloop, t)
+        key_t = None if ctx is not None else self.eng.round_key(self.kloop, t)
         # the subset the streaming decode would fold against this round
         # (ctx.plan when prefetched — possibly one round staler — else the
         # last observed order); used for the decoder plan in distributed
@@ -734,7 +827,7 @@ class ClusterRunner:
         if ctx is not None:
             bidx = ctx.batch_idx
         else:
-            bidx = (engine.draw_batch(cfg, self.kloop, iters,
+            bidx = (self.eng.draw_batch(cfg, self.kloop, iters,
                                       self.state.mk, t)
                     if cfg.batch_rows is not None else None)
         payloads = None
@@ -754,10 +847,10 @@ class ClusterRunner:
                             self.master_group.encode_round_shares(
                                 key_t, self.w2))       # (N, d, c, r)
             elif ctx is not None:
-                w_shares = np.asarray(engine.encode_round_shares_split(
+                w_shares = np.asarray(self.eng.encode_round_shares_split(
                     cfg, ctx.kq, ctx.mask_shares, self.w2))  # (N, d, c, r)
             else:
-                w_shares = np.asarray(engine.encode_round_shares(
+                w_shares = np.asarray(self.eng.encode_round_shares(
                     cfg, key_t, self.w2))
             batch_np = None if bidx is None else np.asarray(bidx)
             # round t+1's batch indices were drawn by the prefetch thread,
@@ -808,6 +901,7 @@ class ClusterRunner:
                 f"{cfg.threshold} within {self.round_timeout_s}s")
 
         streamed = False
+        alcc = self.engine_name == "alcc"
         dec_t0 = _time.perf_counter()
         if decoder is not None:
             # the streaming path never needs the batch decode matrix on a
@@ -816,6 +910,10 @@ class ClusterRunner:
             # window below, so the fallback solve is attributed honestly
             order = np.asarray(trace.responders[: cfg.threshold],
                                dtype=np.int32)
+        elif alcc:
+            # float engine: the least-squares decode picks its own row
+            # count (the ill-conditioned fallback reads ALL responders)
+            _, order, _ = self.eng.survivor_round_info(cfg, trace.responders)
         else:
             dmat, order = engine.survivor_round(cfg, trace.responders)
         if self.distributed:
@@ -825,6 +923,11 @@ class ClusterRunner:
                 parts = decoder.finish(order)
                 streamed = decoder.streamed
                 self.w2 = self._update_parts(self.w2, parts, bidx)
+            elif alcc:
+                fastest = np.stack([np.asarray(trace.payloads[int(w)],
+                                               dtype=np.float32)
+                                    for w in order])
+                self.w2 = self._update(self.w2, fastest, order, bidx)
             else:
                 # decode from the payloads the responders actually sent
                 fastest = np.stack([np.asarray(trace.payloads[int(w)],
@@ -837,6 +940,8 @@ class ClusterRunner:
             self.w2 = self._round_split(ctx.kq, ctx.mask_shares, self.w2,
                                         jnp.asarray(dmat, jnp.int32),
                                         jnp.asarray(order, jnp.int32), bidx)
+        elif alcc:
+            self.w2 = self._round(key_t, self.w2, order, bidx)
         else:
             self.w2 = self._round(key_t, self.w2,
                                   jnp.asarray(dmat, jnp.int32),
@@ -880,7 +985,7 @@ class ClusterRunner:
         with self._pipeline_scope(iters):
             for t in range(iters):
                 self.step_round(t, iters)
-        return engine._w_public(self.cfg, self.w2)
+        return self.eng._w_public(self.cfg, self.w2)
 
     def run_resilient(self, iters: int, ckpt_manager,
                       checkpoint_every: int = 5, max_retries: int = 3,
@@ -934,13 +1039,15 @@ class ClusterRunner:
             # re-derives identical masks/batches
             loop.run(state0, step_fn, start_step=0, num_steps=iters)
         self.restarts = loop.restarts
-        return engine._w_public(self.cfg, self.w2)
+        return self.eng._w_public(self.cfg, self.w2)
 
     def _reset(self):
-        self.w2 = engine._w_internal(self.cfg, self.state.w)
+        self.w2 = self.eng._w_internal(self.cfg, self.state.w)
         self.records.clear()
         self.traces.clear()
         self._last_order = None
+        if self.alcc_info is not None:
+            self.alcc_info.clear()
 
     # ------------------------------------------------------------------
     # Trace export + stats
@@ -1000,4 +1107,15 @@ class ClusterRunner:
         }
         if self.master_group is not None:
             stats["masters"] = self.master_group.group_stats()
+        if self.alcc_info:
+            # analog-decode health: conditioning of the per-round solve and
+            # the a-priori float error bound (cond * eps32 * max|eval|) —
+            # the quantities DESIGN.md §14's tolerance argument rests on
+            stats["alcc"] = {
+                "cond": wait_summary([i["cond"] for i in self.alcc_info]),
+                "abs_err_budget": wait_summary(
+                    [i["abs_err_budget"] for i in self.alcc_info]),
+                "fallbacks": {"n": float(sum(
+                    1 for i in self.alcc_info if i["fallback"]))},
+            }
         return stats

@@ -99,6 +99,8 @@ _FRAME_QUERY = 0x1C              # serving plane: client -> master request
 _FRAME_PREDICTION = 0x1D         # serving plane: master -> client answer
 _FRAME_JOIN = 0x1E               # v2: elastic membership join request
 _FRAME_EPOCH = 0x1F              # v2: membership epoch fan-out
+_FRAME_FROUND = 0x20             # v2: ALCC float round share (raw f32 blob)
+_FRAME_FRESULT = 0x21            # v2: ALCC float worker result [+ TRACE]
 
 # value tags
 _T_NONE = 0x00
@@ -364,6 +366,30 @@ def _round_frame_eligible(msg: EncodeShare) -> bool:
                     for k in ROUND_PAYLOAD_KEYS))
 
 
+def _is_f32(v) -> bool:
+    return isinstance(v, np.ndarray) and v.dtype == np.float32
+
+
+def _enc_f32nd(v: np.ndarray, out: list) -> None:
+    """float32 ndarray body for the ALCC frames: ndim, dims, raw
+    little-endian blob — no per-value tag, the frame layout implies it."""
+    a = np.ascontiguousarray(v, dtype="<f4")
+    out.append(bytes([a.ndim]) + b"".join(_enc_u32(d) for d in a.shape))
+    _append_blob(out, a)
+
+
+def _dec_f32nd(r: _Reader) -> np.ndarray:
+    shape = tuple(r.u32() for _ in range(r.u8()))
+    n = int(np.prod(shape, dtype=np.int64)) * 4
+    try:
+        arr = np.frombuffer(r.take(n), dtype="<f4").reshape(shape)
+    except WireError:
+        raise
+    except Exception as e:
+        raise WireError(f"malformed float32 body: {e}") from None
+    return arr.copy()
+
+
 def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
     """Message -> one frame as a buffer list for ``socket.sendmsg``.
 
@@ -374,7 +400,34 @@ def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
     """
     out: list = []
     if isinstance(msg, EncodeShare):
-        if version >= WIRE_V2 and _round_frame_eligible(msg):
+        if _round_frame_eligible(msg) and _is_f32(msg.payload["w_share"]):
+            # ALCC float round share: like Join/Epoch, a v2-only protocol
+            # feature — a v1 peer has no float frame to downgrade to, and
+            # silently riding the generic dict path would hide that the
+            # fleet is mixed, so fail loud at the serializer
+            if version < WIRE_V2:
+                raise WireError(
+                    "float (ALCC) round shares are a wire v2 frame; the "
+                    "whole fleet must negotiate wire v2")
+            out.append(bytes([_FRAME_FROUND]))
+            _enc_value(msg.round, out)
+            _enc_value(msg.worker, out)
+            present = 0
+            for i, k in enumerate(ROUND_PAYLOAD_KEYS):
+                if msg.payload[k] is not None:
+                    present |= 1 << i
+            out.append(bytes([present]))
+            for k in ROUND_PAYLOAD_KEYS:
+                v = msg.payload[k]
+                if v is None:
+                    continue
+                if _is_f32(v):
+                    out.append(b"\x01")
+                    _enc_f32nd(v, out)
+                else:                  # batch indices stay int32 / PACKED
+                    out.append(b"\x00")
+                    _enc_value(v, out, version)
+        elif version >= WIRE_V2 and _round_frame_eligible(msg):
             out.append(bytes([_FRAME_ROUND]))
             _enc_value(msg.round, out)
             _enc_value(msg.worker, out)
@@ -392,18 +445,33 @@ def serialize_iovec(msg: Any, version: int = WIRE_V1) -> list:
             _enc_value(msg.worker, out)
             _enc_value(msg.payload, out, version)
     elif isinstance(msg, WorkerResult):
-        # TRACE rides a v2-only frame; at v1 the field is dropped and the
-        # receiver sees a classic result — the same "older peers simply
-        # never see the new field" negotiation shape as HELLO2 (§11)
-        traced = version >= WIRE_V2 and msg.trace is not None
-        out.append(bytes([_FRAME_WORKER_RESULT_T if traced
-                          else _FRAME_WORKER_RESULT]))
-        _enc_value(msg.round, out)
-        _enc_value(msg.worker, out)
-        _enc_value(msg.compute_s, out)
-        _enc_value(msg.payload, out, version)
-        if traced:
-            _enc_value(msg.trace, out, version)
+        if _is_f32(msg.payload):
+            # ALCC float result: v2-only, mirroring the FROUND refusal
+            if version < WIRE_V2:
+                raise WireError(
+                    "float (ALCC) worker results are a wire v2 frame; the "
+                    "whole fleet must negotiate wire v2")
+            traced = msg.trace is not None
+            out.append(bytes([_FRAME_FRESULT, 1 if traced else 0]))
+            _enc_value(msg.round, out)
+            _enc_value(msg.worker, out)
+            _enc_value(msg.compute_s, out)
+            _enc_f32nd(msg.payload, out)
+            if traced:
+                _enc_value(msg.trace, out, version)
+        else:
+            # TRACE rides a v2-only frame; at v1 the field is dropped and
+            # the receiver sees a classic result — the same "older peers
+            # simply never see the new field" negotiation shape as HELLO2
+            traced = version >= WIRE_V2 and msg.trace is not None
+            out.append(bytes([_FRAME_WORKER_RESULT_T if traced
+                              else _FRAME_WORKER_RESULT]))
+            _enc_value(msg.round, out)
+            _enc_value(msg.worker, out)
+            _enc_value(msg.compute_s, out)
+            _enc_value(msg.payload, out, version)
+            if traced:
+                _enc_value(msg.trace, out, version)
     elif isinstance(msg, SubShare):
         out.append(bytes([_FRAME_SUB_SHARE]))
         _enc_value(msg.round, out)
@@ -527,6 +595,30 @@ def _decode_body(body, version: int = WIRE_VERSION) -> Any:
         payload = {k: (_dec_value(r) if present & (1 << i) else None)
                    for i, k in enumerate(ROUND_PAYLOAD_KEYS)}
         msg = EncodeShare(round=rnd, worker=worker, payload=payload)
+    elif tag == _FRAME_FROUND:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 float ROUND on a v1 stream)")
+        rnd = _dec_value(r)
+        worker = _dec_value(r)
+        present = r.u8()
+        payload = {}
+        for i, k in enumerate(ROUND_PAYLOAD_KEYS):
+            if not present & (1 << i):
+                payload[k] = None
+            elif r.u8():
+                payload[k] = _dec_f32nd(r)
+            else:
+                payload[k] = _dec_value(r)
+        msg = EncodeShare(round=rnd, worker=worker, payload=payload)
+    elif tag == _FRAME_FRESULT:
+        if version < WIRE_V2:
+            raise WireError(f"unknown frame tag 0x{tag:02x} "
+                            f"(wire v2 float result on a v1 stream)")
+        traced = r.u8()
+        msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
+                           compute_s=_dec_value(r), payload=_dec_f32nd(r),
+                           trace=_dec_value(r) if traced else None)
     elif tag == _FRAME_WORKER_RESULT:
         msg = WorkerResult(round=_dec_value(r), worker=_dec_value(r),
                            compute_s=_dec_value(r), payload=_dec_value(r))

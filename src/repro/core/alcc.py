@@ -1,0 +1,263 @@
+"""Analog Lagrange coded computing over the reals (DESIGN.md §14).
+
+The exact engine (core/lagrange.py) runs Lagrange coding over F_p: data is
+quantized, masks are uniform field elements, and any `threshold` worker
+evaluations decode the polynomial EXACTLY.  This module is the same code
+over ordinary float arithmetic — "Approximated Coded Computing" (arXiv
+2406.04747), with the analog-noise privacy framing of arXiv 2005.09532:
+
+  * the K + T interpolation points (betas) and N evaluation points (alphas)
+    are real numbers, chosen as CHEBYSHEV nodes so the Lagrange/Vandermonde
+    systems stay well-conditioned instead of blowing up like equispaced
+    points do;
+  * the T privacy masks are i.i.d. Gaussian (sigma) instead of uniform
+    field elements — any T shares look like the data convolved with
+    Gaussian noise of variance growing in sigma ((T, sigma)-analog privacy
+    rather than the exact scheme's information-theoretic T-privacy);
+  * decoding is a real least-squares solve against a Chebyshev-basis
+    Vandermonde system.  In EXACT arithmetic the masks still cancel
+    perfectly at the data points — the interpolant u satisfies
+    u(beta_k) = X_k by construction regardless of what the masks are — so
+    the only decode error is float roundoff amplified by the conditioning
+    of the solve and by the magnitude the masks inject (sigma).  That is
+    the precision/privacy trade-off: larger sigma = stronger privacy =
+    proportionally larger decode error, quantified per round by
+    ``error_budget``.
+
+Because there is no prime field, the worker function f needs no polynomial
+degree gymnastics to stay under an overflow bound, and nonlinearities only
+need to be polynomial *per coded phase* — the master can apply arbitrary
+float nonlinearities (gelu, softmax) between phases.  That is what unlocks
+the MLP (cluster/alcc_mlp.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+_EPS32 = float(np.finfo(np.float32).eps)
+
+
+def recovery_threshold(K: int, T: int, r: int) -> int:
+    """Minimum responders for the degree-(2r+1) logistic round: same
+    (2r+1)(K+T-1)+1 count as the exact scheme — the polynomial degree
+    argument is field-agnostic."""
+    return (2 * r + 1) * (K + T - 1) + 1
+
+
+def degree_threshold(K: int, T: int, deg_f: int) -> int:
+    """Responders needed for an arbitrary degree-``deg_f`` worker poly."""
+    return deg_f * (K + T - 1) + 1
+
+
+def chebyshev_nodes(n: int) -> np.ndarray:
+    """n Chebyshev first-kind nodes cos(pi(2i+1)/2n) on (-1, 1), float64.
+
+    Returned in ascending order.  Near-optimal interpolation points: the
+    Lebesgue constant grows like log n instead of 2^n for equispaced
+    points, which is the whole reason the float decode is usable at all.
+    """
+    i = np.arange(n, dtype=np.float64)
+    return np.sort(np.cos(np.pi * (2.0 * i + 1.0) / (2.0 * n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogScheme:
+    """Static data of one real-valued Lagrange code.
+
+    Mirrors lagrange.CodingScheme's surface (betas / alphas /
+    encode_matrix / decode) with real points and a least-squares decode.
+
+    ``beta_scale`` shrinks the beta nodes toward 0 so they interleave
+    strictly inside the alpha spread without colliding; ``cond_max`` is
+    the square-solve conditioning ceiling beyond which ``decode`` falls
+    back to an overdetermined least-squares over ALL received responses.
+    """
+    N: int                   # workers / shares
+    K: int                   # parallelization (data split)
+    T: int                   # analog privacy masks
+    sigma: float = 1.0       # mask std dev (privacy knob)
+    beta_scale: float = 0.45
+    cond_max: float = 1e8
+
+    def __post_init__(self):
+        assert self.K >= 1 and self.T >= 0 and self.N >= self.K + self.T, (
+            f"need N >= K+T, got N={self.N} K={self.K} T={self.T}")
+        assert self.sigma >= 0.0 and 0.0 < self.beta_scale < 1.0
+
+    @functools.cached_property
+    def alphas(self) -> np.ndarray:
+        """N evaluation points: Chebyshev nodes on (-1, 1)."""
+        return chebyshev_nodes(self.N)
+
+    @functools.cached_property
+    def betas(self) -> np.ndarray:
+        """K+T interpolation points: scaled Chebyshev nodes, disjoint from
+        the alphas (checked — Chebyshev sets at different orders can
+        coincide at 0 when both orders are odd)."""
+        b = self.beta_scale * chebyshev_nodes(self.K + self.T)
+        both = np.concatenate([b, self.alphas])
+        assert np.min(np.diff(np.sort(both))) > 1e-12, (
+            "alpha/beta evaluation points collide; pick another beta_scale")
+        return b
+
+    @functools.cached_property
+    def encode_matrix(self) -> np.ndarray:
+        """U (K+T, N) float64: U[j, i] = L_j(alpha_i), the Lagrange basis
+        of the betas evaluated at the alphas — shares = U.T @ stacked."""
+        return lagrange_basis(self.alphas, self.betas)
+
+    def mask_points(self) -> np.ndarray:
+        """The T beta nodes carrying masks (the last T, like the field
+        scheme's Z_i rows)."""
+        return self.betas[self.K:]
+
+    # -- decode -----------------------------------------------------------
+
+    def decode_matrix(self, survivors, deg_f: int
+                      ) -> tuple[np.ndarray, dict]:
+        """C (S_used, K) float64 + info so that decoded[k] = C[:, k] @ results.
+
+        Square path: the first ``degree_threshold`` survivors give a square
+        Chebyshev-Vandermonde system A c = h(alpha) for the coefficients of
+        the degree-deg_f*(K+T-1) product polynomial h; the decode matrix is
+        B A^{-1} with B the Chebyshev-Vandermonde at the K data betas.
+
+        Fallback path: when cond(A_square) exceeds ``cond_max`` (clustered
+        survivor nodes — the ill-conditioned large-N regime), ALL S received
+        responses form an overdetermined system solved via pseudo-inverse,
+        which averages the roundoff over the extra rows.
+
+        info: {"cond": float, "fallback": bool, "rows": int, "need": int}.
+        ``cond`` is always the condition number of the system actually
+        solved.
+        """
+        surv = tuple(int(w) for w in np.asarray(survivors).ravel())
+        return _decode_matrix_cached(self, surv, int(deg_f))
+
+    def decode(self, results: np.ndarray, survivors, deg_f: int
+               ) -> tuple[np.ndarray, dict]:
+        """Recover {h(beta_k)}_{k<K} from survivor evaluations.
+
+        results: (S, *res_shape) float evaluations h(alpha_i) in survivor
+        order; len(survivors) >= degree_threshold(K, T, deg_f).
+        Returns ((K, *res_shape) float64, info) — info additionally carries
+        ``abs_err_budget``, the a-priori decode error bound
+        cond * eps32 * max|results| (float32 worker arithmetic dominates).
+        """
+        results = np.asarray(results, dtype=np.float64)
+        C, info = self.decode_matrix(survivors, deg_f)
+        rows = info["rows"]
+        flat = results[:rows].reshape(rows, -1)
+        out = (C.T @ flat).reshape(self.K, *results.shape[1:])
+        info = dict(info)
+        mx = float(np.max(np.abs(results[:rows]))) if flat.size else 0.0
+        info["abs_err_budget"] = error_budget(info["cond"], mx)
+        return out, info
+
+    def decode_sum(self, results: np.ndarray, survivors, deg_f: int
+                   ) -> tuple[np.ndarray, dict]:
+        """sum_k h(beta_k) — the aggregated-gradient read — in one pass."""
+        decoded, info = self.decode(results, survivors, deg_f)
+        return decoded.sum(axis=0), info
+
+
+def lagrange_basis(at: np.ndarray, nodes: np.ndarray) -> np.ndarray:
+    """L (len(nodes), len(at)) float64: L[j, i] = prod_{l!=j}
+    (at_i - nodes_l) / (nodes_j - nodes_l)."""
+    at = np.asarray(at, np.float64)
+    nodes = np.asarray(nodes, np.float64)
+    n = nodes.shape[0]
+    out = np.empty((n, at.shape[0]), np.float64)
+    for j in range(n):
+        others = np.delete(nodes, j)
+        num = np.prod(at[:, None] - others[None, :], axis=1)
+        den = np.prod(nodes[j] - others)
+        out[j] = num / den
+    return out
+
+
+def encode(scheme: AnalogScheme, parts: np.ndarray, masks: np.ndarray
+           ) -> np.ndarray:
+    """Encode K stacked parts + T Gaussian masks into N float shares.
+
+    parts: (K, *shape); masks: (T, *shape).  Returns (N, *shape) float64 —
+    the degree-(K+T-1) interpolant through (betas, [parts; masks])
+    evaluated at the alphas.  Callers ship float32 to workers; the float64
+    encode keeps the master-side roundoff below the float32 quantum.
+    """
+    parts = np.asarray(parts, np.float64)
+    if scheme.T:
+        stacked = np.concatenate(
+            [parts, np.asarray(masks, np.float64)], axis=0)
+    else:
+        stacked = parts
+    flat = stacked.reshape(scheme.K + scheme.T, -1)
+    shares = scheme.encode_matrix.T @ flat                # (N, prod(shape))
+    return shares.reshape(scheme.N, *parts.shape[1:])
+
+
+def encode_replicated(scheme: AnalogScheme, value: np.ndarray,
+                      masks: np.ndarray) -> np.ndarray:
+    """Encode ONE value replicated at every data point (the weight encode:
+    v(beta_k) = W for all k <= K, Gaussian at the mask points)."""
+    parts = np.broadcast_to(np.asarray(value, np.float64)[None],
+                            (scheme.K, *np.shape(value)))
+    return encode(scheme, parts, masks)
+
+
+def draw_masks(key, T: int, part_shape: tuple[int, ...],
+               sigma: float) -> np.ndarray:
+    """T i.i.d. Gaussian mask matrices, std ``sigma``, float64.
+
+    Drawn through jax.random so rounds are replayable from (kloop, t) keys
+    exactly like the field engine's uniform masks; any value works for
+    correctness (masks cancel at the betas in exact arithmetic), sigma
+    only sets the privacy level and the roundoff it costs.
+    """
+    if T == 0:
+        return np.zeros((0, *part_shape), np.float64)
+    import jax
+    z = jax.random.normal(key, (T, *part_shape), dtype=np.float32)
+    return np.asarray(z, np.float64) * float(sigma)
+
+
+def error_budget(cond: float, max_abs: float, eps: float = _EPS32) -> float:
+    """A-priori absolute decode-error bound: cond * eps * max|evaluation|.
+
+    Worker arithmetic is float32, so each returned evaluation carries
+    relative error ~eps32 scaled by its magnitude (which the Gaussian
+    masks inflate by O(sigma)); the least-squares solve amplifies it by at
+    most the system's condition number.  wait_stats surfaces the per-round
+    max of this bound as ``alcc.abs_err_budget``.
+    """
+    return float(cond) * float(eps) * float(max_abs)
+
+
+@functools.lru_cache(maxsize=256)
+def _decode_matrix_cached(scheme: AnalogScheme, surv: tuple[int, ...],
+                          deg_f: int) -> tuple[np.ndarray, dict]:
+    from numpy.polynomial import chebyshev
+
+    deg = deg_f * (scheme.K + scheme.T - 1)
+    need = deg + 1
+    assert len(surv) >= need, (
+        f"need {need} survivors for deg(f)={deg_f}, got {len(surv)}")
+    B = chebyshev.chebvander(scheme.betas[: scheme.K], deg)   # (K, deg+1)
+    A_sq = chebyshev.chebvander(scheme.alphas[list(surv[:need])], deg)
+    cond = float(np.linalg.cond(A_sq))
+    if cond <= scheme.cond_max or len(surv) == need:
+        # h(betas) = B A^{-1} h(alphas): solve A^T C = B^T once per
+        # survivor pattern (cached), then every round is one matmul
+        C = np.linalg.solve(A_sq.T, B.T).T if cond < 1e15 else B @ np.linalg.pinv(A_sq)
+        return C.T, {"cond": cond, "fallback": False,
+                     "rows": need, "need": need}
+    # ill-conditioned square system: overdetermined least-squares over all
+    # received responses (deterministic given the survivor tuple)
+    A_all = chebyshev.chebvander(scheme.alphas[list(surv)], deg)
+    cond_all = float(np.linalg.cond(A_all))
+    C = B @ np.linalg.pinv(A_all)
+    return C.T, {"cond": cond_all, "fallback": True,
+                 "rows": len(surv), "need": need}

@@ -12,6 +12,41 @@ The protocol is a pipeline of four composable stages, one module each:
 This package re-exports the full public API, so ``from repro.core import
 protocol`` keeps working exactly as it did when protocol was one module.
 See DESIGN.md §4-§6 for the stage contracts and backend matrix.
+
+Stage-interface hooks (the surface `cluster/runner.py` drives)
+--------------------------------------------------------------
+
+The cluster runtime never computes; a coded-arithmetic BACKEND is any
+module exposing these hooks (registered in ``ClusterRunner.ENGINES``),
+and ``alcc_engine.py`` in this package implements the same surface over
+real-valued ALCC coding (DESIGN.md §14):
+
+  setup(cfg, key, x, y) -> State
+      one-time master-side preparation: pad/quantize (exact) or
+      real-normalize (alcc) the dataset, encode it into per-worker
+      shares (``State.x_shares``), precompute X^T y.
+  encode_round_shares(cfg, key, w2) -> (N, d, c) shares
+      round-t weight broadcast: the current weights encoded with FRESH
+      masks drawn from the (kloop, t) round key — replayable from the
+      key alone, which is what makes ``train_reference`` possible.
+  round_fn(cfg, state, eta, ...) -> run(key, w2, survivors..., bidx)
+      one full simulated round (encode -> worker compute -> decode ->
+      SGD step) as a jit-friendly closure; the sim backend's unit of
+      bit-exact replay.
+  update_fn(cfg, state, eta, ...) -> update(w2, results..., bidx)
+      the decode + step half only, for the socket backend where worker
+      results arrive as real bytes instead of being computed in-process.
+  round_fn_split / update_from_parts_fn
+      the §9 pipelined variants (mask-row prefetch, streaming decode);
+      exact-engine only — the alcc module's stubs refuse at call time.
+  survivor_round(cfg, survivors) / survivor_round_info(...)
+      responder trace -> whatever the decode needs (exact: an int32
+      decode matrix; alcc: the responder ORDER plus a conditioning info
+      dict — float decode matrices must not ride the int32 plumbing).
+
+Engines differ in ARITHMETIC, not shape: the runner moves opaque
+payloads between the same hooks, so `--engine {exact,alcc}` is a pure
+backend swap (per-backend guarantees in README's backend matrix).
 """
 from repro.core.protocol.config import CPMLConfig
 from repro.core.protocol.encode import (

@@ -1,0 +1,573 @@
+"""ALCC engine: the float backend behind the exact engine's stage hooks.
+
+Same hook surface as engine.py — ``setup`` / ``round_fn`` / ``update_fn`` /
+``encode_round_shares`` / ``round_key`` / ``draw_batch`` / ``survivor_round``
+/ ``train_reference`` — with three semantic changes (DESIGN.md §14):
+
+  * no quantization: the dataset, weights and the sigmoid surrogate's
+    coefficients stay float (the surrogate itself is shared with the exact
+    engine — ``sigmoid_poly.fit_sigmoid`` — so an exact-vs-ALCC comparison
+    at equal (K, T, r) isolates the coding arithmetic, not the model);
+  * privacy masks are Gaussian (core/alcc.py) and the decode is a real
+    least-squares solve, so reconstruction is approximate: every decode
+    returns a per-round info dict (condition number, fallback flag,
+    a-priori error budget) which drivers surface in ``wait_stats["alcc"]``;
+  * "bit-identical" verification becomes two-tier: a SIMULATED run replays
+    bit-for-bit through ``train_reference`` (the sim round and the replay
+    are the same deterministic numpy calls on the same inputs), while a
+    SOCKET run replays to within the decode error budget (real workers
+    evaluate under XLA, whose float32 summation order can differ from the
+    replay's BLAS einsum in the last bits) — and convergence is judged
+    against the *uncoded* ``float_oracle``.
+
+The per-round dataflow (logistic): master encodes W replicated at the K
+data points + T Gaussian masks; worker i computes the degree-(2r+1)
+polynomial f(X̃_i, W̃_i) = X̃_iᵀ ĝ(X̃_i W̃_i) in float32; any
+(2r+1)(K+T-1)+1 responses least-squares-decode to the per-part
+sub-gradients X̄_kᵀ ĝ(X̄_k W).
+
+The MLP half (``mlp_*``) is what the exact engine structurally cannot do:
+two degree-2 coded phases per step (forward X·W1, backward X̄ᵀδ1) with the
+gelu/softmax nonlinearities applied by the master IN THE CLEAR between
+them, stitched so the result equals jax.grad of the plaintext
+``models/layers.gelu_mlp`` loss up to decode noise (cluster/alcc_mlp.py
+drives it through the scheduler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alcc, sigmoid_poly
+from repro.core.protocol import engine as _exact
+
+# float-side helpers shared verbatim with the exact engine (none of these
+# touch the field): step size, losses, PRNG schedule, w shape conventions.
+lipschitz_eta = _exact.lipschitz_eta
+sigmoid = _exact.sigmoid
+loss_and_accuracy = _exact.loss_and_accuracy
+multiclass_loss_and_accuracy = _exact.multiclass_loss_and_accuracy
+round_key = _exact.round_key
+draw_batch = _exact.draw_batch
+_w_internal = _exact._w_internal
+_w_public = _exact._w_public
+_eval_metrics = _exact._eval_metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class ALCCConfig:
+    """Static parameters of one ALCC deployment (the float CPMLConfig).
+
+    The quantization scales (lx/lw/lc/p) are gone; in their place:
+    ``sigma`` — Gaussian mask std, the privacy knob whose cost is decode
+    roundoff; ``beta_scale``/``cond_max`` — decode conditioning knobs
+    (core/alcc.py).  N/K/T/r/c/batch_rows mean exactly what they mean in
+    CPMLConfig, and the logistic recovery threshold is the same
+    (2r+1)(K+T-1)+1.
+    """
+    N: int
+    K: int
+    T: int
+    r: int = 1
+    c: int = 1
+    sigma: float = 1.0
+    batch_rows: int | None = None
+    beta_scale: float = 0.45
+    cond_max: float = 1e8
+
+    def __post_init__(self):
+        need = alcc.recovery_threshold(self.K, self.T, self.r)
+        assert self.N >= need, (
+            f"N={self.N} < recovery threshold {need} for "
+            f"(K={self.K}, T={self.T}, r={self.r})")
+        assert self.c >= 1
+        assert self.batch_rows is None or self.batch_rows >= 1
+
+    @property
+    def threshold(self) -> int:
+        """Logistic-round recovery threshold (deg f = 2r+1)."""
+        return alcc.recovery_threshold(self.K, self.T, self.r)
+
+    @property
+    def mlp_threshold(self) -> int:
+        """Per-phase MLP threshold: both coded phases are bilinear
+        (deg 2), so 2(K+T-1)+1 responses decode — LESS than the logistic
+        round needs at the same (K, T)."""
+        return alcc.degree_threshold(self.K, self.T, 2)
+
+    @property
+    def scheme(self) -> alcc.AnalogScheme:
+        return _scheme(self.N, self.K, self.T, self.sigma,
+                       self.beta_scale, self.cond_max)
+
+
+@functools.lru_cache(maxsize=64)
+def _scheme(N, K, T, sigma, beta_scale, cond_max) -> alcc.AnalogScheme:
+    # one shared instance per parameter tuple so the cached_property
+    # matrices and the decode-matrix lru survive across config copies
+    return alcc.AnalogScheme(N=N, K=K, T=T, sigma=sigma,
+                             beta_scale=beta_scale, cond_max=cond_max)
+
+
+@dataclasses.dataclass
+class ALCCState:
+    """Float mirror of CPMLState (same field names; runner.py reads
+    x_shares / xq_real / mk / m / w through either)."""
+    w: jax.Array                # (d,) or (d, c) float32
+    x_shares: np.ndarray        # (N, mk, d) float32 coded dataset
+    xty: np.ndarray             # (d, c) float64 full-data X̄ᵀY
+    m: int
+    mk: int
+    xq_real: jax.Array          # (m_padded, d) float32 plaintext (metrics)
+    xq_parts: np.ndarray        # (K, mk, d) float64 split plaintext
+    y: jax.Array                # (m_padded,) padded labels
+    y_parts: np.ndarray         # (K, mk, c) float64 split targets
+
+
+def _pad_parts(K: int, x: np.ndarray) -> tuple[np.ndarray, int]:
+    """Zero-pad rows to a multiple of K and split: (K, mk, d), mk."""
+    m, d = x.shape
+    mk = -(-m // K)
+    x_pad = np.zeros((mk * K, d), np.float64)
+    x_pad[:m] = x
+    return x_pad.reshape(K, mk, d), mk
+
+
+def setup(cfg: ALCCConfig, key: jax.Array, x, y, w0=None,
+          dataset_encoder=None) -> ALCCState:
+    """Encode the float dataset ONCE + precompute master-side context.
+
+    Mirrors engine.setup minus quantization: rows are zero-padded to K·mk
+    (zero rows contribute nothing to X̄ᵀ·anything, so padding never skews a
+    gradient), split into K parts, and encoded with T fresh Gaussian masks
+    drawn from the setup key.  Shares are shipped float32 (worker
+    arithmetic is float32); the encode itself runs float64.
+    """
+    assert dataset_encoder is None, "sharded masters are exact-engine only"
+    kx, _ = jax.random.split(key)
+    x = np.asarray(x, np.float64)
+    m, d = x.shape
+    parts, mk = _pad_parts(cfg.K, x)
+    masks = alcc.draw_masks(kx, cfg.T, (mk, d), cfg.sigma)
+    x_shares = alcc.encode(cfg.scheme, parts, masks).astype(np.float32)
+    y = np.asarray(y)
+    y_pad = np.concatenate([y, np.zeros(mk * cfg.K - m, y.dtype)])
+    targets = np.asarray(_exact._targets(cfg, jnp.asarray(y_pad)),
+                         np.float64)                       # (m_padded, c)
+    x_pad = parts.reshape(mk * cfg.K, d)
+    xty = x_pad.T @ targets                                # (d, c) float64
+    if w0 is None:
+        w = jnp.zeros((d,) if cfg.c == 1 else (d, cfg.c), jnp.float32)
+    else:
+        w = jnp.asarray(w0, jnp.float32)
+    return ALCCState(w=w, x_shares=x_shares, xty=xty, m=m, mk=mk,
+                     xq_real=jnp.asarray(x_pad, jnp.float32),
+                     xq_parts=parts, y=jnp.asarray(y_pad),
+                     y_parts=targets.reshape(cfg.K, mk, cfg.c))
+
+
+def poly_coeffs(cfg: ALCCConfig) -> np.ndarray:
+    """The REAL sigmoid-surrogate coefficients ĝ workers evaluate —
+    sigmoid_poly.fit_sigmoid's least-squares fit, unquantized (the same
+    fit the exact engine rounds to the field)."""
+    return np.asarray(sigmoid_poly.fit_sigmoid(cfg.r), np.float32)
+
+
+def poly_eval(cbar, z):
+    """Horner evaluation of the ascending-coefficient surrogate; works on
+    numpy and jax arrays alike (shared by the sim path, the real worker's
+    jitted fn, and the float oracle)."""
+    out = z * 0 + cbar[-1]
+    for c in cbar[-2::-1]:
+        out = out * z + c
+    return out
+
+
+def worker_eval(cbar, xb, w):
+    """The ALCC worker function: f(X̃, W̃) = X̃ᵀ ĝ(X̃ W̃), float32.
+
+    Degree 2r+1 in the coded inputs jointly, hence the recovery threshold.
+    Evaluated on coded shares by real workers (launch/cpml_worker.py, jitted)
+    and by the vectorized sim path below — both float32, agreeing to within
+    a few ulps (XLA and BLAS may sum a dot product in different orders).
+    """
+    return xb.T @ poly_eval(cbar, xb @ w)
+
+
+# ---------------------------------------------------------------------------
+# Decode + gradient step (master side, float64)
+# ---------------------------------------------------------------------------
+
+def survivor_round_info(cfg: ALCCConfig, surv
+                        ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Responder set -> (decode matrix (rows, K) float64, order, info).
+
+    Unlike the exact scheme, the rows actually used depend on the
+    conditioning: the square path consumes exactly ``threshold``
+    responders, the ill-conditioned fallback consumes ALL of them
+    (core/alcc.py).  ``order`` lists precisely the responders the decode
+    will read, in arrival order.
+    """
+    surv = np.arange(cfg.N) if surv is None else np.asarray(surv)
+    assert len(surv) >= cfg.threshold, (
+        f"{len(surv)} survivors < recovery threshold {cfg.threshold}")
+    dmat, info = cfg.scheme.decode_matrix(surv, 2 * cfg.r + 1)
+    return dmat, surv[: info["rows"]].astype(np.int32), info
+
+
+def survivor_round(cfg: ALCCConfig, surv) -> tuple[np.ndarray, np.ndarray]:
+    """Signature-parity wrapper over survivor_round_info (engine.py's
+    (dmat, order) contract)."""
+    dmat, order, _ = survivor_round_info(cfg, surv)
+    return dmat, order
+
+
+def _batch_scale(cfg: ALCCConfig, state: ALCCState, eta: float,
+                 batch_idx) -> tuple[np.ndarray, float]:
+    """(X̄ᵀY over this round's rows, eta / real-row count) — the float
+    twin of engine._gradient_step's normalization: padded rows are all
+    zero and must not shrink the step."""
+    if batch_idx is None:
+        return state.xty, eta / state.m
+    bidx = np.asarray(batch_idx)
+    xqb = state.xq_parts[:, bidx]                    # (K, b, d)
+    yb = state.y_parts[:, bidx]                      # (K, b, c)
+    xty = np.einsum("kbd,kbc->dc", xqb, yb)
+    part0 = np.arange(cfg.K)[:, None] * state.mk
+    real = int(np.sum((bidx[None, :] + part0) < state.m))
+    return xty, eta / max(real, 1)
+
+
+def _decode_and_step(cfg: ALCCConfig, state: ALCCState, eta: float,
+                     w2, fastest: np.ndarray, order: np.ndarray,
+                     batch_idx, info_sink) -> jax.Array:
+    """Least-squares decode of the responders' float results + GD step.
+
+    fastest: (R, d, c) float32 evaluations in ``order``.  Decode runs in
+    float64; the per-round info (cond / fallback / abs_err_budget /
+    observed max |evaluation|) lands in ``info_sink`` for wait_stats.
+    """
+    xg, info = cfg.scheme.decode_sum(fastest, order, 2 * cfg.r + 1)
+    xty, scale = _batch_scale(cfg, state, eta, batch_idx)
+    w_new = np.asarray(w2, np.float64) - scale * (xg - xty)
+    if info_sink is not None:
+        info_sink.append(info)
+    return jnp.asarray(w_new, jnp.float32)
+
+
+def round_fn(cfg: ALCCConfig, state: ALCCState, eta: float,
+             info_sink: list | None = None) -> Callable[..., jax.Array]:
+    """Per-round hook, simulated compute: ``run(key, w2, order,
+    batch_idx=None) -> w2``.
+
+    Same role as engine.round_fn with the decode matrix replaced by the
+    responder ORDER (the float decode resolves its own cached
+    least-squares matrix, whose row count depends on conditioning).  The
+    worker evaluations are computed here in float32 exactly as a real
+    worker would, so sim and socket rounds agree to the last bit.
+    """
+    cbar = poly_coeffs(cfg)
+
+    def run(key, w2, order, batch_idx=None) -> jax.Array:
+        w_shares = encode_round_shares(cfg, key, w2)     # (N, d, c) f32
+        order_np = np.asarray(order, np.int64)
+        xb = (state.x_shares if batch_idx is None
+              else state.x_shares[:, np.asarray(batch_idx)])
+        xs = xb[order_np].astype(np.float32)             # (R, b, d)
+        ws = w_shares[order_np]                          # (R, d, c)
+        z = np.einsum("rbd,rdc->rbc", xs, ws).astype(np.float32)
+        g = poly_eval(cbar, z).astype(np.float32)
+        fastest = np.einsum("rbd,rbc->rdc", xs, g).astype(np.float32)
+        return _decode_and_step(cfg, state, eta, w2, fastest, order_np,
+                                batch_idx, info_sink)
+
+    return run
+
+
+def update_fn(cfg: ALCCConfig, state: ALCCState, eta: float,
+              info_sink: list | None = None) -> Callable[..., jax.Array]:
+    """Decode-and-update hook for results computed ELSEWHERE:
+    ``run(w2, fastest, order, batch_idx=None) -> w2`` — fastest are the
+    (R, d, c) float32 payloads of the responders in arrival order, e.g.
+    received over the socket transport."""
+
+    def run(w2, fastest, order, batch_idx=None) -> jax.Array:
+        return _decode_and_step(cfg, state, eta, w2,
+                                np.asarray(fastest, np.float32),
+                                np.asarray(order, np.int64),
+                                batch_idx, info_sink)
+
+    return run
+
+
+def round_fn_split(cfg, state, eta, info_sink=None):
+    """Pipelined encode is exact-engine only (DESIGN.md §9 relies on the
+    exact split of the field matmul); ALCC refuses at call time."""
+    def run(*a, **k):
+        raise RuntimeError("pipeline modes are exact-engine only")
+    return run
+
+
+def update_from_parts_fn(cfg, state, eta, info_sink=None):
+    """Streaming decode is exact-engine only; ALCC refuses at call time."""
+    def run(*a, **k):
+        raise RuntimeError("streaming decode is exact-engine only")
+    return run
+
+
+def encode_round_shares(cfg: ALCCConfig, key, w2) -> np.ndarray:
+    """Round-t weight shares (N, d, c) float32: W replicated at the K data
+    betas + T FRESH Gaussian masks (fresh per round — reusing a mask
+    across rounds would let two rounds' shares cancel the data out)."""
+    masks = alcc.draw_masks(key, cfg.T, tuple(np.shape(w2)), cfg.sigma)
+    return alcc.encode_replicated(
+        cfg.scheme, np.asarray(w2, np.float64), masks).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Training drivers: reference loop + uncoded float oracle
+# ---------------------------------------------------------------------------
+
+def train_reference(cfg: ALCCConfig, key, x, y, iters: int,
+                    eta: float | None = None,
+                    survivor_fn: Callable[[int], np.ndarray] | None = None,
+                    eval_every: int = 0, info_sink: list | None = None):
+    """Per-step reference loop over the same hooks (cf. engine.train_reference).
+
+    Replaying a ClusterRunner responder trace through this reproduces the
+    run's weights exactly — every float op (encode, worker eval, decode)
+    is the same deterministic numpy/jax call on the same inputs.  Returns
+    (w, history).
+    """
+    ksetup, kloop = jax.random.split(jnp.asarray(key))
+    state = setup(cfg, ksetup, x, y)
+    if eta is None:
+        eta = lipschitz_eta(state.xq_real)
+    run = round_fn(cfg, state, eta, info_sink=info_sink)
+    w2 = _w_internal(cfg, state.w)
+    history: list[dict[str, float]] = []
+    for t in range(iters):
+        surv = survivor_fn(t) if survivor_fn is not None else None
+        _, order, _ = survivor_round_info(cfg, surv)
+        bidx = (draw_batch(cfg, kloop, iters, state.mk, t)
+                if cfg.batch_rows is not None else None)
+        w2 = run(round_key(kloop, t), w2, order, bidx)
+        if eval_every and (t + 1) % eval_every == 0:
+            l, a = _eval_metrics(cfg, w2, state.xq_real[: state.m],
+                                 state.y[: state.m])
+            history.append({"iter": t + 1, "loss": float(l), "acc": float(a)})
+    return _w_public(cfg, w2), history
+
+
+def float_oracle(cfg: ALCCConfig, key, x, y, iters: int,
+                 eta: float | None = None):
+    """UNCODED float GD with the same surrogate + batch schedule.
+
+    The convergence oracle for ALCC acceptance: identical model (ĝ from
+    fit_sigmoid), identical per-round batches (same kloop stream),
+    identical step sizes — the ONLY difference from a coded run is that
+    gradients are computed directly instead of decoded, so
+    |w_alcc - w_oracle| measures pure coding/decoding float error.
+    """
+    ksetup, kloop = jax.random.split(jnp.asarray(key))
+    state = setup(cfg, ksetup, x, y)   # same padding/xty; coding unused
+    if eta is None:
+        eta = lipschitz_eta(state.xq_real)
+    cbar = poly_coeffs(cfg)
+    w2 = np.asarray(_w_internal(cfg, state.w), np.float64)
+    for t in range(iters):
+        bidx = (np.asarray(draw_batch(cfg, kloop, iters, state.mk, t))
+                if cfg.batch_rows is not None else None)
+        xqb = (state.xq_parts if bidx is None
+               else state.xq_parts[:, bidx]).astype(np.float32)
+        z = np.einsum("kbd,dc->kbc", xqb, w2.astype(np.float32))
+        g = poly_eval(cbar, z.astype(np.float32)).astype(np.float32)
+        xg = np.einsum("kbd,kbc->dc", xqb, g).astype(np.float64)
+        xty, scale = _batch_scale(cfg, state, eta, bidx)
+        w2 = w2 - scale * (xg - xty)
+    return _w_public(cfg, jnp.asarray(w2, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MLP under ALCC: two degree-2 coded phases per step (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ALCCMLPState:
+    """One gelu-MLP training run's master-side state."""
+    w1: jax.Array               # (d, hidden) float32
+    w2: jax.Array               # (hidden, c) float32
+    x_shares: np.ndarray        # (N, mk, d) float32 coded dataset
+    xq_parts: np.ndarray        # (K, mk, d) float64 plaintext parts
+    y_parts: np.ndarray         # (K, mk, c) float64 one-hot targets
+    xq_real: jax.Array          # (m_padded, d) float32 (metrics)
+    y: jax.Array                # (m_padded,) labels
+    m: int
+    mk: int
+
+
+def mlp_setup(cfg: ALCCConfig, key, x, y, hidden: int) -> ALCCMLPState:
+    """Encode the dataset once + init the two dense layers.
+
+    cfg.c must be >= 2 (softmax cross-entropy over c classes); cfg.r is
+    unused — both coded phases are degree 2.
+    """
+    assert cfg.c >= 2, "the ALCC MLP trains a softmax head; need c >= 2"
+    kx, kw1, kw2 = jax.random.split(key, 3)
+    x = np.asarray(x, np.float64)
+    m, d = x.shape
+    parts, mk = _pad_parts(cfg.K, x)
+    masks = alcc.draw_masks(kx, cfg.T, (mk, d), cfg.sigma)
+    x_shares = alcc.encode(cfg.scheme, parts, masks).astype(np.float32)
+    y = np.asarray(y)
+    y_pad = np.concatenate([y, np.zeros(mk * cfg.K - m, y.dtype)])
+    onehot = np.asarray(jax.nn.one_hot(y_pad.astype(np.int32), cfg.c),
+                        np.float64)
+    w1 = jax.random.normal(kw1, (d, hidden), jnp.float32) / np.sqrt(d)
+    w2 = jax.random.normal(kw2, (hidden, cfg.c), jnp.float32) / np.sqrt(hidden)
+    return ALCCMLPState(
+        w1=w1, w2=w2, x_shares=x_shares, xq_parts=parts,
+        y_parts=onehot.reshape(cfg.K, mk, cfg.c),
+        xq_real=jnp.asarray(parts.reshape(mk * cfg.K, d), jnp.float32),
+        y=jnp.asarray(y_pad), m=m, mk=mk)
+
+
+def mlp_row_mask(cfg: ALCCConfig, state: ALCCMLPState, batch_idx
+                 ) -> np.ndarray:
+    """(K, b) 1.0 where part-k row batch_idx[j] is a REAL sample (global
+    row k·mk + idx < m), 0.0 on the zero padding — the loss normalizer."""
+    rows = (np.arange(state.mk) if batch_idx is None
+            else np.asarray(batch_idx))
+    part0 = np.arange(cfg.K)[:, None] * state.mk
+    return ((rows[None, :] + part0) < state.m).astype(np.float32)
+
+
+@functools.partial(jax.jit)
+def _mlp_middle(z1, w2, yb, mask):
+    """The in-the-clear middle of one MLP step, from decoded Z1 = X·W1.
+
+    z1 (n, h), yb (n, c) one-hot, mask (n,) real-row indicator.  Returns
+    (gw2, dz1, loss, acc) where dz1 is exactly the VJP of the masked
+    softmax-CE loss of gelu(z1) @ w2 — the same chain jax.grad walks
+    through layers.gelu_mlp, so stitching X̄ᵀ dz1 (phase B) onto it yields
+    the oracle's W1 gradient up to decode noise.
+    """
+    h, vjp_gelu = jax.vjp(jax.nn.gelu, z1)
+    logits = h @ w2
+    n = jnp.maximum(mask.sum(), 1.0)
+    p = jax.nn.softmax(logits)
+    delta2 = (p - yb) * mask[:, None] / n
+    gw2 = h.T @ delta2
+    (dz1,) = vjp_gelu(delta2 @ w2.T)
+    logp = jax.nn.log_softmax(logits)
+    loss = -((yb * logp).sum(axis=-1) * mask).sum() / n
+    acc = ((jnp.argmax(logits, axis=-1) == jnp.argmax(yb, axis=-1))
+           * mask).sum() / n
+    return gw2, dz1, loss, acc
+
+
+def mlp_middle(cfg: ALCCConfig, state: ALCCMLPState, z1_parts, batch_idx):
+    """Decoded forward activations -> (gw2, delta1 parts, metrics).
+
+    z1_parts: (K, b, h) decoded per-part X̄_k[batch] @ W1.  The returned
+    delta1 (K, b, h) is what phase B encodes (per-part values this time,
+    like the dataset — NOT replicated) so the coded backward pass can
+    read off sum_k X̄_kᵀ δ1_k.
+    """
+    K, b, h = np.shape(z1_parts)
+    mask = mlp_row_mask(cfg, state, batch_idx).reshape(K * b)
+    yb = (state.y_parts if batch_idx is None
+          else state.y_parts[:, np.asarray(batch_idx)])
+    gw2, dz1, loss, acc = _mlp_middle(
+        jnp.asarray(np.reshape(z1_parts, (K * b, h)), jnp.float32),
+        state.w2, jnp.asarray(yb.reshape(K * b, -1), jnp.float32),
+        jnp.asarray(mask))
+    return (gw2, np.asarray(dz1, np.float64).reshape(K, b, h),
+            float(loss), float(acc))
+
+
+def mlp_encode_forward(cfg: ALCCConfig, key, w1) -> np.ndarray:
+    """Phase-A shares (N, d, h) float32: W1 replicated + fresh masks."""
+    masks = alcc.draw_masks(key, cfg.T, tuple(np.shape(w1)), cfg.sigma)
+    return alcc.encode_replicated(
+        cfg.scheme, np.asarray(w1, np.float64), masks).astype(np.float32)
+
+
+def mlp_encode_backward(cfg: ALCCConfig, key, delta1_parts) -> np.ndarray:
+    """Phase-B shares (N, b, h) float32: the PER-PART deltas + fresh
+    masks (data-style encode — each beta_k carries its own δ1_k)."""
+    masks = alcc.draw_masks(key, cfg.T, tuple(np.shape(delta1_parts)[1:]),
+                            cfg.sigma)
+    return alcc.encode(cfg.scheme, np.asarray(delta1_parts, np.float64),
+                       masks).astype(np.float32)
+
+
+def mlp_worker_eval(phase: int, xb, share):
+    """The ALCC MLP worker function, selected by round parity.
+
+    phase 0 (round 2t):   X̃_i @ W̃1_i        -> (b, h)  coded forward
+    phase 1 (round 2t+1): X̃_iᵀ @ δ̃1_i       -> (d, h)  coded backward
+    Both are bilinear in coded inputs (degree 2) -> mlp_threshold.
+    """
+    return xb @ share if phase == 0 else xb.T @ share
+
+
+def mlp_decode_forward(cfg: ALCCConfig, fastest, order):
+    """(R, b, h) responses -> ((K, b, h) Z1 parts, info)."""
+    return cfg.scheme.decode(np.asarray(fastest, np.float32), order, 2)
+
+
+def mlp_decode_backward(cfg: ALCCConfig, fastest, order):
+    """(R, d, h) responses -> ((d, h) summed W1 gradient, info)."""
+    return cfg.scheme.decode_sum(np.asarray(fastest, np.float32), order, 2)
+
+
+def mlp_oracle(cfg: ALCCConfig, key, x, y, hidden: int, iters: int,
+               eta: float):
+    """Plaintext jax.grad training of models/layers.gelu_mlp — identical
+    init (same keys), batches and step sizes as the coded run; the gap to
+    the coded weights is pure ALCC decode noise.  Returns (w1, w2)."""
+    from repro.models import layers
+    ksetup, kloop = jax.random.split(jnp.asarray(key))
+    state = mlp_setup(cfg, ksetup, x, y, hidden)
+
+    def loss_fn(w1, w2, xb, yb, mask):
+        logits = layers.gelu_mlp(xb, w1, w2)
+        logp = jax.nn.log_softmax(logits)
+        n = jnp.maximum(mask.sum(), 1.0)
+        return -((yb * logp).sum(axis=-1) * mask).sum() / n
+
+    grad_fn = jax.jit(jax.grad(loss_fn, argnums=(0, 1)))
+    w1, w2 = state.w1, state.w2
+    for t in range(iters):
+        bidx = (np.asarray(draw_batch(cfg, kloop, iters, state.mk, t))
+                if cfg.batch_rows is not None else None)
+        xqb = (state.xq_parts if bidx is None
+               else state.xq_parts[:, bidx])
+        yb = (state.y_parts if bidx is None else state.y_parts[:, bidx])
+        K, b, d = xqb.shape
+        mask = mlp_row_mask(cfg, state, bidx).reshape(K * b)
+        g1, g2 = grad_fn(w1, w2,
+                         jnp.asarray(xqb.reshape(K * b, d), jnp.float32),
+                         jnp.asarray(yb.reshape(K * b, -1), jnp.float32),
+                         jnp.asarray(mask))
+        w1 = w1 - eta * g1
+        w2 = w2 - eta * g2
+    return w1, w2
+
+
+def mlp_metrics(state: ALCCMLPState, w1, w2) -> tuple[float, float]:
+    """Full-data loss/accuracy of (w1, w2) on the plaintext dataset."""
+    from repro.models import layers
+    x, y = state.xq_real[: state.m], state.y[: state.m]
+    logits = layers.gelu_mlp(x, w1, w2)
+    onehot = jax.nn.one_hot(y.astype(jnp.int32), logits.shape[-1])
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean((onehot * logp).sum(axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, axis=-1) == y.astype(jnp.int32))
+    return float(loss), float(acc)

@@ -64,6 +64,14 @@ import sys
 import tempfile
 import time
 
+# Documented ALCC verification tolerances (DESIGN.md §14).  A socket run
+# replays through train_reference to within ALCC_SOCKET_TOL in max|Δw|
+# (XLA-vs-BLAS float32 summation order; sim replays are bit-exact and do
+# not use this).  An MLP training run must land within ALCC_MLP_LOSS_TOL
+# of the plaintext jax.grad oracle's final full-data loss.
+ALCC_SOCKET_TOL = 1e-3
+ALCC_MLP_LOSS_TOL = 0.05
+
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description="CodedPrivateML cluster driver")
@@ -72,6 +80,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "BGW baseline run as a real distributed protocol "
                          "over the same runtime (wait-for-all reshare "
                          "barriers, reconstruct at the first 2T+1)")
+    ap.add_argument("--engine", choices=("exact", "alcc"), default="exact",
+                    help="coded-arithmetic backend (DESIGN.md §14): exact = "
+                         "quantized Lagrange coding over F_p with "
+                         "bit-identical decode; alcc = real-valued Lagrange "
+                         "coding with Gaussian analog masks and a "
+                         "least-squares decode whose condition number / "
+                         "error budget are tracked per round")
+    ap.add_argument("--model", choices=("logreg", "mlp"), default="logreg",
+                    help="logreg = the paper's logistic regression; mlp = "
+                         "the two-layer gelu MLP (models/layers.py) trained "
+                         "as two bilinear coded phases per step — ALCC "
+                         "engine only (gelu/softmax are not field "
+                         "polynomials)")
+    ap.add_argument("--sigma", type=float, default=1.0,
+                    help="ALCC Gaussian mask std — the analog privacy knob; "
+                         "its cost is proportional decode roundoff "
+                         "(--engine alcc only)")
+    ap.add_argument("--hidden", type=int, default=32,
+                    help="MLP hidden width (--model mlp)")
+    ap.add_argument("--eta", type=float, default=0.1,
+                    help="MLP step size for both layers (--model mlp; "
+                         "logreg keeps the Lipschitz auto-tuned step)")
     ap.add_argument("--workers", "-N", type=int, default=8)
     ap.add_argument("--parallel", "-K", type=int, default=2)
     ap.add_argument("--privacy", "-T", type=int, default=1)
@@ -297,12 +327,62 @@ def _emit_obs(args, runner, threshold: int) -> None:
         print(f"metrics -> {args.metrics_out}")
 
 
+def _validate(args) -> int | None:
+    """The cross-flag refusal matrix: every structurally impossible combo
+    dies here with one clear sentence on stderr and rc 2, mirroring the
+    historical --pipeline-with-MPC refusal.  Returns None when the combo
+    is runnable."""
+    if args.engine == "alcc" and args.protocol == "mpc":
+        print("--engine alcc cannot run --protocol mpc: BGW is an exact "
+              "finite-field protocol (Shamir shares, modular reshare "
+              "barriers) — there is no analog/float variant of its "
+              "degree reduction", file=sys.stderr)
+        return 2
+    if args.model == "mlp":
+        if args.protocol == "mpc":
+            print("--model mlp is a coded-protocol feature: the BGW "
+                  "baseline reproduces the paper's logistic task only",
+                  file=sys.stderr)
+            return 2
+        if args.engine != "alcc":
+            print("--model mlp needs --engine alcc: gelu and softmax are "
+                  "not finite-field polynomials, so the exact engine "
+                  "structurally cannot train the MLP (DESIGN.md §14)",
+                  file=sys.stderr)
+            return 2
+        if args.resilient or args.collect_all:
+            print("--resilient/--collect-all are not wired into the MLP "
+                  "plane yet — drop them or use --model logreg",
+                  file=sys.stderr)
+            return 2
+    if args.engine == "alcc":
+        if args.pipeline != "off":
+            print("--pipeline modes are exact-engine only: they split the "
+                  "FIELD encode/decode (prefetchable mask rows, integer "
+                  "streaming folds) — the ALCC least-squares decode has "
+                  "no such split", file=sys.stderr)
+            return 2
+        if args.masters > 1 or args.spares or args.join_at_round is not None:
+            print("--masters/--spares/--join-at-round are exact-engine "
+                  "only: the elastic + sharded-master planes rely on "
+                  "bit-identical re-encode, which a float engine cannot "
+                  "promise", file=sys.stderr)
+            return 2
+        if args.transport == "socket" and args.wire == "v1":
+            print("--engine alcc needs --wire v2: float round shares and "
+                  "results are wire v2 frames (like TRACE/JOIN) — a v1 "
+                  "fleet has no frame for them", file=sys.stderr)
+            return 2
+    return None
+
+
 def _run_socket(args, cfg, key, x, y) -> tuple:
     """--transport socket: N real worker processes, wire frames, wall clock."""
     import numpy as np
 
     from repro.cluster import ClusterRunner
     from repro.core import protocol
+    from repro.core.protocol import alcc_engine
 
     die = ({args.kill_worker: args.kill_at_round}
            if args.kill_worker is not None else None)
@@ -326,7 +406,8 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
                                collect_all=args.collect_all,
                                pipeline=args.pipeline,
                                spares=spares, masters=args.masters,
-                               recorder=_recorder_for(args))
+                               recorder=_recorder_for(args),
+                               engine=args.engine)
         runner.provision()
         t0 = time.monotonic()
         if args.resilient:
@@ -384,17 +465,34 @@ def _run_socket(args, cfg, key, x, y) -> tuple:
               f"{args.kill_at_round}: last decoded in round "
               f"{max(late) if late else '-'}; first-T decode rode through")
     if not args.no_verify:
-        # runner.cfg is the spare-extended config when elastic (the
-        # reference replays the SAME N+spares scheme over the observed
-        # responder trace — bit-identity is the elastic invariant)
-        w_ref, _ = protocol.train_reference(runner.cfg, key, x, y,
-                                            iters=args.iters,
-                                            survivor_fn=runner.survivor_fn())
-        same = bool((np.asarray(w) == np.asarray(w_ref)).all())
-        print(f"bit-identical to train_reference over the observed "
-              f"responder trace: {same}")
-        if not same:
-            return runner, w, 1
+        if args.engine == "alcc":
+            # ALCC socket verification is tolerance-exact, not bit-exact:
+            # the replay's BLAS einsum and the workers' XLA kernels may sum
+            # float32 dot products in different orders (DESIGN.md §14's
+            # documented contract — ALCC_SOCKET_TOL)
+            w_ref, _ = alcc_engine.train_reference(
+                runner.cfg, key, x, y, iters=args.iters,
+                survivor_fn=runner.survivor_fn())
+            gap = float(np.max(np.abs(np.asarray(w) - np.asarray(w_ref))))
+            ok = gap <= ALCC_SOCKET_TOL
+            print(f"train_reference replay over the observed responder "
+                  f"trace: max|Δw| = {gap:.2e} "
+                  f"(tolerance {ALCC_SOCKET_TOL:.0e}): "
+                  f"{'OK' if ok else 'FAILED'}")
+            if not ok:
+                return runner, w, 1
+        else:
+            # runner.cfg is the spare-extended config when elastic (the
+            # reference replays the SAME N+spares scheme over the observed
+            # responder trace — bit-identity is the elastic invariant)
+            w_ref, _ = protocol.train_reference(
+                runner.cfg, key, x, y, iters=args.iters,
+                survivor_fn=runner.survivor_fn())
+            same = bool((np.asarray(w) == np.asarray(w_ref)).all())
+            print(f"bit-identical to train_reference over the observed "
+                  f"responder trace: {same}")
+            if not same:
+                return runner, w, 1
     return runner, w, 0
 
 
@@ -505,25 +603,147 @@ def _run_mpc(args) -> int:
     return rc
 
 
+def _run_mlp(args) -> int:
+    """--model mlp: the two-phase coded gelu MLP under ALCC (DESIGN.md
+    §14) — the model the exact engine structurally cannot train."""
+    import jax
+    import numpy as np
+
+    from repro.cluster import make_latency
+    from repro.cluster.alcc_mlp import ALCCMLPRunner, train_reference
+    from repro.core.protocol import alcc_engine
+    from repro.data import synthetic
+
+    c = max(args.classes, 2)        # softmax head: binary becomes 2-class
+    cfg = alcc_engine.ALCCConfig(N=args.workers, K=args.parallel,
+                                 T=args.privacy, c=c, sigma=args.sigma,
+                                 batch_rows=args.batch_rows)
+    mode = (args.latency if args.transport == "inprocess"
+            else f"socket x{cfg.N} procs")
+    print(f"ALCC MLP cluster: N={cfg.N} K={cfg.K} T={cfg.T} c={c} "
+          f"hidden={args.hidden} sigma={cfg.sigma} "
+          f"phase-threshold={cfg.mlp_threshold} [{mode}]")
+    key = jax.random.PRNGKey(args.seed)
+    x, y = synthetic.multiclass_mnist_like(jax.random.PRNGKey(1),
+                                           m=args.m, d=args.d, c=c)
+    rc = 0
+    if args.transport == "socket":
+        timeout = args.round_timeout
+        if math.isinf(timeout):
+            timeout = 120.0
+        sleep = ({args.straggle_worker: args.straggle_sleep}
+                 if args.straggle_worker is not None else None)
+        die = ({args.kill_worker: args.kill_at_round}
+               if args.kill_worker is not None else None)
+        with local_socket_cluster(cfg.N, port=args.port, sleep_s=sleep,
+                                  die_at_round=die,
+                                  wire_version=int(args.wire[1:])) as tr:
+            runner = ALCCMLPRunner(cfg, key, x, y, args.hidden,
+                                   latency=None, transport=tr,
+                                   eta=args.eta, round_timeout_s=timeout,
+                                   recorder=_recorder_for(args))
+            runner.provision()
+            t0 = time.monotonic()
+            w1, w2 = runner.run(args.iters)
+            wall_s = time.monotonic() - t0
+            runner.shutdown_workers()
+        print(f"socket MLP run: {args.iters} steps (2 coded phases each) "
+              f"over TCP in {wall_s:.1f}s "
+              f"({wall_s / args.iters * 1e3:.0f} ms/step)")
+    else:
+        latency = make_latency(args.latency, seed=args.latency_seed)
+        runner = ALCCMLPRunner(cfg, key, x, y, args.hidden, latency,
+                               eta=args.eta,
+                               round_timeout_s=args.round_timeout,
+                               recorder=_recorder_for(args))
+        runner.run(args.iters)
+        w1, w2 = runner.w1, runner.w2
+    if args.trace_out or args.metrics_out:
+        _emit_obs(args, runner, cfg.mlp_threshold)
+    stats = runner.wait_stats()
+    a = stats["alcc"]
+    print(f"alcc decode: cond p95 {a['cond']['p95']:.1f}, error budget "
+          f"p95 {a['abs_err_budget']['p95']:.2e}, "
+          f"{int(a['fallbacks']['n'])} fallback(s)")
+    coded = stats["coded_T"]
+    print(f"per-phase wait  coded-T: mean {coded['mean']:.3f}s  "
+          f"p50 {coded['p50']:.3f}s  p95 {coded['p95']:.3f}s")
+    loss, acc = runner.metrics_now()
+    ow1, ow2 = alcc_engine.mlp_oracle(cfg, key, x, y, args.hidden,
+                                      args.iters, args.eta)
+    oloss, oacc = alcc_engine.mlp_metrics(runner.state, ow1, ow2)
+    print(f"MLP loss {loss:.4f} / acc {acc:.2%} vs plaintext jax.grad "
+          f"oracle {oloss:.4f} / {oacc:.2%} "
+          f"(|Δloss| = {abs(loss - oloss):.2e}, "
+          f"tolerance {ALCC_MLP_LOSS_TOL})")
+    if abs(loss - oloss) > ALCC_MLP_LOSS_TOL:
+        rc = 1
+    if not args.no_verify:
+        w1r, w2r, _ = train_reference(cfg, key, x, y, args.hidden,
+                                      args.iters, args.eta,
+                                      survivor_fn=runner.survivor_fn())
+        gap = max(float(np.max(np.abs(np.asarray(w1) - np.asarray(w1r)))),
+                  float(np.max(np.abs(np.asarray(w2) - np.asarray(w2r)))))
+        if args.transport == "socket":
+            ok = gap <= ALCC_SOCKET_TOL
+            print(f"train_reference replay: max|Δw| = {gap:.2e} "
+                  f"(tolerance {ALCC_SOCKET_TOL:.0e}): "
+                  f"{'OK' if ok else 'FAILED'}")
+        else:
+            ok = gap == 0.0
+            print(f"bit-identical to train_reference over the observed "
+                  f"responder trace: {ok}")
+        if not ok:
+            rc = 1
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(_json_finite(
+                {"config": {"N": cfg.N, "K": cfg.K, "T": cfg.T, "c": c,
+                            "engine": "alcc", "model": "mlp",
+                            "hidden": args.hidden, "sigma": cfg.sigma,
+                            "eta": args.eta,
+                            "transport": args.transport,
+                            "iters": args.iters},
+                 "wait_stats": stats,
+                 "loss_coded": float(loss), "acc_coded": float(acc),
+                 "loss_oracle": float(oloss),
+                 "acc_oracle": float(oacc)}), f, indent=2)
+    return rc
+
+
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
 
+    rc = _validate(args)
+    if rc is not None:
+        return rc
+
     if args.protocol == "mpc":
         return _run_mpc(args)
+    if args.model == "mlp":
+        return _run_mlp(args)
 
     import jax
 
     from repro.cluster import ClusterRunner, make_latency
     from repro.core import protocol
+    from repro.core.protocol import alcc_engine
     from repro.data import synthetic
 
-    cfg = protocol.CPMLConfig(N=args.workers, K=args.parallel,
-                              T=args.privacy, r=args.degree, c=args.classes,
-                              batch_rows=args.batch_rows)
+    if args.engine == "alcc":
+        cfg = alcc_engine.ALCCConfig(N=args.workers, K=args.parallel,
+                                     T=args.privacy, r=args.degree,
+                                     c=args.classes, sigma=args.sigma,
+                                     batch_rows=args.batch_rows)
+    else:
+        cfg = protocol.CPMLConfig(N=args.workers, K=args.parallel,
+                                  T=args.privacy, r=args.degree,
+                                  c=args.classes,
+                                  batch_rows=args.batch_rows)
     mode = (args.latency if args.transport == "inprocess"
             else f"socket x{cfg.N} procs")
-    print(f"CPML cluster: N={cfg.N} K={cfg.K} T={cfg.T} r={cfg.r} c={cfg.c} "
-          f"threshold={cfg.threshold} [{mode}]")
+    print(f"CPML cluster [{args.engine}]: N={cfg.N} K={cfg.K} T={cfg.T} "
+          f"r={cfg.r} c={cfg.c} threshold={cfg.threshold} [{mode}]")
 
     key = jax.random.PRNGKey(args.seed)
     if cfg.c == 1:
@@ -561,7 +781,8 @@ def main(argv: list[str] | None = None) -> int:
                                decode_cost_s=args.decode_cost_s,
                                spares=spares, masters=args.masters,
                                join_schedule=join_schedule,
-                               recorder=_recorder_for(args))
+                               recorder=_recorder_for(args),
+                               engine=args.engine)
         if args.resilient:
             from repro.checkpoint.manager import CheckpointManager
             with tempfile.TemporaryDirectory() as ckdir:
@@ -612,19 +833,51 @@ def main(argv: list[str] | None = None) -> int:
               f"{allw['total']:.1f}s wait-all "
               f"({allw['total'] / coded['total']:.2f}x speedup)")
 
-    # accuracy vs the cleartext quantized baseline, same step count
-    wc, xq = protocol.cleartext_baseline(cfg, x, y, args.iters)
-    metric = (protocol.loss_and_accuracy if cfg.c == 1
-              else protocol.multiclass_loss_and_accuracy)
-    _, acc = metric(w, xq, y)
-    _, acc_ref = metric(wc, xq, y)
-    print(f"accuracy: coded {float(acc):.2%} vs cleartext baseline "
-          f"{float(acc_ref):.2%}")
+    if args.engine == "alcc":
+        import numpy as np
+        a = stats["alcc"]
+        print(f"alcc decode: cond p95 {a['cond']['p95']:.1f}, error budget "
+              f"p95 {a['abs_err_budget']['p95']:.2e}, "
+              f"{int(a['fallbacks']['n'])} fallback(s)")
+        if args.transport != "socket" and not args.no_verify:
+            # sim replay is bit-exact (same numpy ops on the same inputs);
+            # the socket path already verified inside _run_socket
+            w_ref, _ = alcc_engine.train_reference(
+                cfg, key, x, y, iters=args.iters,
+                survivor_fn=runner.survivor_fn())
+            same = bool((np.asarray(w) == np.asarray(w_ref)).all())
+            print(f"bit-identical to train_reference over the observed "
+                  f"responder trace: {same}")
+            if not same:
+                rc = 1
+        # accuracy vs the UNCODED float oracle (same surrogate, batches
+        # and steps — the gap is pure coding/decoding float error)
+        w_oracle = alcc_engine.float_oracle(cfg, key, x, y, args.iters)
+        metric = (protocol.loss_and_accuracy if cfg.c == 1
+                  else protocol.multiclass_loss_and_accuracy)
+        x_eval = runner.state.xq_real[: runner.state.m]
+        _, acc = metric(w, x_eval, y)
+        _, acc_ref = metric(w_oracle, x_eval, y)
+        print(f"accuracy: coded {float(acc):.2%} vs uncoded float oracle "
+              f"{float(acc_ref):.2%}")
+    else:
+        # accuracy vs the cleartext quantized baseline, same step count
+        wc, xq = protocol.cleartext_baseline(cfg, x, y, args.iters)
+        metric = (protocol.loss_and_accuracy if cfg.c == 1
+                  else protocol.multiclass_loss_and_accuracy)
+        _, acc = metric(w, xq, y)
+        _, acc_ref = metric(wc, xq, y)
+        print(f"accuracy: coded {float(acc):.2%} vs cleartext baseline "
+              f"{float(acc_ref):.2%}")
 
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(_json_finite({"config": {"N": cfg.N, "K": cfg.K, "T": cfg.T,
                                   "r": cfg.r, "c": cfg.c,
+                                  "engine": args.engine,
+                                  "sigma": (args.sigma
+                                            if args.engine == "alcc"
+                                            else None),
                                   "masters": args.masters,
                                   "spares": args.spares,
                                   "transport": args.transport,
@@ -635,7 +888,7 @@ def main(argv: list[str] | None = None) -> int:
                        "wait_stats": stats,
                        "restarts": getattr(runner, "restarts", 0),
                        "acc_coded": float(acc),
-                       "acc_cleartext": float(acc_ref)}), f, indent=2)
+                       "acc_baseline": float(acc_ref)}), f, indent=2)
     return rc
 
 

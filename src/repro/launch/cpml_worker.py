@@ -9,7 +9,13 @@ message protocol (DESIGN.md §7):
   1. PROVISION — an EncodeShare with ``round == PROVISION_ROUND`` carrying
      {cfg kwargs, the worker's coded dataset share X̃_i, sigmoid-surrogate
      coefficients c̄}.  A ``"protocol": "mpc"`` key selects the BGW serve
-     mode (the share is then a FULL-dataset Shamir share); a
+     mode (the share is then a FULL-dataset Shamir share); an
+     ``"protocol": "alcc"`` key selects the ALCC float backend (DESIGN.md
+     §14) — the share is a real-valued float32 Lagrange share and the
+     round function is the float surrogate evaluation X̃ᵀĝ(X̃W̃); an
+     ``"protocol": "alcc_mlp"`` key serves the two-phase coded MLP
+     (cluster/alcc_mlp.py) — even rounds compute the coded forward
+     X̃·W̃1, odd rounds the coded backward X̃[batch]ᵀ·δ̃1; a
      ``"protocol": "serve"`` key selects the prediction-serving plane
      (cluster/serve.py) — the payload carries the model share W̃_i held
      for the deployment's lifetime, and each later round ships a query
@@ -268,6 +274,47 @@ def serve(args) -> int:
         else:
             state["xb_cache"] = None
 
+    def alcc_round(at: float, msg) -> None:
+        """One ALCC float round (DESIGN.md §14): same span shape as
+        cpml_round, float32 arithmetic throughout.  Logistic mode applies
+        the provisioned worker polynomial; MLP mode selects the phase by
+        round PARITY — even rounds are the coded forward X̃_i @ W̃1_i,
+        odd rounds the coded backward X̃_i[batch]ᵀ @ δ̃1_i (both shares
+        arrive under the same "w_share" key)."""
+        t0 = time.monotonic()
+        spans = state.pop("carry", []) if state.get("trace") else None
+        if spans is not None:
+            spans.append(["recv", at, t0])
+        if args.sleep_s > 0:
+            time.sleep(args.sleep_s)
+            if spans is not None:
+                spans.append(["straggle", t0, time.monotonic()])
+        t1 = time.monotonic()
+        w_share = jnp.asarray(msg.payload["w_share"], jnp.float32)
+        batch = msg.payload.get("batch")
+        x_share = state["x_share"]
+        xb = (x_share if batch is None
+              else jnp.take(x_share, jnp.asarray(batch, jnp.int32), axis=0))
+        if state["protocol"] == "alcc_mlp":
+            f = state["f_fwd"] if msg.round % 2 == 0 else state["f_bwd"]
+        else:
+            f = state["f"]
+        r = f(xb, w_share)
+        r.block_until_ready()
+        t2 = time.monotonic()
+        if spans is not None:
+            spans.append(["compute", t1, t2])
+        result = np.asarray(r, dtype=np.float32)
+        t3 = time.monotonic()
+        if spans is not None:
+            spans.append(["serialize", t2, t3])
+        tr.send(MASTER,
+                WorkerResult(msg.round, args.worker,
+                             compute_s=time.monotonic() - t0,
+                             payload=result, trace=spans))
+        if spans is not None:
+            state["carry"] = [["send", t3, time.monotonic()]]
+
     def serve_round(at: float, msg) -> None:
         """One coded prediction flush (cluster/serve.py): a query share
         X̃_i arrives, reply with the bilinear evaluation X̃_i·W̃_i.  Same
@@ -329,6 +376,21 @@ def serve(args) -> int:
                     state["w_share"] = jnp.asarray(p["w_share"], jnp.int32)
                     state["f"] = jax.jit(
                         lambda xb, ws, _p=prime: field.matmul(xb, ws, _p))
+                elif p.get("protocol") == "alcc":
+                    # ALCC float logistic (DESIGN.md §14): real shares,
+                    # float32 arithmetic, real surrogate coefficients
+                    from repro.core.protocol import alcc_engine
+                    state["protocol"] = "alcc"
+                    cbar = jnp.asarray(p["cbar"], jnp.float32)
+                    state["f"] = jax.jit(
+                        lambda xb, ws, _c=cbar:
+                        alcc_engine.worker_eval(_c, xb, ws))
+                elif p.get("protocol") == "alcc_mlp":
+                    # ALCC MLP (cluster/alcc_mlp.py): two bilinear phases
+                    # selected by round parity, both plain float32 matmuls
+                    state["protocol"] = "alcc_mlp"
+                    state["f_fwd"] = jax.jit(lambda xb, ws: xb @ ws)
+                    state["f_bwd"] = jax.jit(lambda xb, ws: xb.T @ ws)
                 else:
                     # worker compute never needs the sharded backend or the
                     # Pallas kernel: the jnp reference path is the exact
@@ -343,7 +405,12 @@ def serve(args) -> int:
                     state["f"] = jax.jit(compute.worker_fn(
                         cfg, jnp.asarray(p["cbar"], jnp.int32)))
                 if state["protocol"] != "serve":
-                    state["x_share"] = jnp.asarray(p["x_share"], jnp.int32)
+                    # field protocols ship exact int32 shares; the ALCC
+                    # modes ship float32 real shares
+                    dt = (jnp.float32
+                          if str(state["protocol"]).startswith("alcc")
+                          else jnp.int32)
+                    state["x_share"] = jnp.asarray(p["x_share"], dt)
                 if state["protocol"] == "serve":
                     # serve flushes are padded to a FIXED (rows, d) shape
                     # (cluster/serve.py), so this one compile covers every
@@ -353,6 +420,29 @@ def serve(args) -> int:
                                    jnp.int32)
                     t_c0 = time.monotonic()
                     state["f"](xw, state["w_share"]).block_until_ready()
+                    if state["trace"]:
+                        state["carry"] = [
+                            ["warm_compile", t_c0, time.monotonic()]]
+                if str(state["protocol"]).startswith("alcc"):
+                    # same warmup-before-ack contract as cpml below; ALCC
+                    # round shapes are static floats: logistic
+                    # (rows, d) x (d, c), MLP (rows, d) x (d, h) forward
+                    # and (rows, d)ᵀ x (rows, h) backward
+                    x_share = state["x_share"]
+                    rows = int(p["cfg"].get("batch_rows")
+                               or x_share.shape[0])
+                    xw = jnp.zeros((rows, x_share.shape[1]), jnp.float32)
+                    t_c0 = time.monotonic()
+                    if state["protocol"] == "alcc":
+                        ww = jnp.zeros((x_share.shape[1],
+                                        int(p["cfg"]["c"])), jnp.float32)
+                        state["f"](xw, ww).block_until_ready()
+                    else:
+                        h = int(p["hidden"])
+                        w1 = jnp.zeros((x_share.shape[1], h), jnp.float32)
+                        dz = jnp.zeros((rows, h), jnp.float32)
+                        state["f_fwd"](xw, w1).block_until_ready()
+                        state["f_bwd"](xw, dz).block_until_ready()
                     if state["trace"]:
                         state["carry"] = [
                             ["warm_compile", t_c0, time.monotonic()]]
@@ -389,6 +479,8 @@ def serve(args) -> int:
                 mpc_round(at, msg)
             elif state["protocol"] == "serve":
                 serve_round(at, msg)
+            elif str(state["protocol"]).startswith("alcc"):
+                alcc_round(at, msg)
             else:
                 cpml_round(at, msg)
         return 0

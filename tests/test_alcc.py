@@ -1,0 +1,251 @@
+"""ALCC float engine: analog Lagrange coding, decode fallback, engine +
+cluster integration, CLI refusal matrix (DESIGN.md §14)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterRunner, make_latency
+from repro.cluster.alcc_mlp import ALCCMLPRunner
+from repro.cluster.alcc_mlp import train_reference as mlp_train_reference
+from repro.core import alcc
+from repro.core.protocol import alcc_engine
+from repro.data import synthetic
+from repro.launch import cpml_cluster
+
+
+def _scheme(N=10, K=3, T=2, **kw):
+    return alcc.AnalogScheme(N=N, K=K, T=T, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AnalogScheme units
+# ---------------------------------------------------------------------------
+
+def test_thresholds_match_field_formulas():
+    assert alcc.recovery_threshold(K=2, T=1, r=1) == 7
+    assert alcc.degree_threshold(K=2, T=1, deg_f=2) == 5
+    assert alcc.recovery_threshold(K=13, T=1, r=1) == 3 * 13 + 1
+
+
+def test_point_sets_disjoint_and_bounded():
+    s = _scheme()
+    assert s.alphas.shape == (10,) and s.betas.shape == (5,)
+    assert np.all(np.abs(s.betas) < s.beta_scale + 1e-12)
+    both = np.concatenate([s.alphas, s.betas])
+    assert np.min(np.diff(np.sort(both))) > 1e-12
+    assert s.mask_points().shape == (2,)
+
+
+def test_colliding_point_sets_rejected():
+    """Odd-order Chebyshev sets both contain 0: N=9 alphas and K+T=3 betas
+    collide at the origin regardless of beta_scale — the scheme must
+    refuse rather than hand decode a singular system."""
+    s = alcc.AnalogScheme(N=9, K=2, T=1)
+    with pytest.raises(AssertionError, match="collide"):
+        s.betas
+
+
+def test_encode_decode_identity():
+    s = _scheme()
+    rng = np.random.default_rng(0)
+    parts = rng.normal(size=(3, 4, 5))
+    masks = alcc.draw_masks(jax.random.PRNGKey(1), 2, (4, 5), sigma=1.0)
+    shares = alcc.encode(s, parts, masks)
+    assert shares.shape == (10, 4, 5)
+    dec, info = s.decode(shares, np.arange(10), deg_f=1)
+    assert not info["fallback"]
+    np.testing.assert_allclose(dec, parts, atol=1e-9)
+
+
+@pytest.mark.parametrize("survivor_seed", [0, 1, 2, 3])
+def test_decode_from_any_threshold_subset(survivor_seed):
+    """ANY degree_threshold survivors suffice — the straggler property
+    carries over to the reals (deg-2 elementwise square worker)."""
+    s = _scheme(N=10, K=3, T=2)
+    rng = np.random.default_rng(survivor_seed)
+    parts = rng.normal(size=(3, 6))
+    masks = alcc.draw_masks(jax.random.PRNGKey(1), 2, (6,), sigma=1.0)
+    shares = alcc.encode(s, parts, masks)
+    need = alcc.degree_threshold(3, 2, 2)                  # = 9 of the 10
+    surv = rng.permutation(10)[:need]
+    dec, info = s.decode(shares[surv] ** 2, surv, deg_f=2)
+    np.testing.assert_allclose(dec, parts ** 2, atol=1e-7)
+    assert info["need"] == need
+
+
+def test_masks_cancel_at_any_sigma():
+    """Decode error is roundoff, not mask leakage: recovery holds whether
+    sigma is 0 or 100, and stays inside the published error budget when
+    the worker evaluations are float32 (the real worker dtype)."""
+    s_lo = _scheme(sigma=0.0)
+    s_hi = _scheme(sigma=100.0)
+    rng = np.random.default_rng(2)
+    parts = rng.normal(size=(3, 8))
+    for s in (s_lo, s_hi):
+        masks = alcc.draw_masks(jax.random.PRNGKey(3), 2, (8,), s.sigma)
+        results = alcc.encode(s, parts, masks).astype(np.float32)
+        dec, info = s.decode(results, np.arange(10), deg_f=1)
+        err = np.max(np.abs(dec - parts))
+        assert err <= max(info["abs_err_budget"], 1e-12)
+
+
+def test_decode_sum_matches_decode():
+    s = _scheme()
+    rng = np.random.default_rng(4)
+    parts = rng.normal(size=(3, 7))
+    masks = alcc.draw_masks(jax.random.PRNGKey(5), 2, (7,), 1.0)
+    shares = alcc.encode(s, parts, masks)
+    dec, _ = s.decode(shares, np.arange(10), deg_f=1)
+    summed, _ = s.decode_sum(shares, np.arange(10), deg_f=1)
+    np.testing.assert_allclose(summed, dec.sum(axis=0), rtol=1e-12)
+
+
+def test_encode_replicated_broadcasts_value():
+    s = _scheme()
+    w = np.arange(6, dtype=np.float64).reshape(3, 2)
+    masks = alcc.draw_masks(jax.random.PRNGKey(6), 2, (3, 2), 1.0)
+    shares = alcc.encode_replicated(s, w, masks)
+    dec, _ = s.decode(shares, np.arange(10), deg_f=1)
+    for k in range(s.K):
+        np.testing.assert_allclose(dec[k], w, atol=1e-9)
+
+
+def test_decode_fallback_deterministic():
+    """cond_max=0 forces the overdetermined pinv path over ALL responders;
+    it must still reconstruct, flag itself, and use every row."""
+    s = _scheme(cond_max=0.0)
+    rng = np.random.default_rng(7)
+    parts = rng.normal(size=(3, 5))
+    masks = alcc.draw_masks(jax.random.PRNGKey(8), 2, (5,), 1.0)
+    shares = alcc.encode(s, parts, masks)
+    dec, info = s.decode(shares, np.arange(10), deg_f=1)
+    assert info["fallback"] and info["rows"] == 10
+    np.testing.assert_allclose(dec, parts, atol=1e-8)
+    # square path at the same shapes does NOT fall back
+    _, info_sq = _scheme().decode(shares, np.arange(10), deg_f=1)
+    assert not info_sq["fallback"] and info_sq["rows"] == info_sq["need"]
+
+
+def test_error_budget_monotone():
+    assert alcc.error_budget(10.0, 2.0) == pytest.approx(
+        10.0 * 2.0 * float(np.finfo(np.float32).eps))
+    assert alcc.error_budget(100.0, 2.0) > alcc.error_budget(10.0, 2.0)
+
+
+def test_config_below_threshold_rejected():
+    with pytest.raises(AssertionError, match="recovery threshold"):
+        alcc_engine.ALCCConfig(N=6, K=2, T=1)
+
+
+def test_pipeline_hooks_refused():
+    cfg = alcc_engine.ALCCConfig(N=8, K=2, T=1)
+    with pytest.raises(RuntimeError, match="exact-engine only"):
+        alcc_engine.round_fn_split(cfg, None, 0.1)()
+    with pytest.raises(RuntimeError, match="exact-engine only"):
+        alcc_engine.update_from_parts_fn(cfg, None, 0.1)()
+
+
+# ---------------------------------------------------------------------------
+# Engine + cluster integration (sim)
+# ---------------------------------------------------------------------------
+
+def _logreg_data(m=96, d=12):
+    return synthetic.mnist_like(jax.random.PRNGKey(1), m=m, d=d)
+
+
+def test_logistic_tracks_float_oracle():
+    cfg = alcc_engine.ALCCConfig(N=8, K=2, T=1, sigma=1.0)
+    key = jax.random.PRNGKey(3)
+    x, y = _logreg_data()
+    w, _ = alcc_engine.train_reference(cfg, key, x, y, iters=15)
+    w_o = alcc_engine.float_oracle(cfg, key, x, y, iters=15)
+    assert np.max(np.abs(np.asarray(w) - np.asarray(w_o))) < 1e-4
+
+
+def test_cluster_runner_alcc_replays_bit_identical():
+    """Sim contract: ClusterRunner(engine='alcc') is bit-exact to
+    train_reference over the observed responder trace, and wait_stats
+    surfaces the decode-conditioning block."""
+    cfg = alcc_engine.ALCCConfig(N=8, K=2, T=1, sigma=1.0)
+    key = jax.random.PRNGKey(7)
+    x, y = _logreg_data()
+    runner = ClusterRunner(cfg, key, x, y, make_latency("lognormal", seed=5),
+                           engine="alcc")
+    w = runner.run(5)
+    w_ref, _ = alcc_engine.train_reference(cfg, key, x, y, 5,
+                                           survivor_fn=runner.survivor_fn())
+    assert np.array_equal(np.asarray(w), np.asarray(w_ref))
+    stats = runner.wait_stats()
+    assert {"cond", "abs_err_budget", "fallbacks"} <= set(stats["alcc"])
+    assert stats["alcc"]["cond"]["mean"] > 1.0
+    assert stats["alcc"]["fallbacks"]["n"] == 0.0
+
+
+def test_cluster_runner_alcc_rejects_elastic_and_pipeline():
+    cfg = alcc_engine.ALCCConfig(N=8, K=2, T=1)
+    key = jax.random.PRNGKey(0)
+    x, y = _logreg_data()
+    lat = make_latency("deterministic", seed=0)
+    with pytest.raises(AssertionError):
+        ClusterRunner(cfg, key, x, y, lat, engine="alcc", pipeline="full")
+    with pytest.raises(AssertionError):
+        ClusterRunner(cfg, key, x, y, lat, engine="alcc", masters=2)
+
+
+def test_mlp_runner_replays_bit_identical_and_tracks_oracle():
+    cfg = alcc_engine.ALCCConfig(N=8, K=2, T=1, c=4, sigma=1.0)
+    key = jax.random.PRNGKey(9)
+    x, y = synthetic.multiclass_mnist_like(jax.random.PRNGKey(2), m=96,
+                                           d=12, c=4)
+    runner = ALCCMLPRunner(cfg, key, x, y, hidden=8,
+                           latency=make_latency("lognormal", seed=3),
+                           eta=0.1)
+    w1, w2 = runner.run(6)
+    w1r, w2r, _ = mlp_train_reference(cfg, key, x, y, 8, 6, eta=0.1,
+                                      survivor_fn=runner.survivor_fn())
+    assert np.array_equal(np.asarray(w1), np.asarray(w1r))
+    assert np.array_equal(np.asarray(w2), np.asarray(w2r))
+    loss, _ = runner.metrics_now()
+    w1o, w2o = alcc_engine.mlp_oracle(cfg, key, x, y, 8, 6, eta=0.1)
+    loss_o, _ = alcc_engine.mlp_metrics(runner.state, w1o, w2o)
+    assert abs(loss - loss_o) <= cpml_cluster.ALCC_MLP_LOSS_TOL
+
+
+# ---------------------------------------------------------------------------
+# CLI refusal matrix (regression: ISSUE satellite — alcc + mpc must refuse)
+# ---------------------------------------------------------------------------
+
+TINY = ["--m", "96", "--d", "12", "--iters", "2"]
+
+
+@pytest.mark.parametrize("argv,fragment", [
+    (["--engine", "alcc", "--protocol", "mpc"], "exact finite-field"),
+    (["--model", "mlp", "--protocol", "mpc"], "mlp"),
+    (["--model", "mlp"], "--engine alcc"),
+    (["--engine", "alcc", "--pipeline", "full"], "pipeline"),
+    (["--engine", "alcc", "--masters", "2"], "masters"),
+    (["--engine", "alcc", "--spares", "1"], "spare"),
+    (["--engine", "alcc", "--transport", "socket", "--wire", "v1"], "wire"),
+    (["--model", "mlp", "--engine", "alcc", "--resilient"], "resilient"),
+])
+def test_cli_refusals(argv, fragment, capsys):
+    rc = cpml_cluster.main(argv + TINY)
+    assert rc == 2
+    err = capsys.readouterr().err.lower()
+    assert fragment.lower() in err
+
+
+def test_cli_alcc_sim_smoke(capsys):
+    rc = cpml_cluster.main(["--engine", "alcc", "--workers", "8"] + TINY)
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "bit-identical" in out
+
+
+def test_cli_alcc_mlp_sim_smoke(capsys):
+    rc = cpml_cluster.main(["--engine", "alcc", "--model", "mlp",
+                            "--workers", "8", "--hidden", "8",
+                            "--classes", "4"] + TINY)
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "bit-identical" in out

@@ -1,0 +1,124 @@
+"""ALCC encode∘decode error-bound properties (DESIGN.md §14).
+
+The float engine's whole correctness story is an ERROR MODEL, not exact
+recovery: decode error must stay inside ``error_budget`` — the condition
+number of the solved system times the float32 quantum times the largest
+evaluation magnitude (which the Gaussian masks inflate by O(sigma)).
+These properties pin that bound over hypothesis-chosen (K, T, sigma,
+beta_scale) combinations, including the ill-conditioned large-N /
+high-degree regime where the square solve exceeds ``cond_max`` and the
+overdetermined pseudo-inverse fallback takes over.  Skips cleanly when
+hypothesis is absent (DESIGN.md §8).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.core import alcc  # noqa: E402
+
+# budget is a first-order bound (cond * eps32 * max|h|); the solve can
+# shuffle elementwise roundoff by a small constant factor on unlucky draws
+BUDGET_SLACK = 10.0
+
+
+def _scheme_or_skip(N, K, T, **kw):
+    """Build a scheme, discarding draws whose Chebyshev sets collide at 0
+    (both orders odd) — the constructor refuses those by design."""
+    s = alcc.AnalogScheme(N=N, K=K, T=T, **kw)
+    try:
+        s.betas
+    except AssertionError:
+        assume(False)
+    return s
+
+
+@settings(max_examples=80, deadline=None)
+@given(K=st.integers(1, 4), T=st.integers(0, 3), extra=st.integers(1, 4),
+       sigma=st.floats(0.0, 10.0),
+       beta_scale=st.floats(0.2, 0.8),
+       seed=st.integers(0, 2 ** 16))
+def test_decode_error_within_budget(K, T, extra, sigma, beta_scale, seed):
+    """Identity worker (deg 1), float32 evaluations: the decoded parts err
+    by at most BUDGET_SLACK * error_budget, for ANY (K, T, sigma, spread).
+    """
+    N = K + T + extra
+    s = _scheme_or_skip(N, K, T, sigma=sigma, beta_scale=beta_scale)
+    rng = np.random.default_rng(seed)
+    parts = rng.normal(size=(K, 6))
+    masks = rng.normal(size=(T, 6)) * sigma
+    results = alcc.encode(s, parts, masks).astype(np.float32)
+    dec, info = s.decode(results, np.arange(N), deg_f=1)
+    err = float(np.max(np.abs(dec - parts)))
+    assert err <= max(BUDGET_SLACK * info["abs_err_budget"], 1e-10)
+
+
+@settings(max_examples=60, deadline=None)
+@given(K=st.integers(1, 3), T=st.integers(1, 3), extra=st.integers(1, 3),
+       sigma=st.floats(0.0, 100.0), seed=st.integers(0, 2 ** 16))
+def test_masks_cancel_in_float64(K, T, extra, sigma, seed):
+    """In (near-)exact arithmetic the masks cancel at the data betas no
+    matter how large sigma is: float64 end-to-end decode error stays at
+    solver-roundoff scale, NOT at O(sigma)."""
+    N = K + T + extra
+    s = _scheme_or_skip(N, K, T, sigma=sigma)
+    rng = np.random.default_rng(seed)
+    parts = rng.normal(size=(K, 5))
+    masks = rng.normal(size=(T, 5)) * sigma
+    shares = alcc.encode(s, parts, masks)          # float64 throughout
+    dec, info = s.decode(shares, np.arange(N), deg_f=1)
+    err = float(np.max(np.abs(dec - parts)))
+    # float64 eps replaces the budget's eps32: ~1e-16 * cond * magnitude
+    f64_budget = alcc.error_budget(info["cond"],
+                                   float(np.max(np.abs(shares))),
+                                   eps=float(np.finfo(np.float64).eps))
+    assert err <= max(BUDGET_SLACK * f64_budget, 1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(K=st.integers(2, 4), T=st.integers(1, 3), extra=st.integers(2, 5),
+       seed=st.integers(0, 2 ** 16))
+def test_fallback_regime_still_reconstructs(K, T, extra, seed):
+    """Ill-conditioned regime: deg-2 workers push the product-polynomial
+    degree to 2(K+T-1); with ``cond_max`` forced to 1 the square solve is
+    always "too ill-conditioned" and the pinv fallback over ALL responders
+    must still reconstruct h(beta_k) = parts_k^2 within its own budget."""
+    N = 2 * (K + T - 1) + 1 + extra
+    s = _scheme_or_skip(N, K, T, cond_max=1.0)
+    rng = np.random.default_rng(seed)
+    parts = rng.normal(size=(K, 4))
+    masks = rng.normal(size=(T, 4))
+    shares = alcc.encode(s, parts, masks)
+    dec, info = s.decode(shares ** 2, np.arange(N), deg_f=2)
+    assert info["fallback"] and info["rows"] == N
+    err = float(np.max(np.abs(dec - parts ** 2)))
+    f64_budget = alcc.error_budget(info["cond"],
+                                   float(np.max(np.abs(shares ** 2))),
+                                   eps=float(np.finfo(np.float64).eps))
+    assert err <= max(BUDGET_SLACK * f64_budget, 1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(K=st.integers(1, 3), T=st.integers(0, 2), extra=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16), deg=st.integers(1, 2))
+def test_decode_subset_independence(K, T, extra, seed, deg):
+    """Any two survivor sets of the same size decode to values that agree
+    within the sum of their budgets — no privileged worker subset."""
+    need = alcc.degree_threshold(K, T, deg)
+    N = need + extra
+    s = _scheme_or_skip(N, K, T)
+    rng = np.random.default_rng(seed)
+    parts = rng.normal(size=(K, 4))
+    masks = rng.normal(size=(T, 4))
+    shares = alcc.encode(s, parts, masks) ** deg
+    sa = np.sort(rng.permutation(N)[:need])
+    sb = np.sort(rng.permutation(N)[:need])
+    da, ia = s.decode(shares[sa], sa, deg_f=deg)
+    db, ib = s.decode(shares[sb], sb, deg_f=deg)
+    f64 = float(np.finfo(np.float64).eps)
+    tol = BUDGET_SLACK * (
+        alcc.error_budget(ia["cond"], float(np.max(np.abs(shares))), f64)
+        + alcc.error_budget(ib["cond"], float(np.max(np.abs(shares))), f64))
+    assert float(np.max(np.abs(da - db))) <= max(tol, 1e-10)

@@ -204,6 +204,51 @@ def test_cpml_cluster_socket_cli_end_to_end(tmp_path):
     assert blob["wait_stats"]["rounds"]["n"] == 4.0
 
 
+@pytest.mark.slow
+def test_cpml_cluster_alcc_socket_cli_end_to_end(tmp_path):
+    """ALCC float engine over real sockets: FROUND/FRESULT v2 frames, float
+    worker compute under jit, decode-conditioning stats in wait_stats, and
+    the replay-within-tolerance verification contract (sim is bit-exact;
+    socket workers sum in XLA order, so the replay gap is bounded by the
+    decode error budget, not zero)."""
+    out = tmp_path / "alcc_socket.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cpml_cluster",
+         "--engine", "alcc", "--transport", "socket",
+         "-N", "8", "-K", "2", "-T", "1",
+         "--m", "96", "--d", "12", "--iters", "3",
+         "--json-out", str(out)],
+        capture_output=True, text=True, timeout=600,
+        env=_env_with_src())
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+    blob = json.loads(out.read_text())
+    assert blob["config"]["engine"] == "alcc"
+    assert blob["wait_stats"]["alcc"]["fallbacks"]["n"] == 0.0
+
+
+@pytest.mark.slow
+def test_cpml_cluster_alcc_mlp_socket_cli_end_to_end(tmp_path):
+    """The dormant MLP, trained end-to-end over TCP under ALCC: two coded
+    phases per step through real worker processes, master-side gelu/softmax
+    between them, loss within the documented tolerance of the jax.grad
+    oracle."""
+    out = tmp_path / "alcc_mlp_socket.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cpml_cluster",
+         "--engine", "alcc", "--model", "mlp", "--transport", "socket",
+         "-N", "8", "-K", "2", "-T", "1", "--classes", "4",
+         "--hidden", "8", "--m", "96", "--d", "12", "--iters", "3",
+         "--json-out", str(out)],
+        capture_output=True, text=True, timeout=600,
+        env=_env_with_src())
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+    blob = json.loads(out.read_text())
+    assert blob["config"]["model"] == "mlp"
+    assert abs(blob["loss_coded"] - blob["loss_oracle"]) <= 0.05
+
+
 def _env_with_src():
     import os
     src = os.path.abspath(os.path.join(os.path.dirname(__file__),

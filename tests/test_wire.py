@@ -446,3 +446,102 @@ def test_membership_frames_cannot_be_spoken_at_v1():
         r1 = wire.FrameReader(version=wire.WIRE_V1)
         with pytest.raises(wire.WireError):
             r1.feed(frame)
+
+
+# ---------------------------------------------------------------------------
+# ALCC float frames (wire v2 only, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def test_alcc_float_round_frame_roundtrip_v2():
+    rng = np.random.default_rng(8)
+    payload = {"w_share": rng.normal(size=(6, 2)).astype(np.float32),
+               "batch": np.arange(5, dtype=np.int32),
+               "next_batch": None}
+    msg = EncodeShare(4, 2, payload)
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    assert frame[4] == 0x20                  # the float ROUND frame tag
+    out = wire.deserialize(frame)
+    assert wire.messages_equal(out, msg)
+    assert out.payload["w_share"].dtype == np.float32
+    assert out.payload["batch"].dtype == np.int32
+    assert out.payload["next_batch"] is None
+
+
+def test_alcc_float_result_roundtrip_v2():
+    rng = np.random.default_rng(9)
+    payload = rng.normal(size=(3, 7)).astype(np.float32)
+    bare = WorkerResult(6, 1, 0.25, payload)
+    frame = wire.serialize(bare, wire.WIRE_V2)
+    assert frame[4] == 0x21                  # the float RESULT frame tag
+    out = wire.deserialize(frame)
+    assert wire.messages_equal(out, bare)
+    assert out.payload.dtype == np.float32 and out.trace is None
+    # the traced variant rides the same frame with the marker byte set
+    traced = WorkerResult(6, 1, 0.25, payload,
+                          trace=[["compute", 0.0, 0.2]])
+    tf = wire.serialize(traced, wire.WIRE_V2)
+    assert tf[4] == 0x21
+    tout = wire.deserialize(tf)
+    assert wire.messages_equal(tout, traced)
+    assert tout.trace == [["compute", 0.0, 0.2]]
+
+
+def test_alcc_float_frames_cannot_be_spoken_at_v1():
+    """Like Join/Epoch and TRACE: v1 has no float frame to downgrade to.
+    Serializing for a v1 peer fails loud at the sender (a mixed fleet must
+    not silently run ALCC), and a genuine v1 reader rejects the v2 tags
+    rather than misparsing them."""
+    rng = np.random.default_rng(10)
+    fround = EncodeShare(1, 0, {"w_share":
+                                rng.normal(size=(2, 1)).astype(np.float32),
+                                "batch": None, "next_batch": None})
+    fresult = WorkerResult(1, 0, 0.0, np.zeros((2, 2), np.float32))
+    for msg in (fround, fresult):
+        with pytest.raises(wire.WireError, match="wire v2"):
+            wire.serialize(msg, wire.WIRE_V1)
+        frame = wire.serialize(msg, wire.WIRE_V2)
+        with pytest.raises(wire.WireError, match="v1 stream"):
+            wire.deserialize(frame, wire.WIRE_V1)
+        r1 = wire.FrameReader(version=wire.WIRE_V1)
+        with pytest.raises(wire.WireError):
+            r1.feed(frame)
+
+
+def test_alcc_float_iovec_matches_serialize():
+    rng = np.random.default_rng(11)
+    msgs = [EncodeShare(2, 3, {"w_share":
+                               rng.normal(size=(4, 2)).astype(np.float32),
+                               "batch": np.arange(3, dtype=np.int32),
+                               "next_batch": None}),
+            WorkerResult(2, 3, 0.5, rng.normal(size=(5,)
+                                               ).astype(np.float32),
+                         trace=[["compute", 0.1, 0.2]])]
+    for msg in msgs:
+        bufs = wire.serialize_iovec(msg, wire.WIRE_V2)
+        assert b"".join(bufs) == wire.serialize(msg, wire.WIRE_V2)
+
+
+def test_alcc_float_frame_reader_reassembles_chunks():
+    rng = np.random.default_rng(12)
+    msg = WorkerResult(9, 4, 0.125, rng.normal(size=(64, 3)
+                                               ).astype(np.float32))
+    frame = wire.serialize(msg, wire.WIRE_V2)
+    reader = wire.FrameReader(version=wire.WIRE_V2)
+    got = []
+    for i in range(0, len(frame), 7):
+        got.extend(reader.feed(frame[i:i + 7]))
+    assert len(got) == 1 and wire.messages_equal(got[0], msg)
+
+
+def test_alcc_float_provision_payload_stays_generic():
+    """Float x_share in a PROVISION payload (round -1, other keys) rides
+    the generic dict frame at ANY version — only round-eligible frames get
+    the dedicated float encoding."""
+    prov = EncodeShare(-1, 0, {"cfg": {"N": 8},
+                               "x_share": np.ones((4, 2), np.float32)})
+    for version in (wire.WIRE_V1, wire.WIRE_V2):
+        frame = wire.serialize(prov, version)
+        assert frame[4] == 0x10              # generic ENCODE_SHARE tag
+        out = wire.deserialize(frame, version)
+        assert wire.messages_equal(out, prov)
+        assert out.payload["x_share"].dtype == np.float32

@@ -1,0 +1,199 @@
+"""Docs-consistency gate: README.md vs the actual CLIs (CI tier-1 leg).
+
+Two checks, both of which fail the build (nonzero exit) when violated:
+
+  1. FLAG EXISTENCE — every ``--flag`` documented in README (in the
+     "``cpml_X`` flags at a glance" tables AND inside every quickstart
+     ``sh`` snippet that invokes ``python -m repro.launch.X``) must exist
+     in that module's ``--help`` output.  A flag rename or removal that
+     forgets the README turns the build red instead of silently shipping
+     stale docs.
+  2. QUICKSTART EXECUTION — every runnable quickstart command under a
+     "## Quickstart" heading is actually executed, at smoke shapes (the
+     shape flags ``--m/--d/--iters/...`` are APPENDED, so argparse's
+     last-wins overrides the documented values without editing the
+     command), in one shared scratch directory so multi-command snippets
+     (trace file -> validator) see each other's artifacts.  Commands
+     containing ``<placeholders>`` are flag-checked but not executed.
+
+    PYTHONPATH=src python tools/docs_check.py [--readme PATH] [--skip-run]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FLAG_RE = re.compile(r"--[A-Za-z][A-Za-z0-9-]*")
+TABLE_LABEL_RE = re.compile(r"`(cpml_\w+)` flags at a glance")
+MODULE_RE = re.compile(r"python -m (repro\.[\w.]+)")
+
+# appended AFTER the documented flags (argparse last-wins) so every
+# quickstart runs at CI-friendly shapes without rewriting the README
+SMOKE_OVERRIDES = {
+    # m=256 (not 96): the mini-batch quickstart's --batch-rows 64 needs
+    # >= 64 rows per encoded part (padded m / K)
+    "repro.launch.cpml_train": ["--m", "256", "--d", "12", "--iters", "2"],
+    "repro.launch.cpml_cluster": ["--m", "96", "--d", "12", "--iters", "6"],
+    "repro.launch.cpml_serve": ["--d", "12", "--queries", "4", "--rows", "4",
+                                "--rate", "50"],
+}
+RUNNABLE_PREFIXES = ("repro.launch.", "repro.obs.")
+PER_COMMAND_TIMEOUT_S = 420
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _help_text(module: str, cache: dict) -> str:
+    if module not in cache:
+        proc = subprocess.run([sys.executable, "-m", module, "--help"],
+                              capture_output=True, text=True, timeout=120,
+                              env=_env())
+        assert proc.returncode == 0, (
+            f"`python -m {module} --help` failed:\n{proc.stderr}")
+        cache[module] = proc.stdout
+    return cache[module]
+
+
+def _flag_exists(flag: str, help_text: str) -> bool:
+    return re.search(rf"(?<![\w-]){re.escape(flag)}(?![\w-])",
+                     help_text) is not None
+
+
+def _sh_blocks(lines: list[str]):
+    """Yield (heading, [block lines]) for each fenced sh block."""
+    heading, block, in_block = "", [], False
+    for ln in lines:
+        if ln.startswith("#") and not in_block:     # markdown heading, not
+            heading = ln.strip("# \n")              # a shell comment
+        if ln.strip().startswith("```"):
+            if in_block:
+                yield heading, block
+                block = []
+            in_block = ln.strip() == "```sh"
+            continue
+        if in_block:
+            block.append(ln.rstrip("\n"))
+
+
+def _join_continuations(block: list[str]) -> list[str]:
+    cmds, cur = [], ""
+    for ln in block:
+        ln = ln.strip()
+        if not ln or ln.startswith("#"):
+            continue
+        cur += (" " if cur else "") + ln.rstrip("\\").strip()
+        if not ln.endswith("\\"):
+            cmds.append(cur)
+            cur = ""
+    if cur:
+        cmds.append(cur)
+    return cmds
+
+
+def check_flags(lines: list[str], help_cache: dict) -> list[str]:
+    errors = []
+    # 1a. the "flags at a glance" tables
+    module = None
+    for ln in lines:
+        label = TABLE_LABEL_RE.search(ln)
+        if label:
+            module = f"repro.launch.{label.group(1)}"
+            continue
+        if module and ln.startswith("|"):
+            cells = ln.split("|")
+            if len(cells) < 3 or set(cells[1].strip()) <= {"-", " "}:
+                continue
+            for flag in FLAG_RE.findall(cells[1]):
+                if not _flag_exists(flag, _help_text(module, help_cache)):
+                    errors.append(f"README documents `{flag}` for {module} "
+                                  f"but --help does not list it")
+        elif module and ln.strip() and not ln.startswith("|"):
+            module = None                      # table ended
+    # 1b. every flag used inside quickstart snippets
+    for heading, block in _sh_blocks(lines):
+        for cmd in _join_continuations(block):
+            m = MODULE_RE.search(cmd)
+            if not m or not m.group(1).startswith("repro.launch."):
+                continue
+            for flag in FLAG_RE.findall(cmd.split(m.group(1), 1)[1]):
+                if not _flag_exists(flag,
+                                    _help_text(m.group(1), help_cache)):
+                    errors.append(f"quickstart under {heading!r} uses "
+                                  f"`{flag}` but `{m.group(1)} --help` "
+                                  f"does not list it")
+    return errors
+
+
+def run_quickstarts(lines: list[str]) -> list[str]:
+    errors = []
+    with tempfile.TemporaryDirectory(prefix="docs_check_") as scratch:
+        for heading, block in _sh_blocks(lines):
+            if not heading.lower().startswith("quickstart"):
+                continue
+            for cmd in _join_continuations(block):
+                m = MODULE_RE.search(cmd)
+                if not m or "<" in cmd:
+                    continue
+                module = m.group(1)
+                if not module.startswith(RUNNABLE_PREFIXES):
+                    continue
+                argv = ([sys.executable, "-m"]
+                        + cmd.split("python -m ", 1)[1].split()
+                        + SMOKE_OVERRIDES.get(module, []))
+                if "socket" in argv:
+                    # generous wall-clock heartbeat: the docs gate checks
+                    # that commands RUN, not that death-detection timing
+                    # holds on a loaded CI box (tests + the slow job's
+                    # elastic e2e own that).  Socket runs only — the flag
+                    # perturbs sim resilience paths.
+                    argv += ["--heartbeat-timeout", "15"]
+                print(f"[docs_check] $ {' '.join(argv[2:])}", flush=True)
+                try:
+                    proc = subprocess.run(argv, capture_output=True,
+                                          text=True, cwd=scratch,
+                                          timeout=PER_COMMAND_TIMEOUT_S,
+                                          env=_env())
+                except subprocess.TimeoutExpired:
+                    errors.append(f"quickstart timed out: {cmd}")
+                    continue
+                if proc.returncode != 0:
+                    tail = (proc.stdout + proc.stderr)[-2000:]
+                    errors.append(f"quickstart failed (rc "
+                                  f"{proc.returncode}): {cmd}\n{tail}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--readme", default=os.path.join(REPO, "README.md"))
+    ap.add_argument("--skip-run", action="store_true",
+                    help="flag-existence check only (fast)")
+    args = ap.parse_args()
+    with open(args.readme) as f:
+        lines = f.readlines()
+
+    help_cache: dict[str, str] = {}
+    errors = check_flags(lines, help_cache)
+    n_flags = "OK" if not errors else f"{len(errors)} stale"
+    print(f"[docs_check] flag tables + snippets vs --help: {n_flags}")
+    if not args.skip_run:
+        errors += run_quickstarts(lines)
+    for e in errors:
+        print(f"[docs_check] FAIL: {e}", file=sys.stderr)
+    print(f"[docs_check] {'PASS' if not errors else 'FAIL'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
